@@ -1,0 +1,225 @@
+"""Benchmark harness — one function per paper table/figure, plus the
+beyond-paper LM-architecture analysis. Prints ``name,us_per_call,derived``
+CSV and writes machine-readable results to results/benchmarks/.
+
+  fig2  ResNet-152 heatmaps (961-config sweep)           [paper Fig. 2]
+  fig3  Pareto sets, exact + NSGA-II                     [paper Fig. 3]
+  fig4  per-model data-movement heatmaps (9 CNNs)        [paper Fig. 4]
+  fig5  robust configuration across the model mix        [paper Fig. 5]
+  fig6  equal-PE-count aspect-ratio study                [paper Fig. 6]
+  lm    the 10 assigned LM archs on the same DSE         [paper future work]
+  ablations  model-accounting options (act_reread, idle-PE, load hops)
+  kernels    Pallas kernel microbenches (interpret mode)
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "benchmarks")
+
+
+def _timeit(fn, n=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn()
+    dt = (time.perf_counter() - t0) / n
+    return out, dt * 1e6
+
+
+def _emit(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _save(name, obj):
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
+        json.dump(obj, f, indent=1, default=lambda o: np.asarray(o).tolist())
+
+
+def fig2_resnet_heatmap():
+    from repro.core import get_workloads, grid_sweep
+    wl = get_workloads("resnet152")
+    s, us = _timeit(lambda: grid_sweep(wl))
+    be = np.unravel_index(np.argmin(s.energy), s.energy.shape)
+    bu = np.unravel_index(np.argmax(s.utilization), s.utilization.shape)
+    derived = (f"minE=({s.hs[be[0]]}x{s.ws[be[1]]})"
+               f";maxUtil=({s.hs[bu[0]]}x{s.ws[bu[1]]})"
+               f";util128x128={s.utilization[14][14]:.3f}")
+    _emit("fig2_resnet152_961cfg_sweep", us, derived)
+    _save("fig2", {"hs": s.hs, "ws": s.ws, "energy": s.energy,
+                   "cycles": s.cycles, "utilization": s.utilization})
+    return s
+
+
+def fig3_pareto():
+    from repro.core import get_workloads, grid_sweep, pareto_grid
+    from repro.core.dse import pareto_nsga2
+    wl = get_workloads("resnet152")
+    s = grid_sweep(wl)
+    (cfgs, F, mask), us = _timeit(lambda: pareto_grid(s))
+    _emit("fig3_pareto_exact_energy_cycles", us,
+          f"frontier={int(mask.sum())};best_cfgs={cfgs[:3].tolist()}")
+    (cfgs_u, F_u, mask_u), us2 = _timeit(
+        lambda: pareto_grid(s, objectives=("utilization", "cycles")))
+    _emit("fig3_pareto_exact_util_cycles", us2,
+          f"frontier={int(mask_u.sum())}")
+    (P, FN), us3 = _timeit(lambda: pareto_nsga2(wl, pop=48, gens=20), n=1)
+    _emit("fig3_pareto_nsga2", us3, f"frontier={len(P)}")
+    _save("fig3", {"exact_cfgs": cfgs, "exact_F": F,
+                   "nsga2_cfgs": P, "nsga2_F": FN})
+
+
+def fig4_model_heatmaps():
+    from repro.core import ZOO, grid_sweep
+    out = {}
+    for name in ZOO:
+        s, us = _timeit(lambda n=name: grid_sweep(ZOO[n]()), n=1)
+        be = np.unravel_index(np.argmin(s.energy), s.energy.shape)
+        spread = float((s.energy.max() - s.energy.min()) / s.energy.min())
+        out[name] = {"minE_h": int(s.hs[be[0]]), "minE_w": int(s.ws[be[1]]),
+                     "spread": spread, "energy": s.energy}
+        _emit(f"fig4_{name}", us,
+              f"minE=({s.hs[be[0]]}x{s.ws[be[1]]});spread={spread:.3f}")
+    _save("fig4", out)
+
+
+def fig5_robust():
+    from repro.core import ZOO, robust_config
+    mw = {n: ZOO[n]() for n in ZOO}
+    (cfgs, F, mask), us = _timeit(lambda: robust_config(mw), n=1)
+    sel, Fm = cfgs[mask], F[mask]
+    tall = float((sel[:, 0] > sel[:, 1]).mean())
+    lowE = sel[np.argmin(Fm[:, 0])].tolist()
+    lowC = sel[np.argmin(Fm[:, 1])].tolist()
+    _emit("fig5_robust_config", us,
+          f"frontier={int(mask.sum())};tall_frac={tall:.2f}"
+          f";minE={lowE};minCycles={lowC}")
+    _save("fig5", {"cfgs": sel, "F": Fm, "tall_frac": tall})
+
+
+def fig6_equal_pe():
+    from repro.core import ZOO, equal_pe_sweep
+    mw = {n: ZOO[n]() for n in ZOO}
+    eq, us = _timeit(lambda: equal_pe_sweep(mw, total_pes=16384,
+                                            idle_pe_energy=0.05), n=1)
+    worst = {n: int(np.argmax(v["energy"])) for n, v in eq.items()}
+    extreme_bad = sum(1 for n, i in worst.items()
+                      if i in (0, len(eq[n]["h"]) - 1))
+    _emit("fig6_equal_pe_aspect", us,
+          f"models_with_extreme_worst={extreme_bad}/{len(eq)}")
+    _save("fig6", eq)
+
+
+def lm_architectures():
+    from repro.configs.base import SHAPES, cells_for, get_config, list_archs
+    from repro.core import extract_workloads, grid_sweep
+    out = {}
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape_name in ("train_4k", "decode_32k"):
+            if shape_name not in cells_for(arch):
+                continue
+            wl = extract_workloads(cfg, SHAPES[shape_name])
+            s, us = _timeit(lambda w=wl: grid_sweep(w), n=1)
+            be = np.unravel_index(np.argmin(s.energy), s.energy.shape)
+            bu = np.unravel_index(np.argmax(s.utilization),
+                                  s.utilization.shape)
+            key = f"{arch}/{shape_name}"
+            out[key] = {
+                "minE": [int(s.hs[be[0]]), int(s.ws[be[1]])],
+                "maxUtil": [int(s.hs[bu[0]]), int(s.ws[bu[1]])],
+                "util_256x256": float(s.utilization[-1, -1]),
+                "util_best": float(s.utilization.max()),
+            }
+            _emit(f"lm_{arch}_{shape_name}", us,
+                  f"minE=({s.hs[be[0]]}x{s.ws[be[1]]})"
+                  f";maxUtil=({s.hs[bu[0]]}x{s.ws[bu[1]]})"
+                  f";util256={s.utilization[-1, -1]:.3f}")
+    _save("lm_archs", out)
+
+
+def ablations():
+    from repro.core import get_workloads, grid_sweep
+    wl = get_workloads("resnet152")
+    for name, kw in (
+            ("eq1_strict", {}),
+            ("act_reread", {"act_reread": True}),
+            ("idle_pe", {"idle_pe_energy": 0.2}),
+            ("load_hops", {"count_weight_load_hops": True})):
+        s, us = _timeit(lambda k=kw: grid_sweep(wl, **k), n=1)
+        be = np.unravel_index(np.argmin(s.energy), s.energy.shape)
+        _emit(f"ablation_{name}", us,
+              f"minE=({s.hs[be[0]]}x{s.ws[be[1]]})")
+
+
+def future_work():
+    """Paper §6 future work: output-stationary variant + multi-array."""
+    from repro.core import get_workloads
+    from repro.core.dataflows import analyze_gemm_multi, analyze_gemm_os
+    from repro.core.systolic import analyze_network, analyze_gemm
+    import time as _t
+    wl = get_workloads("resnet152")
+    t0 = _t.perf_counter()
+    ws = analyze_network(wl, 128, 128)
+    os_cyc = os_en = 0.0
+    for (M, K, N, g, rep) in wl:
+        m = analyze_gemm_os(M, K, N, 128, 128, groups=g * rep)
+        os_cyc += float(m.cycles)
+        os_en += float(m.energy)
+    us = (_t.perf_counter() - t0) * 1e6
+    _emit("future_os_vs_ws_resnet152_128x128", us,
+          f"cycles_os/ws={os_cyc/float(ws.cycles):.3f}"
+          f";energy_os/ws={os_en/float(ws.energy):.3f}")
+    one = analyze_gemm(12544, 1152, 2048, 128, 128)
+    for P in (2, 4, 8):
+        m = analyze_gemm_multi(12544, 1152, 2048, 128, 128, n_arrays=P)
+        _emit(f"future_multi_array_P{P}", 0.0,
+              f"speedup={float(one.cycles)/float(m.cycles):.2f}"
+              f";energy_x={float(m.energy)/float(one.energy):.2f}")
+
+
+def kernels():
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.core.cnn_zoo import get_workloads
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    for sched in ("ws", "os"):
+        _, us = _timeit(
+            lambda s=sched: ops.matmul(a, w, schedule=s,
+                                       interpret=True).block_until_ready(),
+            n=1)
+        _emit(f"kernel_ws_matmul_{sched}_interpret", us, "256x256x256")
+    layers = np.asarray(get_workloads("alexnet"), np.float32)
+    cfgs = np.stack(np.meshgrid(np.arange(16, 144, 8), np.arange(16, 144, 8),
+                                indexing="ij"), -1).reshape(-1, 2)[:256]
+    _, us = _timeit(
+        lambda: ops.sweep(jnp.asarray(cfgs, jnp.float32),
+                          jnp.asarray(layers),
+                          interpret=True).block_until_ready(), n=1)
+    _emit("kernel_dse_eval_interpret", us,
+          f"{len(cfgs)}cfgs_x_{len(layers)}layers")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    fig2_resnet_heatmap()
+    fig3_pareto()
+    fig4_model_heatmaps()
+    fig5_robust()
+    fig6_equal_pe()
+    lm_architectures()
+    ablations()
+    future_work()
+    kernels()
+
+
+if __name__ == "__main__":
+    main()

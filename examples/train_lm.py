@@ -1,0 +1,53 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+the synthetic structured corpus, with checkpoint/restart and straggler
+monitoring — the full production loop at laptop scale.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 150]
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import ShapeConfig, get_config, reduced
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.launch.steps import init_train_state, make_train_step
+from repro.models.model_zoo import build_model
+from repro.training import optimizer as OPT
+from repro.training.train_loop import LoopConfig, run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M-param same-family config (yi/llama-style)
+    cfg = reduced(get_config(args.arch),
+                  num_layers=8, d_model=512, num_heads=8, num_kv_heads=4,
+                  d_ff=1536, vocab_size=32000, head_dim=64, attn_chunk=128)
+    bundle = build_model(cfg)
+    print(f"arch={cfg.name}  params={bundle.param_count()/1e6:.1f}M")
+
+    ocfg = OPT.OptConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    state = init_train_state(bundle, ocfg, jax.random.key(0))
+    step = jax.jit(make_train_step(bundle, ocfg, None), donate_argnums=(0,))
+
+    shape = ShapeConfig("train", seq_len=256, global_batch=4, kind="train")
+    data = TokenPipeline(DataConfig(seed=0), cfg, shape)
+    lcfg = LoopConfig(total_steps=args.steps, ckpt_every=50,
+                      ckpt_dir=args.ckpt)
+    state, hist = run(step, state, data, lcfg)
+    ls = hist["loss"]
+    k = max(1, len(ls) // 10)
+    print("loss:", " ".join(f"{sum(ls[i:i+k])/len(ls[i:i+k]):.3f}"
+                            for i in range(0, len(ls), k)))
+    print(f"final loss {ls[-1]:.3f} (unigram entropy of the corpus ~"
+          f"{9.6:.1f} nats; structure should pull well below)")
+    print("straggler events:", hist["straggler_events"])
+
+
+if __name__ == "__main__":
+    main()

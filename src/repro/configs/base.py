@@ -1,0 +1,216 @@
+"""Architecture & shape configuration system.
+
+`ArchConfig` is the exact published configuration (no mesh knowledge).
+`resolve_dims(cfg, tp)` derives mesh-padded dimensions (head/vocab/expert
+padding) used to build shardable parameters; with tp=1 it is the identity,
+so smoke tests exercise the exact published dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.sharding.logical import ceil_mult
+
+DType = str  # "float32" | "bfloat16"
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1              # MoE MLP on layers where (i % moe_every == moe_offset)
+    moe_offset: int = 0
+    moe_cf: float = 1.25            # expert capacity factor (dispatch drops beyond)
+    # --- attention flavour ---
+    sliding_window: Optional[int] = None
+    qk_norm: bool = False
+    mlp_activation: str = "silu"    # silu | squared_relu | gelu
+    rope_theta: float = 1e4
+    # --- hybrid (jamba) ---
+    attn_every: int = 1             # attention on layers where (i % attn_every == attn_offset)
+    attn_offset: int = 0
+    # --- ssm (mamba) ---
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    # --- xlstm ---
+    xlstm_chunk: int = 128
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0            # stub modality frames
+    # --- vlm ---
+    num_patches: int = 0
+    # --- numerics ---
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    param_dtype: DType = "float32"
+    compute_dtype: DType = "bfloat16"
+    attn_chunk: int = 512           # q-chunk for blocked attention
+    scan_chunk: int = 2048          # time-chunk for ssm scans
+    kv_quant: bool = False          # int8 KV cache (decode memory term /2)
+    moe_a2a_quant: bool = False     # int8 MoE dispatch (a2a bytes ~/2)
+    remat_policy: str = "none"      # none (recompute all) | dots (save GEMMs)
+    # how many cells to note as skipped (documentation only)
+    notes: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def is_moe_layer(self, i: int) -> bool:
+        return self.num_experts > 0 and (i % self.moe_every == self.moe_offset)
+
+    def is_attn_layer(self, i: int) -> bool:
+        return i % self.attn_every == self.attn_offset
+
+
+@dataclasses.dataclass(frozen=True)
+class Dims:
+    """Mesh-resolved (padded) dimensions. tp=1 => identical to the config."""
+    cfg: ArchConfig
+    tp: int
+    q_heads: int            # padded
+    kv_heads: int           # padded
+    q_group: int            # q_heads // kv_heads
+    head_dim: int
+    vocab: int              # padded
+    d_ff: int               # padded
+    experts: int
+    moe_mode: str           # "ep" | "tp" | "dense" | "none"
+    d_inner: int            # mamba/xlstm inner dim (padded)
+
+    @property
+    def real_q_heads(self) -> int:
+        return self.cfg.num_heads
+
+
+def resolve_dims(cfg: ArchConfig, tp: int = 1, moe_mode: Optional[str] = None) -> Dims:
+    hd = cfg.resolved_head_dim
+    kvh = ceil_mult(cfg.num_kv_heads, tp)
+    # q heads must be a multiple of kv heads AND of tp
+    qh = ceil_mult(cfg.num_heads, kvh)
+    qh = ceil_mult(qh, tp)
+    if qh % kvh:
+        qh = ceil_mult(qh, kvh * tp // _gcd(kvh, tp))
+    vocab = ceil_mult(cfg.vocab_size, max(256, tp))
+    d_ff = ceil_mult(cfg.d_ff, tp) if cfg.d_ff else 0
+    d_inner = ceil_mult(cfg.mamba_expand * cfg.d_model, tp)
+    experts = cfg.num_experts
+    if experts == 0:
+        mode = "none"
+    elif moe_mode is not None:
+        mode = moe_mode
+    elif experts % tp == 0:
+        mode = "ep"          # expert parallelism via all-to-all / gather
+    elif tp % experts == 0:
+        mode = "ep2"         # hierarchical: EP x F-split over the model axis
+    else:
+        mode = "tp"          # shard d_ff of every expert (megatron-style)
+    return Dims(cfg=cfg, tp=tp, q_heads=qh, kv_heads=kvh, q_group=qh // kvh,
+                head_dim=hd, vocab=vocab, d_ff=d_ff, experts=experts,
+                moe_mode=mode, d_inner=d_inner)
+
+
+def _gcd(a: int, b: int) -> int:
+    while b:
+        a, b = b, a % b
+    return a
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str               # train | prefill | decode
+
+    @property
+    def is_training(self) -> bool:
+        return self.kind == "train"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# Archs with *pure full attention* skip long_500k (needs sub-quadratic attn).
+FULL_ATTENTION_ARCHS = {
+    "nemotron-4-15b", "yi-9b", "qwen3-14b", "whisper-small", "internvl2-1b",
+}
+
+
+def cells_for(arch_name: str) -> Tuple[str, ...]:
+    out = []
+    for s in SHAPES:
+        if s == "long_500k" and arch_name in FULL_ATTENTION_ARCHS:
+            continue
+        out.append(s)
+    return tuple(out)
+
+
+_REGISTRY: dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> Tuple[str, ...]:
+    _ensure_loaded()
+    return tuple(sorted(_REGISTRY))
+
+
+def _ensure_loaded() -> None:
+    if _REGISTRY:
+        return
+    # import for side effect of register()
+    from repro.configs import (  # noqa: F401
+        olmoe_1b_7b, mixtral_8x22b, nemotron_4_15b, yi_9b, qwen3_14b,
+        h2o_danube_3_4b, whisper_small, xlstm_125m, jamba_1_5_large_398b,
+        internvl2_1b)
+
+
+def reduced(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    small = dict(
+        num_layers=min(cfg.num_layers, 4 if cfg.family != "hybrid" else 8),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads < cfg.num_heads else 4,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab_size=512,
+        head_dim=32,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        encoder_seq=16 if cfg.encoder_seq else 0,
+        num_patches=8 if cfg.num_patches else 0,
+        num_experts=min(cfg.num_experts, 8) if cfg.num_experts else 0,
+        experts_per_token=min(cfg.experts_per_token, 2) if cfg.num_experts else 0,
+        sliding_window=16 if cfg.sliding_window else None,
+        attn_chunk=16,
+        scan_chunk=16,
+        xlstm_chunk=16,
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **small)

@@ -1,0 +1,16 @@
+"""H2O-Danube3-4B [arXiv:2401.16818 family] — llama+mistral mix, SWA."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="h2o-danube-3-4b",
+    family="dense",
+    num_layers=24,
+    d_model=3840,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=10240,
+    vocab_size=32000,
+    head_dim=120,            # 3840/32 — not MXU-perfect; kept faithful
+    sliding_window=4096,
+    rope_theta=10000.0,
+))

@@ -1,0 +1,17 @@
+"""InternVL2-1B [arXiv:2404.16821; hf] — InternViT (STUB patch embeddings)
++ InternLM2 LM backbone. Patch embeddings are prepended to the text tokens."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="internvl2-1b",
+    family="vlm",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151655,
+    num_patches=256,
+    rope_theta=1e6,
+    notes="ViT frontend stubbed: input_specs provides patch embeddings",
+))

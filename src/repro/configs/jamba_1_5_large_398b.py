@@ -1,0 +1,26 @@
+"""Jamba-1.5-Large (398B) [arXiv:2403.19887; hf] — Mamba+attention 1:7
+interleave (attention at index 4 of each 8-layer block), 16-expert top-2 MoE
+on every other layer."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    num_experts=16,
+    experts_per_token=2,
+    moe_every=2,
+    moe_offset=1,
+    attn_every=8,
+    attn_offset=4,
+    mamba_d_state=16,
+    mamba_d_conv=4,
+    mamba_expand=2,
+    rope_theta=10000.0,
+    scan_chunk=512,          # mamba chunk: bounds (B,c,din,ds) f32 transients
+))

@@ -1,0 +1,18 @@
+"""OLMoE-1B-7B [arXiv:2409.02060; hf] — 64-expert top-8 MoE."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1024,
+    vocab_size=50304,
+    num_experts=64,
+    experts_per_token=8,
+    moe_every=1,
+    rope_theta=10000.0,
+    qk_norm=True,            # OLMoE uses QK-norm
+))

@@ -1,0 +1,17 @@
+"""xLSTM-125M [arXiv:2405.04517] — alternating mLSTM / sLSTM blocks.
+
+d_ff=0: blocks carry their own up/down projections (projection factor 2).
+Recurrent state is O(1) in sequence length => long_500k runs.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+))

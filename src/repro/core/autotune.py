@@ -1,0 +1,77 @@
+"""CAMUY-guided kernel autotuning (beyond-paper).
+
+The paper models hardware given a workload; here we close the loop: the
+same traffic accounting picks the Pallas ws_matmul BlockSpec (block_m,
+block_k, block_n) and schedule under the VMEM budget.
+
+Traffic model (bytes moved HBM<->VMEM per full GEMM), by schedule:
+  os (output-stationary, grid m,n,k):
+      A: Tn * M*K * s_a     (A re-fetched per N block-column)
+      W: Tm * K*N * s_w     (W re-fetched per M block-row)
+      O: M*N * s_o          (written once from the VMEM accumulator)
+  ws (weight-stationary, grid n,k,m):
+      A: Tn * M*K * s_a
+      W: K*N * s_w          (each weight block resident exactly once)
+      O: (2*Tk - 1) * M*N * s_o   (partials revisit HBM: the Accumulator-
+                                   Array traffic of the paper's machine)
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Tuple
+
+VMEM_BYTES = 16 * 2 ** 20      # v5e VMEM per core
+CANDS = (128, 256, 512, 1024)
+
+
+@dataclasses.dataclass(frozen=True)
+class Choice:
+    block_m: int
+    block_k: int
+    block_n: int
+    schedule: str
+    traffic_bytes: float
+    vmem_bytes: int
+
+
+def _ceil_div(a, b):
+    return -(-a // b)
+
+
+def traffic(M, K, N, bm, bk, bn, schedule, s_a=2, s_w=2, s_o=4):
+    Tm, Tk, Tn = _ceil_div(M, bm), _ceil_div(K, bk), _ceil_div(N, bn)
+    if schedule == "os":
+        return Tn * M * K * s_a + Tm * K * N * s_w + M * N * s_o
+    return Tn * M * K * s_a + K * N * s_w + (2 * Tk - 1) * M * N * s_o
+
+
+def vmem_usage(bm, bk, bn, schedule, s_a=2, s_w=2):
+    base = bm * bk * s_a + bk * bn * s_w
+    acc = bm * bn * 4
+    # double buffering on the streamed inputs
+    return 2 * base + acc
+
+
+def pick(M: int, K: int, N: int, *, vmem_budget: int = VMEM_BYTES,
+         s_a=2, s_w=2, s_o=4) -> Choice:
+    """Best (blocks, schedule) minimizing modeled HBM traffic."""
+    best = None
+    for bm, bk, bn in itertools.product(CANDS, CANDS, CANDS):
+        if bm > M or bk > K or bn > N:
+            continue
+        if M % bm or K % bk or N % bn:
+            continue
+        v = vmem_usage(bm, bk, bn, "any", s_a, s_w)
+        if v > vmem_budget:
+            continue
+        for sched in ("ws", "os"):
+            t = traffic(M, K, N, bm, bk, bn, sched, s_a, s_w, s_o)
+            c = Choice(bm, bk, bn, sched, float(t), int(v))
+            if best is None or c.traffic_bytes < best.traffic_bytes:
+                best = c
+    if best is None:   # smallest legal fallback
+        bm = min(128, M)
+        best = Choice(bm, min(128, K), min(128, N), "os",
+                      float("nan"), 0)
+    return best

@@ -1,0 +1,137 @@
+"""Design-space exploration driver (the paper's §4/§5 experiments).
+
+* grid_sweep: all (h, w) in [16..256 step 8]^2 (961 configs) for a network's
+  workloads — vectorized in one shot over the whole grid (Fig. 2/4 heatmaps).
+* pareto_grid / pareto_nsga2: frontier of (cycles vs energy) and
+  (cycles vs -utilization) (Fig. 3).
+* robust_config: averaged min-max-normalized (energy, cycles) across a model
+  mix, Pareto over configurations (Fig. 5).
+* equal_pe_sweep: extreme aspect ratios at constant PE count (Fig. 6,
+  Samajdar et al. comparison).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core import systolic
+from repro.core.pareto import nsga2, pareto_mask
+from repro.core.workloads import Workload
+
+GRID_LO, GRID_HI, GRID_STEP = 16, 256, 8
+
+
+def grid_axes():
+    return np.arange(GRID_LO, GRID_HI + 1, GRID_STEP)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    hs: np.ndarray          # (G,)
+    ws: np.ndarray          # (G,)
+    H: np.ndarray           # (G, G) grid (height on axis 0)
+    W: np.ndarray
+    cycles: np.ndarray      # (G, G)
+    energy: np.ndarray
+    utilization: np.ndarray
+    m_ub: np.ndarray
+    m_inter_pe: np.ndarray
+    m_aa: np.ndarray
+
+    def flat(self):
+        return {k: getattr(self, k).reshape(-1)
+                for k in ("cycles", "energy", "utilization")}
+
+
+def grid_sweep(workloads: Sequence[Workload], hs=None, ws=None,
+               **model_kw) -> SweepResult:
+    hs = grid_axes() if hs is None else np.asarray(hs)
+    ws = grid_axes() if ws is None else np.asarray(ws)
+    H, W = np.meshgrid(hs, ws, indexing="ij")
+    m = systolic.analyze_network(list(workloads), H.astype(np.float64),
+                                 W.astype(np.float64), **model_kw)
+    return SweepResult(hs=hs, ws=ws, H=H, W=W, cycles=np.asarray(m.cycles),
+                       energy=np.asarray(m.energy),
+                       utilization=np.asarray(m.utilization),
+                       m_ub=np.asarray(m.m_ub),
+                       m_inter_pe=np.asarray(m.m_inter_pe),
+                       m_aa=np.asarray(m.m_aa))
+
+
+def pareto_grid(sweep: SweepResult, objectives=("energy", "cycles")):
+    """Exact Pareto set over the sweep grid. Returns (configs, F, mask)."""
+    cols = []
+    for o in objectives:
+        v = getattr(sweep, o).reshape(-1).astype(np.float64)
+        if o == "utilization":
+            v = -v
+        cols.append(v)
+    F = np.stack(cols, axis=1)
+    mask = pareto_mask(F)
+    configs = np.stack([sweep.H.reshape(-1), sweep.W.reshape(-1)], axis=1)
+    return configs[mask], F[mask], mask
+
+
+def pareto_nsga2(workloads, objectives=("energy", "cycles"), **kw):
+    def eval_fn(pop):
+        h = pop[:, 0].astype(np.float64)
+        w = pop[:, 1].astype(np.float64)
+        m = systolic.analyze_network(list(workloads), h, w)
+        cols = []
+        for o in objectives:
+            v = {"energy": m.energy, "cycles": m.cycles,
+                 "utilization": -m.utilization}[o]
+            cols.append(np.asarray(v, np.float64))
+        return np.stack(cols, axis=1)
+    return nsga2(eval_fn, ((GRID_LO, GRID_HI), (GRID_LO, GRID_HI)), **kw)
+
+
+def _normalize(x):
+    lo, hi = x.min(), x.max()
+    return (x - lo) / (hi - lo) if hi > lo else np.zeros_like(x)
+
+
+def robust_config(model_workloads: Dict[str, Sequence[Workload]], **model_kw):
+    """Fig. 5: average of min-max-normalized (energy, cycles) per model,
+    then the Pareto set over the grid."""
+    hs = grid_axes()
+    H, W = np.meshgrid(hs, hs, indexing="ij")
+    e_acc = np.zeros_like(H, np.float64)
+    c_acc = np.zeros_like(H, np.float64)
+    for name, wls in model_workloads.items():
+        s = grid_sweep(wls, **model_kw)
+        e_acc += _normalize(s.energy)
+        c_acc += _normalize(s.cycles)
+    e_acc /= len(model_workloads)
+    c_acc /= len(model_workloads)
+    F = np.stack([e_acc.reshape(-1), c_acc.reshape(-1)], axis=1)
+    mask = pareto_mask(F)
+    configs = np.stack([H.reshape(-1), W.reshape(-1)], axis=1)
+    return configs, F, mask
+
+
+def equal_pe_sweep(model_workloads: Dict[str, Sequence[Workload]],
+                   total_pes: int = 16384, **model_kw):
+    """Fig. 6: aspect-ratio sweep at constant PE count (Samajdar-style):
+    h x w with h*w = total_pes, h in powers of two."""
+    hs = []
+    h = 2
+    while h <= total_pes // 2:
+        if total_pes % h == 0:
+            hs.append(h)
+        h *= 2
+    hs = np.asarray(hs)
+    ws = total_pes // hs
+    out = {}
+    for name, wls in model_workloads.items():
+        m = systolic.analyze_network(list(wls), hs.astype(np.float64),
+                                     ws.astype(np.float64), **model_kw)
+        out[name] = {
+            "h": hs, "w": ws,
+            "energy": _normalize(np.asarray(m.energy)),
+            "cycles": _normalize(np.asarray(m.cycles)),
+            "utilization": np.asarray(m.utilization),
+        }
+    return out

@@ -1,0 +1,130 @@
+"""Beyond-paper: lower the 10 assigned LM architectures to systolic GEMM
+workloads (the paper's stated future work — "the impact of emerging and
+heterogeneous neural architectures, such as transformers, on systolic
+arrays").
+
+Lowering conventions (documented per DESIGN.md §6):
+  * token GEMMs: M = tokens-in-flight, K/N from the projection;
+  * attention score/value GEMMs are batched per (batch x kv_head): batches
+    serialize on a single array — expressed through the `groups` field,
+    exactly like the paper's group convolutions;
+  * MoE experts: one GEMM per *active* expert slot => groups = num_experts,
+    with per-expert M scaled to the expected routed token count;
+  * SSM scans / element-wise recurrences carry no GEMM (noted as the
+    attention-free case in DESIGN.md §5) — only their projections appear.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs.base import ArchConfig, ShapeConfig, resolve_dims
+from repro.core.workloads import Workload
+
+
+def _attn_workloads(cfg: ArchConfig, B: int, Sq: int, Skv: int,
+                    layers: int) -> List[Workload]:
+    d = resolve_dims(cfg, 1)
+    hd, qh, kvh = d.head_dim, cfg.num_heads, cfg.num_kv_heads
+    T = B * Sq
+    out = [
+        (T, cfg.d_model, qh * hd, 1, layers),            # Wq
+        (T, cfg.d_model, kvh * hd, 1, 2 * layers),       # Wk, Wv
+        (T, cfg.d_model, cfg.d_model, 1, layers),        # Wo (qh*hd==d usually)
+    ]
+    win = cfg.sliding_window
+    eff_kv = min(Skv, win) if win else Skv
+    # scores: per (batch x q-head): (Sq, hd) @ (hd, eff_kv)
+    out.append((Sq, hd, eff_kv, B * qh, layers))
+    # attn @ V
+    out.append((Sq, eff_kv, hd, B * qh, layers))
+    return out
+
+
+def _mlp_workloads(cfg: ArchConfig, T: int, layers: int) -> List[Workload]:
+    if cfg.d_ff == 0 or layers == 0:
+        return []
+    mats = 3 if cfg.mlp_activation == "silu" else 2
+    return [(T, cfg.d_model, cfg.d_ff, 1, (mats - 1) * layers),
+            (T, cfg.d_ff, cfg.d_model, 1, layers)]
+
+
+def _moe_workloads(cfg: ArchConfig, T: int, layers: int) -> List[Workload]:
+    if not cfg.num_experts or layers == 0:
+        return []
+    t_per_e = max(1, T * cfg.experts_per_token // cfg.num_experts)
+    return [
+        (T, cfg.d_model, cfg.num_experts, 1, layers),               # router
+        (t_per_e, cfg.d_model, cfg.d_ff, cfg.num_experts, 2 * layers),
+        (t_per_e, cfg.d_ff, cfg.d_model, cfg.num_experts, layers),
+    ]
+
+
+def _mamba_workloads(cfg: ArchConfig, T: int, layers: int) -> List[Workload]:
+    din = cfg.mamba_expand * cfg.d_model
+    dr = max(1, (cfg.d_model + 15) // 16)
+    ds = cfg.mamba_d_state
+    return [
+        (T, cfg.d_model, 2 * din, 1, layers),       # in_proj
+        (T, din, dr + 2 * ds, 1, layers),           # x_proj
+        (T, dr, din, 1, layers),                    # dt_proj
+        (T, din, cfg.d_model, 1, layers),           # out_proj
+    ]
+
+
+def _xlstm_workloads(cfg: ArchConfig, T: int) -> List[Workload]:
+    din = 2 * cfg.d_model
+    n_m = cfg.num_layers // 2
+    n_s = cfg.num_layers - n_m
+    d = cfg.d_model
+    out = [
+        (T, d, 2 * din, 1, n_m),                    # mLSTM up
+        (T, din, 3 * din + 2 * cfg.num_heads, 1, n_m),  # q,k,v + gates
+        (T, din, d, 1, n_m),                        # down
+        (T, d, 4 * d, 1, n_s),                      # sLSTM input proj
+        (T, d, d, 1, n_s),                          # sLSTM out proj
+    ]
+    return out
+
+
+def extract_workloads(cfg: ArchConfig, shape: ShapeConfig) -> List[Workload]:
+    B = shape.global_batch
+    if shape.kind == "decode":
+        Sq, Skv, T = 1, shape.seq_len, B
+    else:
+        Sq = Skv = shape.seq_len
+        T = B * Sq
+
+    n_attn = sum(1 for i in range(cfg.num_layers) if cfg.is_attn_layer(i))
+    n_moe = sum(1 for i in range(cfg.num_layers) if cfg.is_moe_layer(i))
+    n_mlp_layers = cfg.num_layers - n_moe
+    wl: List[Workload] = []
+
+    if cfg.family == "ssm":
+        wl += _xlstm_workloads(cfg, T)
+    else:
+        wl += _attn_workloads(cfg, B, Sq, Skv, n_attn)
+        if cfg.family == "hybrid":
+            wl += _mamba_workloads(cfg, T, cfg.num_layers - n_attn)
+        wl += _mlp_workloads(cfg, T, n_mlp_layers)
+        wl += _moe_workloads(cfg, T, n_moe)
+
+    if cfg.family == "audio":   # encoder (bidirectional) + cross attention
+        Te = B * cfg.encoder_seq
+        wl += _attn_workloads(cfg, B, cfg.encoder_seq, cfg.encoder_seq,
+                              cfg.encoder_layers)
+        wl += _mlp_workloads(cfg, Te, cfg.encoder_layers)
+        # cross attention: q from decoder tokens, kv over encoder frames
+        d = resolve_dims(cfg, 1)
+        wl.append((Sq, d.head_dim, cfg.encoder_seq, B * cfg.num_heads,
+                   cfg.num_layers))
+        wl.append((Sq, cfg.encoder_seq, d.head_dim, B * cfg.num_heads,
+                   cfg.num_layers))
+        wl.append((T, cfg.d_model, cfg.d_model, 1, 2 * cfg.num_layers))
+
+    # unembedding (decode/prefill emit one position per sequence)
+    t_out = B if shape.kind in ("decode", "prefill") else T
+    wl.append((t_out, cfg.d_model, cfg.vocab_size, 1, 1))
+    # training: backward pass ~ 2x forward GEMM volume (dgrad+wgrad)
+    if shape.kind == "train":
+        wl = [(m, k, n, g, 3 * r) for (m, k, n, g, r) in wl]
+    return wl

@@ -1,0 +1,103 @@
+"""Multi-objective optimization: exact Pareto sets + NSGA-II (paper Fig. 3
+uses NSGA-II [Deb et al. 2002]; the grid is small enough that the exact
+frontier is also computable, which doubles as the NSGA-II test oracle)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def pareto_mask(objectives: np.ndarray) -> np.ndarray:
+    """objectives: (n, k), all MINIMIZED. Returns bool mask of the frontier."""
+    n = objectives.shape[0]
+    mask = np.ones(n, bool)
+    for i in range(n):
+        if not mask[i]:
+            continue
+        dominates = (np.all(objectives <= objectives[i], axis=1)
+                     & np.any(objectives < objectives[i], axis=1))
+        if np.any(dominates & mask):
+            mask[i] = False
+    return mask
+
+
+def fast_non_dominated_sort(F: np.ndarray) -> np.ndarray:
+    """NSGA-II front ranks (0 = best). F: (n, k) minimized."""
+    n = F.shape[0]
+    dom_less = ((F[:, None, :] <= F[None, :, :]).all(-1)
+                & (F[:, None, :] < F[None, :, :]).any(-1))   # i dominates j
+    n_dom = dom_less.sum(axis=0)                             # dominated-by count
+    ranks = np.full(n, -1)
+    front = np.where(n_dom == 0)[0]
+    r = 0
+    while front.size:
+        ranks[front] = r
+        n_dom = n_dom - dom_less[front].sum(axis=0)
+        n_dom[ranks >= 0] = np.iinfo(np.int32).max
+        front = np.where(n_dom == 0)[0]
+        r += 1
+    return ranks
+
+
+def crowding_distance(F: np.ndarray) -> np.ndarray:
+    n, k = F.shape
+    d = np.zeros(n)
+    for j in range(k):
+        order = np.argsort(F[:, j])
+        fmin, fmax = F[order[0], j], F[order[-1], j]
+        d[order[0]] = d[order[-1]] = np.inf
+        if fmax > fmin and n > 2:
+            d[order[1:-1]] += (F[order[2:], j] - F[order[:-2], j]) / (fmax - fmin)
+    return d
+
+
+def nsga2(eval_fn, bounds, *, pop: int = 64, gens: int = 40, seed: int = 0,
+          quantum: int = 8):
+    """NSGA-II over integer (h, w) genomes.
+
+    eval_fn: (pop, 2) int array -> (pop, k) objective array (minimized).
+    bounds: ((h_lo, h_hi), (w_lo, w_hi)); genes snap to `quantum` steps
+    (the paper sweeps 16..256 in steps of 8)."""
+    rng = np.random.default_rng(seed)
+    (hl, hh), (wl, wh) = bounds
+
+    def snap(x):
+        x = np.round(x / quantum) * quantum
+        return np.clip(x, [hl, wl], [hh, wh]).astype(int)
+
+    P = snap(rng.uniform([hl, wl], [hh, wh], size=(pop, 2)))
+    FP = eval_fn(P)
+    for _ in range(gens):
+        ranks = fast_non_dominated_sort(FP)
+        crowd = crowding_distance(FP)
+        # binary tournament
+        idx = rng.integers(0, pop, size=(pop, 2))
+        better = np.where(
+            (ranks[idx[:, 0]] < ranks[idx[:, 1]])
+            | ((ranks[idx[:, 0]] == ranks[idx[:, 1]])
+               & (crowd[idx[:, 0]] > crowd[idx[:, 1]])),
+            idx[:, 0], idx[:, 1])
+        parents = P[better]
+        # SBX-lite crossover + mutation
+        partners = parents[rng.permutation(pop)]
+        alpha = rng.uniform(size=(pop, 1))
+        children = alpha * parents + (1 - alpha) * partners
+        mut = rng.normal(0, quantum * 2, size=children.shape)
+        do_mut = rng.uniform(size=children.shape) < 0.2
+        children = snap(children + do_mut * mut)
+        FC = eval_fn(children)
+        # elitist environmental selection
+        allP = np.concatenate([P, children])
+        allF = np.concatenate([FP, FC])
+        _, uniq = np.unique(allP, axis=0, return_index=True)
+        allP, allF = allP[uniq], allF[uniq]
+        ranks = fast_non_dominated_sort(allF)
+        crowd = crowding_distance(allF)
+        order = np.lexsort((-crowd, ranks))[:pop]
+        P, FP = allP[order], allF[order]
+        if P.shape[0] < pop:   # refill after dedup
+            extra = snap(rng.uniform([hl, wl], [hh, wh],
+                                     size=(pop - P.shape[0], 2)))
+            P = np.concatenate([P, extra])
+            FP = np.concatenate([FP, eval_fn(extra)])
+    final = pareto_mask(FP)
+    return P[final], FP[final]

@@ -1,0 +1,186 @@
+"""CAMUY analytical model of a weight-stationary systolic array.
+
+Faithful to the paper's §3 machine: an h (height) x w (width) PE grid;
+weights stationary (one per PE, double-buffered); activations stream
+horizontally, partial sums vertically; a Systolic Data Setup Unit skews
+activation rows; an Accumulator Array reduces partial results; all tensors
+live in a single Unified Buffer.
+
+For a GEMM  O[M,N] = A[M,K] @ W[K,N]:
+  * the K axis maps to array rows (height h), N to columns (width w);
+  * tiles: Tk = ceil(K/h), Tn = ceil(N/w); edge tiles are partially occupied
+    (h_t = K mod h, w_t = N mod w) — this is where the pow2 utilization
+    effects of the paper come from;
+  * per tile pass (never-stalling, SCALE-SIM-style):
+        pass_cycles = M + h_t + w_t - 1      (skew fill + stream + drain)
+  * weight loads are double-buffered: hidden behind the previous pass when
+    h_t <= pass_cycles; the model reports the number of concurrent weight
+    update ports (and UB bandwidth) required for stall-free execution;
+  * data movement counters follow Eyeriss-style accounting (paper Eq. 1):
+        E = 6*M_UB + 2*(M_INTER_PE + M_AA) + M_INTRA_PE
+
+All outputs are exact closed forms over the 4 tile classes
+(full/edge-row/edge-col/corner), so the whole model is jnp-vectorizable over
+thousands of (h, w) configurations at once. Counts are validated
+instruction-exactly against the cycle-level wavefront emulator
+(core/emulator.py) in tests/test_systolic.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import numpy as np
+
+# numpy float64 throughout: cycle/movement counts exceed 2^24 for real nets,
+# where float32 would silently round. The JAX-side vectorized evaluation of
+# the same closed forms lives in kernels/dse_eval.py (Pallas).
+Array = np.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class SystolicMetrics:
+    """All counts are totals for the given GEMM (scalar or batched array)."""
+    cycles: Array
+    utilization: Array
+    macs: Array
+    m_ub: Array                 # unified-buffer reads+writes
+    m_ub_act: Array
+    m_ub_weight: Array
+    m_ub_out: Array
+    m_inter_pe: Array           # neighbour-register reads
+    m_intra_pe: Array           # local register reads/writes
+    m_aa: Array                 # array -> accumulator transfers
+    energy: Array               # paper Eq. 1
+    weight_load_cycles: Array   # not hidden by double buffering
+    update_ports: Array         # concurrent weight updates for stall-free
+    ub_bandwidth: Array         # words/cycle for stall-free execution
+
+    def tree(self):
+        return dataclasses.asdict(self)
+
+
+def analyze_gemm(M, K, N, h, w, *, count_weight_load_hops: bool = False,
+                 act_reread: bool = False, idle_pe_energy: float = 0.0,
+                 groups: int = 1):
+    """Analytical metrics for (possibly grouped) GEMM on an h x w array.
+
+    All of M, K, N, h, w may be numpy/jnp arrays (broadcastable): the model
+    vmaps over design points for free. `groups` serializes the GEMM into
+    `groups` independent (M, K, N) problems (the paper's group-convolution
+    treatment: one serialized matmul per group).
+
+    Model options (ablated in benchmarks/ablations.py):
+      act_reread=False  — paper-faithful: the Systolic Data Setup Unit
+        "fetches one activation row to the FIFOs" ONCE; re-streaming across
+        the Tn column tiles comes from the setup unit, not the Unified
+        Buffer. This is what makes energy height-dominated (via the
+        accumulator term 2*Tk*M*N) and reproduces the paper's tall-narrow
+        optima (Fig. 2/5). act_reread=True charges Tn*M*K UB reads instead.
+      count_weight_load_hops — additionally count the pass-through hops of
+        weights sinking to their rows during loads (penalizes extreme
+        heights; off by default since Eq. 1 does not include them).
+    """
+    f = lambda x: np.asarray(x, np.float64)
+    M, K, N, h, w = map(f, (M, K, N, h, w))
+    g = f(groups)
+
+    Tk = np.ceil(K / h)
+    Tn = np.ceil(N / w)
+    rk = K - (Tk - 1) * h          # edge tile height (1..h)
+    rn = N - (Tn - 1) * w
+
+    def tsum(fn):
+        """sum over tiles of fn(h_t, w_t) — exact via the 4 tile classes."""
+        return ((Tk - 1) * (Tn - 1) * fn(h, w)
+                + (Tk - 1) * fn(h, rn)
+                + (Tn - 1) * fn(rk, w)
+                + fn(rk, rn))
+
+    # ---- cycles --------------------------------------------------------
+    # Subsequent weight loads are ALWAYS hidden by double buffering here:
+    # a load takes h_t <= h cycles while the previous pass runs
+    # M + h_prev + w_prev - 1 >= h cycles. Only the first load is exposed.
+    # (Validated cycle-exactly by the emulator.)
+    pass_cycles = tsum(lambda ht, wt: M + ht + wt - 1)
+    first_load = np.where(Tk * Tn > 1, h, rk)
+    weight_load_cycles = first_load
+    min_pass = M + np.minimum(h, rk) + np.minimum(w, rn) - 1
+    cycles = g * (pass_cycles + weight_load_cycles)
+
+    # ---- MACs / utilization -------------------------------------------
+    macs = g * M * K * N
+    utilization = macs / (cycles * h * w)
+
+    # ---- data movements (per group, scaled by g) -----------------------
+    ub_act = (Tn * M * K) if act_reread else (M * K)
+    ub_weight = K * N                      # W fetched once
+    ub_out = M * N                         # final outputs written back
+    m_ub = g * (ub_act + ub_weight + ub_out)
+
+    inter_act = tsum(lambda ht, wt: M * ht * (wt - 1))
+    inter_psum = tsum(lambda ht, wt: M * wt * (ht - 1))
+    inter_wload = tsum(lambda ht, wt: wt * ht * (ht - 1) / 2.0) \
+        if count_weight_load_hops else 0.0
+    m_inter = g * (inter_act + inter_psum + inter_wload)
+
+    # 3 local register accesses per MAC (weight-reg read, psum write,
+    # activation latch) + double-buffer weight-reg writes
+    m_intra = g * (3 * M * K * N + K * N)
+
+    # accumulator array: each deposited partial is a read-modify-write
+    # (2 accesses). Note this is what breaks the exact cancellation between
+    # psum-hop reduction and extra partials — energy becomes height-
+    # dominated, reproducing the paper's Fig.2/Fig.5 tall-narrow optima.
+    m_aa = 2.0 * g * tsum(lambda ht, wt: M * wt)   # = 2 g Tk M N
+    energy = 6 * m_ub + 2 * (m_inter + m_aa) + m_intra
+    if idle_pe_energy:
+        # optional clock/leakage cost of idle PE-cycles: strict Eq.1 carries
+        # no such term; with it, group-conv models sharply prefer SMALL
+        # arrays (the paper's "smaller is better" finding). Ablated in
+        # benchmarks/ablations.py.
+        energy = energy + idle_pe_energy * (cycles * h * w - macs)
+
+    # stall-free UB bandwidth: activations in (h/cycle) + AA drain (w/cycle)
+    # + weight prefetch rate (h*w words over one pass)
+    ports = np.maximum(np.ceil(h / np.maximum(min_pass, 1.0)), 1.0)
+    ub_bw = h + w + h * w / np.maximum(min_pass, 1.0)
+
+    return SystolicMetrics(
+        cycles=cycles, utilization=utilization, macs=macs,
+        m_ub=m_ub, m_ub_act=g * ub_act, m_ub_weight=g * ub_weight,
+        m_ub_out=g * ub_out, m_inter_pe=m_inter, m_intra_pe=m_intra,
+        m_aa=m_aa, energy=energy, weight_load_cycles=g * weight_load_cycles,
+        update_ports=ports, ub_bandwidth=ub_bw)
+
+
+def combine(metrics_list):
+    """Sum metrics over a network's layers (cycles add: serialized)."""
+    out = {}
+    for k in SystolicMetrics.__dataclass_fields__:
+        vals = [getattr(m, k) for m in metrics_list]
+        if k in ("utilization", "update_ports", "ub_bandwidth"):
+            out[k] = None    # recomputed below / maxed
+        else:
+            out[k] = sum(vals)
+    out["utilization"] = out["macs"] / np.maximum(out["cycles"], 1.0) \
+        / 1.0  # filled by caller with /(h*w)
+    out["update_ports"] = np.stack(
+        [np.asarray(m.update_ports) for m in metrics_list]).max(axis=0)
+    out["ub_bandwidth"] = np.stack(
+        [np.asarray(m.ub_bandwidth) for m in metrics_list]).max(axis=0)
+    return SystolicMetrics(**out)
+
+
+def analyze_network(workloads, h, w, **kw):
+    """workloads: iterable of (M, K, N, groups, repeats). Returns combined
+    SystolicMetrics with utilization normalized by h*w."""
+    ms = []
+    for wl in workloads:
+        M, K, N, g, rep = wl
+        m = analyze_gemm(M, K, N, h, w, groups=g * rep, **kw)
+        ms.append(m)
+    tot = combine(ms)
+    util = tot.macs / (np.maximum(tot.cycles, 1.0)
+                       * np.asarray(h, np.float64) * np.asarray(w, np.float64))
+    return dataclasses.replace(tot, utilization=util)

@@ -1,0 +1,72 @@
+"""GEMM workload IR + layer lowering (conv/grouped conv/depthwise/FC).
+
+The paper evaluates single-image inference: a convolution lowers (im2col) to
+one GEMM per group:
+    M = H_out * W_out,  K = (C_in/g) * kh * kw,  N = C_out / g,
+serialized over the g groups (paper §4.2: "grouping ... leads to a
+serialization of matrix multiplications (one per group)").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Tuple
+
+Workload = Tuple[int, int, int, int, int]   # (M, K, N, groups, repeats)
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    h_in: int
+    c_in: int
+    c_out: int
+    k: int = 3
+    stride: int = 1
+    groups: int = 1
+    repeats: int = 1
+    pad: str = "same"      # same | valid
+    name: str = ""
+
+    @property
+    def h_out(self) -> int:
+        if self.pad == "same":
+            return -(-self.h_in // self.stride)
+        return (self.h_in - self.k) // self.stride + 1
+
+    def gemm(self) -> Workload:
+        m = self.h_out * self.h_out
+        kk = (self.c_in // self.groups) * self.k * self.k
+        n = self.c_out // self.groups
+        return (m, kk, n, self.groups, self.repeats)
+
+
+@dataclasses.dataclass(frozen=True)
+class FC:
+    d_in: int
+    d_out: int
+    repeats: int = 1
+    batch: int = 1
+    name: str = ""
+
+    def gemm(self) -> Workload:
+        return (self.batch, self.d_in, self.d_out, 1, self.repeats)
+
+
+@dataclasses.dataclass(frozen=True)
+class Gemm:
+    m: int
+    k: int
+    n: int
+    groups: int = 1
+    repeats: int = 1
+    name: str = ""
+
+    def gemm(self) -> Workload:
+        return (self.m, self.k, self.n, self.groups, self.repeats)
+
+
+def lower(layers: Iterable) -> List[Workload]:
+    return [l.gemm() for l in layers]
+
+
+def total_macs(workloads: Iterable[Workload]) -> int:
+    return int(sum(m * k * n * g * r for (m, k, n, g, r) in workloads))

@@ -1,0 +1,69 @@
+"""Deterministic, seed-addressable synthetic token pipeline.
+
+Every batch is a pure function of (seed, step): after ANY restart — on a
+different host count or mesh — step s reproduces the same global batch,
+so checkpoint-restart never replays or skips data (elastic-safe).
+
+The "corpus" is a fixed Zipf-ish distribution with a deterministic
+next-token structure (token_{t+1} = f(token_t) + noise) so that a ~100M
+model can visibly learn on it (examples/train_lm.py shows the loss falling
+well below the unigram entropy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    vocab_size: int = 50304
+    structure: float = 0.8        # P(next = deterministic successor)
+
+
+def batch_at(dcfg: DataConfig, step: int, batch: int, seq: int) -> dict:
+    key = jax.random.fold_in(jax.random.key(dcfg.seed), step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    V = dcfg.vocab_size
+    # zipf-ish marginal via squaring a uniform
+    u = jax.random.uniform(k1, (batch, seq + 1))
+    base = (u * u * V).astype(jnp.int32)
+    # deterministic successor chain: s(t) = (7t + 13) % V
+    succ = (7 * base[:, :-1] + 13) % V
+    take_succ = jax.random.uniform(k2, succ.shape) < dcfg.structure
+    nxt = jnp.where(take_succ, succ, base[:, 1:])
+    tokens = jnp.concatenate([base[:, :1], nxt], axis=1)
+    return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+
+
+class TokenPipeline:
+    """Iterator facade with prefetch-depth-1 semantics (host-level)."""
+
+    def __init__(self, dcfg: DataConfig, cfg: ArchConfig,
+                 shape: ShapeConfig, start_step: int = 0,
+                 extra_specs: Optional[dict] = None):
+        self.dcfg = dataclasses.replace(dcfg, vocab_size=cfg.vocab_size)
+        self.cfg = cfg
+        self.shape = shape
+        self.step = start_step
+        self.extra_specs = extra_specs or {}
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        b = batch_at(self.dcfg, self.step, self.shape.global_batch,
+                     self.shape.seq_len)
+        for name, sds in self.extra_specs.items():   # modality stubs
+            k = jax.random.fold_in(
+                jax.random.key(self.dcfg.seed + 17), self.step)
+            b[name] = jax.random.normal(k, sds.shape, jnp.float32).astype(
+                sds.dtype)
+        self.step += 1
+        return b

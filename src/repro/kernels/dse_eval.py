@@ -1,0 +1,78 @@
+"""Design-space-exploration sweep as a Pallas kernel.
+
+Evaluates the CAMUY closed forms for a whole block of (h, w) configurations
+against a VMEM-resident layer table in one grid step — the TPU-native
+version of the paper's config sweep (961 configs x O(100) layers).
+
+Inputs:
+  configs: (C, 2) float32 — (h, w) per design point, C % block_c == 0
+  layers:  (L, 5) float32 — (M, K, N, groups, repeats) per GEMM workload
+Outputs:
+  (C, 4) float32 — [cycles, energy, macs, util]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _eval_block(h, w, layers):
+    """Vectorized closed forms (mirrors core/systolic.py, f32)."""
+    M = layers[:, 0][None, :]
+    K = layers[:, 1][None, :]
+    N = layers[:, 2][None, :]
+    g = (layers[:, 3] * layers[:, 4])[None, :]
+    h = h[:, None]
+    w = w[:, None]
+    Tk = jnp.ceil(K / h)
+    Tn = jnp.ceil(N / w)
+    rk = K - (Tk - 1) * h
+    rn = N - (Tn - 1) * w
+
+    def tsum(fn):
+        return ((Tk - 1) * (Tn - 1) * fn(h, w) + (Tk - 1) * fn(h, rn)
+                + (Tn - 1) * fn(rk, w) + fn(rk, rn))
+
+    pass_cycles = tsum(lambda ht, wt: M + ht + wt - 1)
+    first_load = jnp.where(Tk * Tn > 1, h, rk)
+    cycles = g * (pass_cycles + first_load)
+    macs = (g * M * K * N) * jnp.ones_like(h)   # broadcast to (C, L)
+    m_ub = g * (M * K + K * N + M * N)
+    inter = g * (tsum(lambda ht, wt: M * ht * (wt - 1))
+                 + tsum(lambda ht, wt: M * wt * (ht - 1)))
+    m_intra = g * (3 * M * K * N + K * N)
+    m_aa = 2.0 * g * tsum(lambda ht, wt: M * wt)
+    energy = 6 * m_ub + 2 * (inter + m_aa) + m_intra
+    cyc = jnp.sum(cycles, axis=1)
+    en = jnp.sum(energy, axis=1)
+    mc = jnp.sum(macs, axis=1)
+    util = mc / jnp.maximum(cyc * h[:, 0] * w[:, 0], 1.0)
+    return jnp.stack([cyc, en, mc, util], axis=1)
+
+
+def _kernel(cfg_ref, layers_ref, out_ref):
+    h = cfg_ref[:, 0]
+    w = cfg_ref[:, 1]
+    out_ref[...] = _eval_block(h, w, layers_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def dse_eval(configs, layers, *, block_c: int = 128,
+             interpret: bool = False):
+    C = configs.shape[0]
+    L = layers.shape[0]
+    assert C % block_c == 0, (C, block_c)
+    return pl.pallas_call(
+        _kernel,
+        grid=(C // block_c,),
+        in_specs=[
+            pl.BlockSpec((block_c, 2), lambda i: (i, 0)),
+            pl.BlockSpec((L, 5), lambda i: (0, 0)),   # layer table resident
+        ],
+        out_specs=pl.BlockSpec((block_c, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, 4), jnp.float32),
+        interpret=interpret,
+    )(configs.astype(jnp.float32), layers.astype(jnp.float32))

@@ -1,0 +1,37 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the Pallas
+interpreter runs the kernel body in Python); on a TPU runtime the same
+calls lower to Mosaic. `interpret` defaults to True when no TPU backend is
+present so the public API is portable.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.dse_eval import dse_eval
+from repro.kernels.swa_attention import swa_attention
+from repro.kernels.ws_matmul import ws_matmul
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def matmul(a, w, *, block_m=128, block_n=128, block_k=128, schedule="ws",
+           interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return ws_matmul(a, w, block_m=block_m, block_n=block_n,
+                     block_k=block_k, schedule=schedule, interpret=interpret)
+
+
+def attention(q, k, v, *, window=None, block_q=128, block_kv=128,
+              interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return swa_attention(q, k, v, window=window, block_q=block_q,
+                         block_kv=block_kv, interpret=interpret)
+
+
+def sweep(configs, layers, *, block_c=128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return dse_eval(configs, layers, block_c=block_c, interpret=interpret)

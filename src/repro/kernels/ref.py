@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ws_matmul_ref(a, w):
+    return jnp.dot(a.astype(jnp.float32), w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def swa_attention_ref(q, k, v, *, window=None):
+    """q,k,v: (BH, S, D) -> (BH, S, D); causal with optional window."""
+    BH, S, D = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def dse_eval_ref(configs, layers):
+    """numpy oracle via core.systolic (float64, exact)."""
+    from repro.core.systolic import analyze_network
+    configs = np.asarray(configs, np.float64)
+    out = np.zeros((configs.shape[0], 4), np.float32)
+    wls = [tuple(map(float, row)) for row in np.asarray(layers)]
+    m = analyze_network(wls, configs[:, 0], configs[:, 1])
+    out[:, 0] = m.cycles
+    out[:, 1] = m.energy
+    out[:, 2] = m.macs
+    out[:, 3] = m.utilization
+    return out

@@ -1,0 +1,99 @@
+"""Weight-stationary tiled matmul as a Pallas TPU kernel.
+
+The TPU-native realization of the CAMUY schedule: the model's (h, w)
+systolic tile becomes the kernel's (block_k, block_n) BlockSpec.
+
+Two schedules, mirroring the dataflow trade-off the paper studies:
+
+  schedule="ws"  (weight-stationary, paper-faithful):
+      grid (n, k, m), M innermost — the weight block stays VMEM-resident
+      while the full activation stream passes through it; output blocks are
+      revisited across k and accumulate in HBM (the paper's Accumulator
+      Array traffic, M_AA = Tk*M*N partial deposits).
+  schedule="os"  (output-stationary):
+      grid (m, n, k), K innermost — an f32 VMEM scratch accumulates the K
+      reduction; weights are re-fetched per (m, n) block.
+
+core/autotune.py picks block shapes and schedule from the CAMUY traffic
+model under the VMEM budget. MXU alignment: blocks are multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _os_kernel(a_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _ws_kernel(a_ref, w_ref, o_ref):
+    k = pl.program_id(1)
+    part = jnp.dot(a_ref[...], w_ref[...],
+                   preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(k > 0)
+    def _accum():
+        o_ref[...] += part          # HBM-revisited partial (M_AA traffic)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_n", "block_k", "schedule", "interpret"))
+def ws_matmul(a, w, *, block_m: int = 128, block_n: int = 128,
+              block_k: int = 128, schedule: str = "ws",
+              interpret: bool = False):
+    """a: (M, K) @ w: (K, N) -> (M, N) f32. Dims must divide their blocks."""
+    M, K = a.shape
+    K2, N = w.shape
+    assert K == K2, (a.shape, w.shape)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        (M, K, N), (block_m, block_k, block_n))
+    n_k = K // block_k
+    out_shape = jax.ShapeDtypeStruct((M, N), jnp.float32)
+    if schedule == "os":
+        return pl.pallas_call(
+            functools.partial(_os_kernel, n_k=n_k),
+            grid=(M // block_m, N // block_n, n_k),
+            in_specs=[
+                pl.BlockSpec((block_m, block_k), lambda m, n, k: (m, k)),
+                pl.BlockSpec((block_k, block_n), lambda m, n, k: (k, n)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n),
+                                   lambda m, n, k: (m, n)),
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+            interpret=interpret,
+        )(a, w)
+    if schedule == "ws":
+        return pl.pallas_call(
+            _ws_kernel,
+            grid=(N // block_n, n_k, M // block_m),
+            in_specs=[
+                pl.BlockSpec((block_m, block_k), lambda n, k, m: (m, k)),
+                pl.BlockSpec((block_k, block_n), lambda n, k, m: (k, n)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n),
+                                   lambda n, k, m: (m, n)),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(a, w)
+    raise ValueError(schedule)

@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+import tempfile
+_DUMP_DIR = tempfile.mkdtemp(prefix="repro_xla_dump_")
+os.environ["XLA_FLAGS"] += (
+    f" --xla_dump_to={_DUMP_DIR} --xla_dump_hlo_pass_re=NEVERMATCH")
+# buffer-assignment dumps feed the TPU-adjusted peak-memory estimate:
+# XLA:CPU's float-normalization promotes bf16 temporaries to f32; on the
+# TPU target those buffers are 2 bytes/elt, so we re-price f32 temps at 1/2.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation), record memory/cost/collective
+analysis. Resumable: one JSON per cell under results/dryrun/.
+
+  python -m repro.launch.dryrun --arch olmoe-1b-7b --shape train_4k
+  python -m repro.launch.dryrun --arch olmoe-1b-7b --shape train_4k --multi-pod
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, cells_for, get_config, list_archs
+from repro.launch import hlo_analysis as HA
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import cell_rules
+from repro.launch.steps import lower_cell, opt_config_for
+from repro.models.model_zoo import build_model
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _tpu_adjusted_temp_bytes() -> dict:
+    """Parse the newest buffer-assignment dump: sum distinct temp-arena
+    ranges, pricing f32 ranges at half (bf16-on-TPU equivalent)."""
+    import glob
+    import re as _re
+    files = sorted(glob.glob(os.path.join(_DUMP_DIR, "*buffer-assignment*")),
+                   key=os.path.getmtime)
+    if not files:
+        return {}
+    raw = adj = 0
+    inside = False
+    with open(files[-1]) as fh:
+        ranges = {}
+        for line in fh:
+            m = _re.match(r"allocation (\d+): size (\d+), thread-local", line)
+            big = _re.match(r"allocation (\d+): size (\d+)", line)
+            if big:
+                inside = int(big.group(2)) > 2 ** 28 and \
+                    ("maybe-live-out" not in line and "parameter" not in line)
+                continue
+            if not inside:
+                continue
+            m = _re.match(
+                r"\s*value: <\d+ (\S+) @\d+> \(size=(\d+),offset=(\d+)\): (\S+)",
+                line)
+            if m:
+                off, size, ty = int(m.group(3)), int(m.group(2)), m.group(4)
+                if off not in ranges or size > ranges[off][0]:
+                    ranges[off] = (size, ty.startswith("f32"))
+        for size, is_f32 in ranges.values():
+            raw += size
+            adj += size // 2 if is_f32 else size
+    for f in files:
+        try:
+            os.remove(f)
+        except OSError:
+            pass
+    return {"temp_arena_bytes": raw, "temp_arena_tpu_adjusted_bytes": adj}
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool, tag: str = "") -> str:
+    mesh = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = f"-{tag}" if tag else ""
+    return os.path.abspath(
+        os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh}{suffix}.json"))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             tag: str = "", overrides=None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = cell_rules(mesh, cfg, shape, overrides)
+    tp = mesh.shape["model"]
+    bundle = build_model(cfg, tp=tp)
+
+    t0 = time.time()
+    lowered = lower_cell(bundle, shape, rules)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = HA.analyze_collectives(hlo)
+    scost = HA.structural_cost(hlo)
+    arena = _tpu_adjusted_temp_bytes()
+    ocfg = opt_config_for(bundle)
+
+    out = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "tp": tp,
+        "param_count": bundle.param_count(),
+        "active_param_count": bundle.active_param_count(),
+        "quant_moments": bool(ocfg.quant_moments),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+        },
+        "cost": {k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "collectives": coll,
+        "structural": scost,
+        "arena": arena,
+        "hlo_bytes": len(hlo),
+    }
+    if arena and arena.get("temp_arena_bytes"):
+        # TPU-adjusted peak: scale XLA's temp figure by the f32->bf16
+        # re-pricing ratio observed in the buffer-assignment dump
+        ratio = (arena["temp_arena_tpu_adjusted_bytes"]
+                 / max(arena["temp_arena_bytes"], 1))
+        out["memory"]["peak_tpu_adjusted_bytes"] = int(
+            mem.argument_size_in_bytes + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes + mem.temp_size_in_bytes * ratio)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(list_archs())
+    os.makedirs(os.path.abspath(RESULTS_DIR), exist_ok=True)
+    for arch in archs:
+        shapes = [args.shape] if args.shape else list(cells_for(arch))
+        for shape in shapes:
+            if shape not in cells_for(arch):
+                print(f"SKIP {arch}/{shape}: not a cell (see DESIGN.md)")
+                continue
+            path = cell_path(arch, shape, args.multi_pod, args.tag)
+            if os.path.exists(path) and not args.force:
+                print(f"skip existing {path}")
+                continue
+            print(f"=== {arch} / {shape} / "
+                  f"{'2x16x16' if args.multi_pod else '16x16'} ===", flush=True)
+            try:
+                out = run_cell(arch, shape, args.multi_pod, args.tag)
+                out["status"] = "ok"
+            except Exception as e:  # record failures; sweep continues
+                out = {"arch": arch, "shape": shape, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+            with open(path, "w") as f:
+                json.dump(out, f, indent=1)
+            if out["status"] == "ok":
+                print(f"  ok: compile={out['compile_s']}s "
+                      f"peak={out['memory']['peak_estimate_bytes']/2**30:.2f}GiB "
+                      f"flops/dev={out['cost'].get('flops', 0):.3e} "
+                      f"coll={out['collectives']['total_operand_bytes']/2**20:.1f}MiB",
+                      flush=True)
+            else:
+                print("  ERROR:", out["error"], flush=True)
+
+
+if __name__ == "__main__":
+    main()

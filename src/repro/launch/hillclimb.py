@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""§Perf hillclimbs: three (arch x shape) pairs, hypothesis-driven
+iterations on the dominant roofline term. Results -> results/perf/*.json.
+
+    python -m repro.launch.hillclimb h2o      # collective-bound train
+    python -m repro.launch.hillclimb qwen3    # memory-bound decode
+    python -m repro.launch.hillclimb mixtral  # MoE train (paper-rep.)
+"""
+import dataclasses
+import json
+import sys
+import time
+
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch import hlo_analysis as HA
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS,
+                                   analytic_memory_bytes)
+from repro.launch.shardings import cell_rules
+from repro.launch.steps import lower_cell, lower_train, opt_config_for
+from repro.models.model_zoo import build_model
+from repro.training import optimizer as OPT
+
+OUT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "..", "results", "perf"))
+
+
+def measure(cfg, shape_name, *, overrides=None, ocfg=None, label=""):
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    rules = cell_rules(mesh, cfg, shape, overrides)
+    bundle = build_model(cfg, tp=16)
+    t0 = time.time()
+    if shape.kind == "train" and ocfg is not None:
+        lowered = lower_train(bundle, shape, rules, ocfg)
+    else:
+        lowered = lower_cell(bundle, shape, rules)
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    s = HA.structural_cost(hlo)
+    mem = compiled.memory_analysis()
+    d = {"arch": cfg.name, "shape": shape_name, "kind": shape.kind,
+         "chips": 256, "tp": 16,
+         "param_count": bundle.param_count(),
+         "active_param_count": bundle.active_param_count(),
+         "quant_moments": bool((ocfg or opt_config_for(bundle)).quant_moments)}
+    res = {
+        "label": label,
+        "t_compute_s": s["flops"] / PEAK_FLOPS,
+        "t_collective_s": s["collective_total_bytes"] / LINK_BW,
+        "t_memory_s": _mem_term(cfg, d),
+        "coll_by_op": s["collective_operand_bytes"],
+        "peak_gib": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                     + mem.output_size_in_bytes
+                     - mem.alias_size_in_bytes) / 2**30,
+        "compile_s": round(time.time() - t0, 1),
+    }
+    print(f"[{label}] compute={res['t_compute_s']:.3f}s "
+          f"coll={res['t_collective_s']:.3f}s mem={res['t_memory_s']:.4f}s "
+          f"peak={res['peak_gib']:.1f}GiB  by_op="
+          f"{ {k: round(v/2**30, 2) for k, v in res['coll_by_op'].items()} }",
+          flush=True)
+    return res
+
+
+def _mem_term(cfg, d):
+    import repro.launch.roofline as RL
+    from repro.configs import base as B
+    # route through the analytic model with this (possibly modified) cfg
+    real = B._REGISTRY.get(cfg.name)
+    B._REGISTRY[cfg.name] = cfg
+    try:
+        return RL.analytic_memory_bytes(d) / HBM_BW
+    finally:
+        if real is not None:
+            B._REGISTRY[cfg.name] = real
+
+
+def climb_h2o():
+    """Most collective-bound: h2o-danube-3-4b / train_4k.
+    Dominant term: collective (4.31 s vs 0.77 s compute)."""
+    cfg = get_config("h2o-danube-3-4b")
+    log = [measure(cfg, "train_4k", label="baseline (TP16 megatron+zero3)")]
+    # H1: a 4B model does not need 16-way TP: the Megatron seq-gathers +
+    # reduce-scatters around every projection dominate. Re-shard to pure
+    # DP+ZeRO-3 (batch over data AND model): collectives become per-layer
+    # bf16 weight gathers + grad reduce-scatter only.
+    # Napkin: megatron moves ~6 x tokens x D bytes/layer; zero moves
+    # ~3 x params_layer x 2B; tokens/chip ~64k: predict ~3-5x less.
+    over = {"batch": ("data", "model"), "seq": None, "ffn": None,
+            "kv_heads": None, "vocab": None, "inner": None, "dv_shard": None,
+            "experts": None}
+    log.append(measure(cfg, "train_4k", overrides=over,
+                       label="H1 pure-DP + ZeRO-3 (no TP)"))
+    # H2: on top, bf16 gradients halve the grad reduce-scatter bytes.
+    bundle = build_model(cfg, tp=16)
+    o = dataclasses.replace(opt_config_for(bundle), grad_dtype=jnp.bfloat16)
+    log.append(measure(cfg, "train_4k", overrides=over, ocfg=o,
+                       label="H2 + bf16 grad reduce"))
+    return log
+
+
+def climb_qwen3():
+    """Worst non-degenerate roofline fraction: qwen3-14b / decode_32k.
+    Dominant: memory (KV reads ~5.4 GB/dev vs 0.11 GB weights)."""
+    cfg = get_config("qwen3-14b")
+    log = [measure(cfg, "decode_32k", label="baseline (bf16 KV)")]
+    # H1: int8 KV cache. KV dominates the memory term; int8 halves KV
+    # bytes: predict memory term ~0.53x.
+    cfg_q = dataclasses.replace(cfg, kv_quant=True)
+    log.append(measure(cfg_q, "decode_32k", label="H1 int8 KV cache"))
+    # H2: move batch over BOTH mesh axes (pure batch-parallel attention,
+    # no head padding, no model-axis gathers). REFUTED structurally:
+    # global_batch=128 cannot shard over 256 chips — the mesh fixes the
+    # parallelism floor. Recorded as a refuted hypothesis.
+    try:
+        over = {"batch": ("data", "model"), "kv_heads": None, "vocab": None,
+                "ffn": None, "seq": None}
+        log.append(measure(cfg_q, "decode_32k", overrides=over,
+                           label="H2 batch over both axes"))
+    except ValueError as e:
+        log.append({"label": "H2 batch over both axes",
+                    "refuted": f"infeasible: {str(e)[:160]}"})
+        print("[H2] refuted:", str(e)[:120], flush=True)
+    return log
+
+
+def climb_mixtral():
+    """Paper-representative: mixtral-8x22b / train_4k (MoE = the paper's
+    grouped-GEMM serialization at LM scale). Dominant: collective."""
+    cfg = get_config("mixtral-8x22b")
+    bundle = build_model(cfg, tp=16)
+    base_o = opt_config_for(bundle)
+    log = [measure(cfg, "train_4k", ocfg=base_o,
+                   label="baseline (accum=2, fp32 master)")]
+    # H1: grad accumulation doubles per-step ZeRO weight gathers (every
+    # microbatch re-gathers every layer, fwd + remat + bwd). accum 2->1
+    # halves weight-gather traffic per token; bf16 master params keep
+    # memory in budget. Predict collective term ~0.6-0.7x.
+    o1 = dataclasses.replace(base_o, accum_steps=1,
+                             param_dtype=jnp.bfloat16)
+    log.append(measure(cfg, "train_4k", ocfg=o1,
+                       label="H1 accum=1 + bf16 master"))
+    # H2: larger attention q-chunk (512->1024) halves the number of
+    # chunk-boundary all-gathers/psum fragments and scan overhead in the
+    # attention inner loop; predict small collective win, compute flat.
+    cfg2 = dataclasses.replace(cfg, attn_chunk=1024)
+    log.append(measure(cfg2, "train_4k", ocfg=o1,
+                       label="H2 + attn_chunk 1024"))
+    return log
+
+
+def main():
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    os.makedirs(OUT, exist_ok=True)
+    runs = {"h2o": climb_h2o, "qwen3": climb_qwen3,
+            "mixtral": climb_mixtral}
+    for name, fn in runs.items():
+        if which not in (name, "all"):
+            continue
+        log = fn()
+        with open(os.path.join(OUT, f"{name}.json"), "w") as f:
+            json.dump(log, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

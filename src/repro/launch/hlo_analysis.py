@@ -1,0 +1,298 @@
+"""Parse optimized (post-SPMD) HLO text: collective inventory with byte
+counts. Feeds the roofline's collective term."""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[^\]]*\])")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def analyze_collectives(hlo_text: str) -> dict:
+    """Returns {op: {count, operand_bytes, output_bytes}, total_*}.
+    Byte counts are per-device (the HLO module is one SPMD partition)."""
+    sizes: dict[str, int] = {}
+    # pass 1: instruction result sizes
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            sizes[m.group(1)] = _type_bytes(m.group(2))
+    per_op = defaultdict(lambda: {"count": 0, "operand_bytes": 0,
+                                  "output_bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rest = line[m.end():]
+        for op in COLLECTIVES:
+            # match opcode followed by its operand list
+            tag = f" {op}("
+            i = rest.find(tag)
+            if i < 0 and rest.startswith(f"{op}("):
+                i, tag = 0, f"{op}("
+            if i < 0:
+                continue
+            # opcode-start variants like all-reduce-start
+            args = rest[i + len(tag):]
+            depth = 1
+            j = 0
+            while j < len(args) and depth:
+                if args[j] == "(":
+                    depth += 1
+                elif args[j] == ")":
+                    depth -= 1
+                j += 1
+            arg_str = args[:j - 1]
+            ob = sum(sizes.get(n, 0) for n in _OPND_RE.findall(arg_str))
+            d = per_op[op]
+            d["count"] += 1
+            d["operand_bytes"] += ob
+            d["output_bytes"] += _type_bytes(m.group(2))
+            break
+    out = {k: dict(v) for k, v in per_op.items()}
+    out["total_operand_bytes"] = sum(v["operand_bytes"] for v in per_op.values())
+    out["total_output_bytes"] = sum(v["output_bytes"] for v in per_op.values())
+    out["total_count"] = sum(v["count"] for v in per_op.values())
+    # bytes actually moved over links per device, by op semantics:
+    moved = 0
+    for k, v in per_op.items():
+        if k == "all-gather":
+            moved += max(v["output_bytes"] - v["operand_bytes"], 0)
+        elif k == "reduce-scatter":
+            moved += max(v["operand_bytes"] - v["output_bytes"], 0)
+        elif k == "all-reduce":
+            moved += 2 * v["operand_bytes"]
+        else:  # all-to-all / collective-permute
+            moved += v["operand_bytes"]
+    out["moved_bytes"] = moved
+    return out
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_CALL_ATTR = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_ATTR = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_ATTR = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def structural_cost(hlo_text: str) -> dict:
+    """Trip-count-aware FLOPs and collective bytes.
+
+    `compiled.cost_analysis()` counts a while-loop body ONCE; with
+    scan-over-layers + microbatching that undercounts by orders of
+    magnitude. This walks the computation graph, multiplies loop bodies by
+    their (parsed) trip counts, and attributes dot FLOPs / collective bytes
+    accordingly. Per-device numbers (the module is one SPMD partition).
+    """
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip()) if "{" in line and "->" in line else None
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+    if entry is None:  # fall back: last computation
+        entry = list(comps)[-1] if comps else None
+
+    def local_sizes(lines):
+        sizes = {}
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if m:
+                sizes[m.group(1)] = _type_bytes(m.group(2))
+        return sizes
+
+    def shape_dims(type_str):
+        m = _SHAPE_RE.search(type_str)
+        if not m:
+            return []
+        return [int(d) for d in m.group(2).split(",") if d]
+
+    def local_shapes(lines):
+        shp = {}
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if m:
+                shp[m.group(1)] = m.group(2)
+        return shp
+
+    def trip_count(cond_name):
+        """Trip bound from the loop condition: resolve the constant operand
+        of its compare(), not just any constant in the computation."""
+        lines = comps.get(cond_name, [])
+        consts = {}
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if m:
+                c = _CONST_RE.search(ln)
+                if c and "constant(" in ln.split("=", 1)[1]:
+                    consts[m.group(1)] = int(c.group(1))
+        best = 0
+        for ln in lines:
+            if " compare(" not in ln and not ln.strip().startswith("compare("):
+                continue
+            if "direction=LT" not in ln and "direction=LE" not in ln \
+                    and "direction=GT" not in ln and "direction=GE" not in ln:
+                continue
+            for name in _OPND_RE.findall(ln.split("compare(", 1)[1]
+                                         .split(")")[0]):
+                if name in consts:
+                    best = max(best, consts[name]
+                               + (1 if "direction=LE" in ln else 0))
+        if best:
+            return best
+        for ln in lines:          # fallback: max constant anywhere
+            for c in _CONST_RE.findall(ln):
+                best = max(best, int(c))
+        return max(best, 1)
+
+    from functools import lru_cache
+
+    NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast", "after-all", "iota", "partition-id"}
+
+    @lru_cache(maxsize=None)
+    def cost_of(comp_name):
+        flops = 0
+        bytes_ = 0
+        coll = {}
+        lines = comps.get(comp_name, [])
+        sizes = local_sizes(lines)
+        shapes = local_shapes(lines)
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if not m:
+                continue
+            rest = ln[m.end():]
+            opcode = rest.strip().split("(", 1)[0].strip()
+            # HBM traffic proxy: output + operand bytes of top-level ops
+            # (fusion interiors are VMEM-resident and skipped below)
+            if opcode.split()[-1] if opcode else "":
+                pass
+            op_clean = opcode.split()[-1] if opcode else ""
+            if op_clean and op_clean not in NO_TRAFFIC:
+                out_b = _type_bytes(m.group(2))
+                args = rest.split("(", 1)
+                opnd_b = []
+                if len(args) > 1:
+                    opnd_b = [sizes.get(n, 0) for n in
+                              _OPND_RE.findall(args[1].split(")")[0])]
+                if op_clean == "dynamic-slice":
+                    ob = 2 * out_b                 # reads/writes the slice
+                elif op_clean == "dynamic-update-slice":
+                    ob = 2 * (opnd_b[1] if len(opnd_b) > 1 else out_b)
+                else:
+                    # in-place aliasing heuristic: an operand of identical
+                    # size to the output (DUS-style fusions) is not
+                    # re-streamed — drop one such operand
+                    if out_b in opnd_b:
+                        opnd_b.remove(out_b)
+                    ob = out_b + sum(opnd_b)
+                bytes_ += ob
+            # dots
+            if opcode == "dot" or " dot(" in rest:
+                out_elems = 1
+                for d in shape_dims(m.group(2)):
+                    out_elems *= d
+                cd = _CDIMS_RE.search(rest)
+                contract = 1
+                opnds = _OPND_RE.findall(rest.split("(", 1)[1].split(")")[0])
+                if cd and opnds:
+                    lhs_dims = shape_dims(shapes.get(opnds[0], ""))
+                    for i in [int(x) for x in cd.group(1).split(",") if x]:
+                        if i < len(lhs_dims):
+                            contract *= lhs_dims[i]
+                flops += 2 * out_elems * contract
+            # collectives
+            for op in COLLECTIVES:
+                if rest.strip().startswith(op + "(") or f" {op}(" in rest:
+                    arg_str = rest.split("(", 1)[1]
+                    names = _OPND_RE.findall(arg_str.split(")")[0])
+                    b = sum(sizes.get(n, 0) for n in names)
+                    coll[op] = coll.get(op, 0) + b
+                    break
+            # nested computations
+            mult = 1
+            callee = None
+            mw = _CALL_ATTR.search(rest)
+            if "while(" in rest:
+                mc = _COND_ATTR.search(rest)
+                if mw:
+                    callee = mw.group(1)
+                    mult = trip_count(mc.group(1)) if mc else 1
+            elif mw and ("fusion(" in rest or "call(" in rest):
+                callee = mw.group(1)
+            mb = _BRANCH_ATTR.search(rest)
+            branches = []
+            if mb:
+                branches = [b.strip().lstrip("%") for b in
+                            mb.group(1).split(",")]
+            is_fusion_call = mw and "fusion(" in rest
+            for bname in ([callee] if callee else []) + branches:
+                if bname in comps and bname != comp_name:
+                    f2, b2, c2 = cost_of(bname)
+                    flops += mult * f2
+                    if not is_fusion_call:
+                        bytes_ += mult * b2   # fusion interior stays in VMEM
+                    for k, v in c2.items():
+                        coll[k] = coll.get(k, 0) + mult * v
+        return flops, bytes_, dict(coll)
+
+    if entry is None:
+        return {"flops": 0, "bytes": 0, "collectives": {}}
+    f, b, c = cost_of(entry)
+    return {"flops": f, "bytes": b, "collective_operand_bytes": c,
+            "collective_total_bytes": sum(c.values())}
+
+
+def scan_counts(hlo_text: str) -> dict:
+    """Cheap redundancy probes: op-kind histogram for fusion/remat checks."""
+    hist = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rest = line[m.end():].strip()
+        op = rest.split("(", 1)[0].strip().split(" ")[-1] if "(" in rest else ""
+        if op:
+            hist[op] += 1
+    return dict(hist)

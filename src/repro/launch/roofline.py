@@ -1,0 +1,167 @@
+"""Roofline analysis over the dry-run results (TPU v5e targets).
+
+Per (arch x shape) cell on the single-pod 16x16 mesh:
+    compute term    = structural_flops_per_dev / 197e12        [s]
+    memory term     = structural_bytes_per_dev / 819e9         [s]
+    collective term = collective_operand_bytes_per_dev / 50e9  [s]
+(term definitions per the assignment; structural_* numbers are trip-count-
+aware per-device values from launch/hlo_analysis.structural_cost).
+
+MODEL_FLOPS (useful work): 6*N_active*tokens for train, 2*N_active*tokens
+for prefill/decode, all global. The "useful ratio" MODEL_FLOPS /
+(flops_per_dev * chips) exposes remat/redundancy/capacity waste.
+
+    python -m repro.launch.roofline            # markdown table
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def load_cells(mesh="pod16x16"):
+    cells = {}
+    for p in sorted(glob.glob(os.path.join(os.path.abspath(RESULTS_DIR),
+                                           f"*__{mesh}.json"))):
+        with open(p) as f:
+            d = json.load(f)
+        if d.get("status") == "ok":
+            cells[(d["arch"], d["shape"])] = d
+    return cells
+
+
+def model_flops(d: dict) -> float:
+    n = d["active_param_count"]
+    shape = d["shape"]
+    kind = d["kind"]
+    seq = {"train_4k": 4096, "prefill_32k": 32768, "decode_32k": 1,
+           "long_500k": 1}[shape]
+    batch = {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+             "long_500k": 1}[shape]
+    tokens = seq * batch
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def analytic_memory_bytes(d: dict) -> float:
+    """Structural lower bound on per-device HBM traffic for one step:
+    parameter streams (fwd + backward dgrad/wgrad + remat recompute for
+    train), optimizer-state read/write, exact KV-cache traffic, activation
+    checkpoint round-trips. Exact from the configuration — immune to the
+    CPU-HLO artifacts (f32 promotion, unaliased loop carries) that inflate
+    the parsed byte count."""
+    from repro.configs.base import SHAPES, get_config, resolve_dims
+    cfg = get_config(d["arch"])
+    dims = resolve_dims(cfg, d["tp"])
+    shape = SHAPES[d["shape"]]
+    chips = d["chips"]
+    n = d["param_count"]
+    n_act = d["active_param_count"]
+    kind = d["kind"]
+    batch, seq = shape.global_batch, shape.seq_len
+    n_attn = sum(1 for i in range(cfg.num_layers) if cfg.is_attn_layer(i))
+    if cfg.family == "ssm":
+        n_attn = 0
+    if cfg.family == "audio":
+        n_attn += cfg.encoder_layers + cfg.num_layers  # self+cross
+    cache_len = min(seq, cfg.sliding_window or seq)
+    kv_elt_bytes = 1 if cfg.kv_quant else 2
+    kv_total = (n_attn * batch * cache_len * dims.kv_heads * dims.head_dim
+                * 2 * kv_elt_bytes / chips)
+    if kind == "train":
+        accum = 8 if n > 200e9 else (2 if n > 50e9 else 1)
+        p_stream = 3 * accum * n * 2 / chips          # fwd+recompute+bwd
+        psize = 2 if n > 200e9 else 4
+        msize = 1 if d.get("quant_moments") else 4
+        opt = (2 * psize + 4 * msize + 2 * psize) * n / chips  # p rw, m/v rw
+        tokens_dev = batch * seq / chips * 16        # seq gathered over model
+        acts = tokens_dev * cfg.d_model * 2 * 2 * cfg.num_layers
+        return p_stream + opt + acts
+    if kind == "prefill":
+        tokens_dev = batch * seq / chips * 16
+        acts = tokens_dev * cfg.d_model * 2 * 2 * cfg.num_layers
+        return n_act * 2 / chips + kv_total + acts
+    # decode: active params once + full KV read (+1-token write)
+    return n_act * 2 / chips + kv_total
+
+
+def analyze_cell(d: dict) -> dict:
+    s = d.get("structural", {})
+    flops_dev = s.get("flops", 0.0)
+    bytes_dev = s.get("bytes", 0.0)
+    coll_dev = s.get("collective_total_bytes", 0.0)
+    chips = d["chips"]
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem_hlo = bytes_dev / HBM_BW
+    t_mem = analytic_memory_bytes(d) / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(d)
+    useful = mf / max(flops_dev * chips, 1.0)
+    bound = max(terms.values())
+    mfu_bound = (mf / chips / PEAK_FLOPS) / bound if bound else 0.0
+    return {
+        "arch": d["arch"], "shape": d["shape"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_memory_hlo_s": t_mem_hlo, "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": mfu_bound,   # useful-FLOPs time / bound time
+        "peak_gib": d["memory"]["peak_estimate_bytes"] / 2**30,
+        "peak_adj_gib": d["memory"].get("peak_tpu_adjusted_bytes",
+                                        d["memory"]["peak_estimate_bytes"])
+        / 2**30,
+        "compile_s": d["compile_s"],
+    }
+
+
+def table(mesh="pod16x16") -> str:
+    cells = load_cells(mesh)
+    rows = [analyze_cell(d) for d in cells.values()]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = ("| arch | shape | compute s | memory s | (hlo-proxy) | "
+           "collective s | dominant | useful ratio | roofline frac "
+           "| peak GiB (adj) |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} "
+                 f"| {r['t_memory_s']:.3e} | {r['t_memory_hlo_s']:.2e} "
+                 f"| {r['t_collective_s']:.3e} "
+                 f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+                 f"| {r['roofline_fraction']:.2f} "
+                 f"| {r['peak_gib']:.1f} ({r['peak_adj_gib']:.1f}) |\n")
+    return hdr + body
+
+
+def main():
+    print(table())
+    cells = load_cells()
+    rows = [analyze_cell(d) for d in cells.values()]
+    with open(os.path.join(os.path.abspath(RESULTS_DIR), "..",
+                           "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    # pick hillclimb candidates
+    rows.sort(key=lambda r: r["roofline_fraction"])
+    print("\nworst roofline fraction:",
+          [(r["arch"], r["shape"], round(r["roofline_fraction"], 3))
+           for r in rows[:5]])
+    coll = sorted(rows, key=lambda r: -(r["t_collective_s"]
+                                        / max(max(r["t_compute_s"],
+                                                  r["t_memory_s"]), 1e-12)))
+    print("most collective-bound:",
+          [(r["arch"], r["shape"]) for r in coll[:5]])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Step-function builders: pjit-ready train / prefill / decode closures with
+their sharding trees and abstract inputs (for AOT lower+compile)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.shardings import tree_shardings
+from repro.models import model_zoo as MZ
+from repro.sharding.logical import MeshRules, use_mesh_rules
+from repro.training import optimizer as OPT
+
+
+def opt_config_for(bundle, total_steps: int = 10_000) -> OPT.OptConfig:
+    """Big models get int8 moments + bf16 grads + grad accumulation so a
+    16 GB chip fits."""
+    n = bundle.param_count()
+    chips = 256
+    big = n * 4 / chips > 2e9
+    huge = n > 200e9        # jamba-scale: bf16 master + deep accumulation
+    accum = 8 if huge else (2 if n > 50e9 else 1)
+    return OPT.OptConfig(quant_moments=big,
+                         grad_dtype=jnp.bfloat16 if big else jnp.float32,
+                         param_dtype=jnp.bfloat16 if huge else jnp.float32,
+                         accum_steps=accum,
+                         total_steps=total_steps)
+
+
+# ------------------------------------------------------------- training ----
+
+def make_train_step(bundle: MZ.ModelBundle, ocfg: OPT.OptConfig,
+                    rules: Optional[MeshRules]):
+    def train_step(state, batch):
+        with use_mesh_rules(rules):
+            acc = ocfg.accum_steps
+            if acc == 1:
+                loss, grads = jax.value_and_grad(bundle.train_loss)(
+                    state["params"], batch)
+                grads = jax.tree.map(lambda g: g.astype(ocfg.grad_dtype),
+                                     grads)
+            else:
+                mb = jax.tree.map(
+                    lambda a: a.reshape((acc, a.shape[0] // acc)
+                                        + a.shape[1:]), batch)
+
+                def mb_body(g_acc, mbatch):
+                    l, g = jax.value_and_grad(bundle.train_loss)(
+                        state["params"], mbatch)
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(ocfg.grad_dtype), g_acc, g)
+                    return g_acc, l
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, ocfg.grad_dtype),
+                    state["params"])
+                grads, losses = jax.lax.scan(mb_body, g0, mb)
+                grads = jax.tree.map(lambda g: g / acc, grads)
+                loss = jnp.mean(losses)
+            new_p, new_opt, metrics = OPT.apply_updates(
+                ocfg, state["params"], grads, state["opt"])
+        return ({"params": new_p, "opt": new_opt},
+                {"loss": loss, **metrics})
+    return train_step
+
+
+def train_state_axes(bundle: MZ.ModelBundle, ocfg: OPT.OptConfig):
+    pax = bundle.param_logical_axes()
+    return {"params": pax, "opt": OPT.state_logical_axes(ocfg, pax)}
+
+
+def abstract_train_state(bundle: MZ.ModelBundle, ocfg: OPT.OptConfig):
+    params = bundle.abstract_params(ocfg.param_dtype)
+    opt = jax.eval_shape(partial(OPT.init_state, ocfg), params)
+    return {"params": params, "opt": opt}
+
+
+def init_train_state(bundle: MZ.ModelBundle, ocfg: OPT.OptConfig, key):
+    params = bundle.init_params(key, ocfg.param_dtype)
+    return {"params": params, "opt": OPT.init_state(ocfg, params)}
+
+
+def lower_train(bundle, shape: ShapeConfig, rules: MeshRules,
+                ocfg: Optional[OPT.OptConfig] = None):
+    ocfg = ocfg or opt_config_for(bundle)
+    step = make_train_step(bundle, ocfg, rules)
+    sax = train_state_axes(bundle, ocfg)
+    state_sh = tree_shardings(rules, sax)
+    batch_sh = tree_shardings(rules, MZ.batch_logical_axes(bundle.cfg, shape))
+    state_abs = abstract_train_state(bundle, ocfg)
+    batch_abs = MZ.batch_specs(bundle.cfg, shape)
+    jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+    return jitted.lower(state_abs, batch_abs)
+
+
+# -------------------------------------------------------------- serving ----
+
+def make_prefill_step(bundle: MZ.ModelBundle, cache_len: int,
+                      rules: Optional[MeshRules]):
+    def prefill_step(params, batch):
+        with use_mesh_rules(rules):
+            return bundle.prefill(params, batch, cache_len=cache_len)
+    return prefill_step
+
+
+def make_decode_step(bundle: MZ.ModelBundle, rules: Optional[MeshRules]):
+    def decode_step(params, cache, tokens):
+        with use_mesh_rules(rules):
+            return bundle.decode_step(params, cache, tokens)
+    return decode_step
+
+
+def cache_shardings(bundle: MZ.ModelBundle, rules: MeshRules):
+    return tree_shardings(rules, bundle.cache_axes())
+
+
+def lower_prefill(bundle, shape: ShapeConfig, rules: MeshRules):
+    step = make_prefill_step(bundle, cache_len=shape.seq_len, rules=rules)
+    params_sh = tree_shardings(rules, bundle.param_logical_axes())
+    batch_sh = tree_shardings(rules, MZ.batch_logical_axes(bundle.cfg, shape))
+    params_abs = bundle.abstract_params(jnp.bfloat16)
+    batch_abs = MZ.batch_specs(bundle.cfg, shape)
+    cache_sh = cache_shardings(bundle, rules)
+    jitted = jax.jit(step, in_shardings=(params_sh, batch_sh),
+                     out_shardings=(None, cache_sh))
+    return jitted.lower(params_abs, batch_abs)
+
+
+def lower_decode(bundle, shape: ShapeConfig, rules: MeshRules):
+    step = make_decode_step(bundle, rules)
+    params_sh = tree_shardings(rules, bundle.param_logical_axes())
+    cache_sh = cache_shardings(bundle, rules)
+    params_abs = bundle.abstract_params(jnp.bfloat16)
+    cache_abs = jax.eval_shape(
+        partial(bundle.init_cache, shape.global_batch, shape.seq_len,
+                dtype=jnp.bfloat16))
+    tok_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_sh = tree_shardings(rules, {"t": ("batch", None)})["t"]
+    jitted = jax.jit(step, in_shardings=(params_sh, cache_sh, tok_sh),
+                     out_shardings=(None, cache_sh), donate_argnums=(1,))
+    return jitted.lower(params_abs, cache_abs, tok_abs)
+
+
+def lower_cell(bundle, shape: ShapeConfig, rules: MeshRules):
+    if shape.kind == "train":
+        return lower_train(bundle, shape, rules)
+    if shape.kind == "prefill":
+        return lower_prefill(bundle, shape, rules)
+    return lower_decode(bundle, shape, rules)

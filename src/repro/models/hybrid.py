@@ -1,0 +1,221 @@
+"""Jamba-style hybrid (Mamba + attention 1:7, MoE every other layer).
+
+Training scans over *homogeneous pairs* of layers (even layer: mixer is
+`lax.cond(attn | mamba)` + dense MLP; odd layer: mamba + MoE). A homogeneous
+while-body is crucial on this backend: unrolled heterogeneous sub-layers
+defeat XLA's buffer reuse (each sub-layer's gathered activations stay live).
+The attention slot carries union parameters (mamba params on attention rows
+are dummies and vice versa — ~100 MB/device on jamba-398B, accounted in
+DESIGN.md).
+
+Prefill/decode unroll a Python loop over the 72 layers with statically
+sliced parameters, so caches are exact-sized per layer kind (no dummy KV
+caches on mamba layers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Dims
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models.params import stack_specs
+from repro.sharding.logical import lsc
+
+
+def _layer_kinds(cfg: ArchConfig):
+    """Per global layer index: (mixer, mlp) kind."""
+    out = []
+    for i in range(cfg.num_layers):
+        mixer = "attn" if cfg.is_attn_layer(i) else "mamba"
+        mlp = "moe" if (cfg.num_experts and i % cfg.moe_every == cfg.moe_offset) else "mlp"
+        out.append((mixer, mlp))
+    return out
+
+
+def _check_pairable(cfg: ArchConfig):
+    kinds = _layer_kinds(cfg)
+    ok = (cfg.num_layers % 2 == 0
+          and all(m == "mlp" for _, (x, m) in enumerate(kinds[0::2]))
+          and all(m == "moe" for _, (x, m) in enumerate(kinds[1::2]))
+          and all(x == "mamba" for x, _ in kinds[1::2]))
+    return ok, kinds
+
+
+def hybrid_specs(cfg: ArchConfig, dims: Dims) -> dict:
+    ok, _ = _check_pairable(cfg)
+    assert ok, "hybrid layout must be (attn|mamba,+mlp)/(mamba,+moe) pairs"
+    n_pairs = cfg.num_layers // 2
+    pair = {
+        "ln1a": L.norm_spec(cfg.d_model),
+        "attn": L.attention_specs(cfg, dims),       # union slot (even layers)
+        "mamba_a": M.mamba_specs(cfg, dims),
+        "ln2a": L.norm_spec(cfg.d_model),
+        "mlp": L.mlp_specs(cfg, dims.d_ff),
+        "ln1b": L.norm_spec(cfg.d_model),
+        "mamba_b": M.mamba_specs(cfg, dims),
+        "ln2b": L.norm_spec(cfg.d_model),
+        "moe": MOE.moe_specs(cfg, dims),
+    }
+    return {
+        "embed": L.embed_specs(dims),
+        "pairs": stack_specs(pair, n_pairs),
+        "ln_f": L.norm_spec(cfg.d_model),
+    }
+
+
+def _attn_mixer(lp_attn, h, cfg, positions):
+    q, k, v = L.qkv_project(lp_attn, h, cfg, positions)
+    attn = L.blocked_causal_attention(q, k, v, cfg, window=cfg.sliding_window)
+    return L.out_project(lp_attn, attn, cfg)
+
+
+# --------------------------------------------------------------- train ----
+
+def hybrid_forward_train(params, tokens, cfg: ArchConfig, dims: Dims):
+    x = L.embed_lookup(params["embed"], tokens, cfg)
+    x = lsc(x, "batch", "seq", None)
+    positions = jnp.arange(x.shape[1])
+    kinds = _layer_kinds(cfg)
+    is_attn = jnp.asarray([kinds[2 * i][0] == "attn"
+                           for i in range(cfg.num_layers // 2)])
+
+    def even_sub(pp, flag, xx):
+        h = L.apply_norm(pp["ln1a"], xx, cfg)
+        y = jax.lax.cond(
+            flag,
+            lambda hh: _attn_mixer(pp["attn"], hh, cfg, positions),
+            lambda hh: M.mamba_forward(pp["mamba_a"], hh, cfg, dims)[0],
+            h)
+        xx = xx + y
+        h2 = L.apply_norm(pp["ln2a"], xx, cfg)
+        return xx + L.mlp_apply(pp["mlp"], h2, cfg)
+
+    def odd_sub(pp, xx):
+        h = L.apply_norm(pp["ln1b"], xx, cfg)
+        y, _ = M.mamba_forward(pp["mamba_b"], h, cfg, dims)
+        xx = xx + y
+        h2 = L.apply_norm(pp["ln2b"], xx, cfg)
+        return xx + MOE.moe_apply(pp["moe"], h2, cfg, dims, "train")
+
+    nothing = jax.checkpoint_policies.nothing_saveable
+    even_sub = jax.checkpoint(even_sub, policy=nothing, static_argnums=())
+    odd_sub = jax.checkpoint(odd_sub, policy=nothing)
+
+    def body(x, xs):
+        pp, flag = xs
+        x = even_sub(pp, flag, x)
+        x = odd_sub(pp, x)
+        return x, None
+    body = jax.checkpoint(body, policy=nothing)
+    x, _ = jax.lax.scan(body, x, (params["pairs"], is_attn))
+    return L.apply_norm(params["ln_f"], x, cfg)
+
+
+def hybrid_train_loss(params, batch, cfg: ArchConfig, dims: Dims):
+    from repro.models.transformer import chunked_lm_loss
+    x = hybrid_forward_train(params, batch["tokens"], cfg, dims)
+    return chunked_lm_loss(params["embed"], x, batch["labels"], cfg)
+
+
+# ----------------------------------------------- prefill/decode (exact) ----
+
+def _layer_params(params, i):
+    """Static slice of layer i's parameters out of the pair stack."""
+    pp = jax.tree.map(lambda a: a[i // 2], params["pairs"])
+    if i % 2 == 0:
+        return {"ln1": pp["ln1a"], "attn": pp["attn"], "mamba": pp["mamba_a"],
+                "ln2": pp["ln2a"], "mlp": pp["mlp"]}
+    return {"ln1": pp["ln1b"], "mamba": pp["mamba_b"],
+            "ln2": pp["ln2b"], "moe": pp["moe"]}
+
+
+def _serve_layer(lp, kind_mixer, kind_mlp, x, cfg, dims, mode, positions,
+                 cache_len, lc):
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    new_cache = {}
+    if kind_mixer == "attn":
+        q, k, v = L.qkv_project(lp["attn"], h, cfg, positions)
+        if mode == "decode":
+            sc = L.cache_write(lc["kv"], k, v, positions[0])
+            y = L.decode_attention(q, sc, positions[0], cfg.sliding_window)
+            new_cache["kv"] = sc
+        else:
+            y = L.blocked_causal_attention(q, k, v, cfg,
+                                           window=cfg.sliding_window)
+            sc = L.make_kv_cache(x.shape[0], cache_len, dims, k.dtype,
+                                 quant=cfg.kv_quant)
+            new_cache["kv"] = L.cache_prefill(sc, k, v, 0)
+        x = x + L.out_project(lp["attn"], y, cfg)
+    else:
+        state = lc["ssm_state"] if mode == "decode" else None
+        y, new_state = M.mamba_forward(lp["mamba"], h, cfg, dims, state=state)
+        new_cache["ssm_state"] = new_state
+        x = x + y
+    h2 = L.apply_norm(lp["ln2"], x, cfg)
+    if kind_mlp == "moe":
+        y = MOE.moe_apply(lp["moe"], h2, cfg, dims, mode)
+    else:
+        y = L.mlp_apply(lp["mlp"], h2, cfg)
+    return x + y, new_cache
+
+
+def hybrid_prefill(params, batch, cfg: ArchConfig, dims: Dims, cache_len: int):
+    tokens = batch["tokens"]
+    x = L.embed_lookup(params["embed"], tokens, cfg)
+    x = lsc(x, "batch", "seq", None)
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    kinds = _layer_kinds(cfg)
+    caches = {}
+    for i, (mixer, mlp) in enumerate(kinds):
+        lp = _layer_params(params, i)
+        x, c = _serve_layer(lp, mixer, mlp, x, cfg, dims, "prefill",
+                            positions, cache_len, None)
+        caches[f"layer_{i:02d}"] = c
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    last = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+    return last, {"layers": caches, "pos": jnp.asarray(S, jnp.int32)}
+
+
+def hybrid_decode_step(params, cache, tokens, cfg: ArchConfig, dims: Dims):
+    x = L.embed_lookup(params["embed"], tokens, cfg)
+    x = lsc(x, "batch", "seq_noshard", None)
+    pos = cache["pos"]
+    positions = pos[None].astype(jnp.int32)
+    kinds = _layer_kinds(cfg)
+    new_caches = {}
+    for i, (mixer, mlp) in enumerate(kinds):
+        lp = _layer_params(params, i)
+        x, c = _serve_layer(lp, mixer, mlp, x, cfg, dims, "decode",
+                            positions, 0, cache["layers"][f"layer_{i:02d}"])
+        new_caches[f"layer_{i:02d}"] = c
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"layers": new_caches, "pos": pos + 1}
+
+
+def hybrid_init_cache(batch: int, cache_len: int, cfg: ArchConfig,
+                      dims: Dims, dtype):
+    caches = {}
+    for i, (mixer, _) in enumerate(_layer_kinds(cfg)):
+        if mixer == "attn":
+            caches[f"layer_{i:02d}"] = {
+                "kv": L.make_kv_cache(batch, cache_len, dims, dtype,
+                                      quant=cfg.kv_quant)}
+        else:
+            caches[f"layer_{i:02d}"] = {
+                "ssm_state": M.mamba_state_shapes(batch, cfg, dims, dtype)}
+    return {"layers": caches, "pos": jnp.asarray(0, jnp.int32)}
+
+
+def hybrid_cache_axes(cfg: ArchConfig) -> dict:
+    one = {}
+    for i, (mixer, _) in enumerate(_layer_kinds(cfg)):
+        if mixer == "attn":
+            one[f"layer_{i:02d}"] = {"kv": L.kv_cache_axes(cfg.kv_quant)}
+        else:
+            one[f"layer_{i:02d}"] = {"ssm_state": M.mamba_state_axes()}
+    return {"layers": one, "pos": ()}

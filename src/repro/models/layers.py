@@ -1,0 +1,411 @@
+"""Core transformer layers: norms, rotary, MLP, embedding, GQA attention
+(blocked/flash-style with optional sliding window), decode-with-cache.
+
+Conventions:
+  x       : (B, S, D)
+  q       : (B, S, K, G, H)   K = kv heads (mesh-padded), G = q-per-kv group
+  k, v    : (B, S, K, H)
+  scores  : (B, K, G, Sq, Skv)
+Softmax always in float32. Matmuls accumulate in float32 via
+preferred_element_type.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Dims
+from repro.models.params import PSpec
+from repro.sharding.logical import lsc
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def cdt(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+def cast(x, cfg: ArchConfig):
+    return x.astype(cdt(cfg))
+
+
+# ---------------------------------------------------------------- norms ----
+
+def norm_spec(d: int) -> PSpec:
+    return PSpec((d,), ("embed_noshard",), init="ones")
+
+
+def apply_norm(scale, x, cfg: ArchConfig):
+    xf = x.astype(F32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        xf = xf - mu
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + cfg.norm_eps) * scale.astype(F32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps=1e-6):
+    """qk-norm over the last (head) dim; scale: (H,)."""
+    xf = x.astype(F32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rotary ----
+
+def rope(x, positions, theta: float):
+    """x: (..., H); positions broadcastable against x.shape[:-1]."""
+    H = x.shape[-1]
+    half = H // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=F32) / half))
+    ang = positions.astype(F32)[..., None] * freqs
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half].astype(F32), x[..., half:2 * half].astype(F32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([r1, r2], axis=-1)
+    if 2 * half < H:                       # odd head dim: pass-through tail
+        out = jnp.concatenate([out, x[..., 2 * half:].astype(F32)], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope_qk(q, k, positions, theta):
+    """q: (B,S,K,G,H), k: (B,S,K,H); positions (S,)."""
+    ang_pos = positions
+    q = rope(q, ang_pos[None, :, None, None], theta)
+    k = rope(k, ang_pos[None, :, None], theta)
+    return q, k
+
+
+# ---------------------------------------------------------------- MLP ----
+
+def mlp_specs(cfg: ArchConfig, d_ff: int) -> dict:
+    d = cfg.d_model
+    gated = cfg.mlp_activation == "silu"
+    s = {
+        "w1": PSpec((d, d_ff), ("embed", "ffn")),
+        "w2": PSpec((d_ff, d), ("ffn", "embed")),
+    }
+    if gated:
+        s["w3"] = PSpec((d, d_ff), ("embed", "ffn"))
+    return s
+
+
+def mlp_apply(p, x, cfg: ArchConfig):
+    dt = cdt(cfg)
+    x = gather_seq(x)
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(dt))
+    h = lsc(h, "batch", "seq_noshard", "ffn")
+    if cfg.mlp_activation == "silu":
+        u = jnp.einsum("bsd,df->bsf", x, p["w3"].astype(dt))
+        h = jax.nn.silu(h) * u
+    elif cfg.mlp_activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    elif cfg.mlp_activation == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(cfg.mlp_activation)
+    w2 = p["w2"].astype(dt)
+    if _seq_is_sharded():
+        y = _row_parallel_rs(h, w2, "bsf,fd->bsd",
+                             (None, None, "model"), ("model", None))
+    else:
+        y = jnp.einsum("bsf,fd->bsd", h, w2)
+    return lsc(y, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------- embed ----
+
+def embed_specs(dims: Dims) -> dict:
+    d = dims.cfg.d_model
+    return {
+        "table": PSpec((dims.vocab, d), ("vocab", "embed"), scale=0.02),
+        "unembed": PSpec((d, dims.vocab), ("embed", "vocab"), scale=0.02),
+    }
+
+
+def embed_lookup(p, tokens, cfg: ArchConfig):
+    e = jnp.take(p["table"].astype(cdt(cfg)), tokens, axis=0)
+    return lsc(e, "batch", "seq", None)
+
+
+def unembed(p, x, cfg: ArchConfig):
+    logits = jnp.einsum("bsd,dv->bsv", x, p["unembed"].astype(cdt(cfg)))
+    return lsc(logits, "batch", "seq_noshard", "vocab")
+
+
+# ----------------------------------------- explicit Megatron collectives ----
+# GSPMD lowers the sequence-parallel block boundary as all-reduce+slice in
+# several places (notably the BACKWARD of column-parallel projections and
+# the forward of row-parallel outputs) — 8-16x more link bytes than the
+# reduce-scatter the math wants. With this toggle the gather/scatter pair is
+# expressed as an explicit subset-manual shard_map whose AD transpose IS
+# psum_scatter / all_gather by construction. Off by default so the recorded
+# baselines stay reproducible; §Perf flips it. Numerically identical.
+EXPLICIT_SEQ_COLLECTIVES = False
+
+
+def _seq_is_sharded() -> bool:
+    from repro.sharding.logical import current_rules
+    rules = current_rules()
+    return (rules is not None and EXPLICIT_SEQ_COLLECTIVES
+            and rules.physical("seq") == "model")
+
+
+def gather_seq(x):
+    """(B, S/model, D) -> (B, S, D) via explicit all_gather (bwd = RS)."""
+    if not _seq_is_sharded():
+        return x
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.logical import current_rules
+    mesh = current_rules().mesh
+
+    def body(xl):
+        return jax.lax.all_gather(xl, "model", axis=1, tiled=True)
+    # inputs are dim-sharded over 'model' (never replicated), so the
+    # transpose (all_gather -> psum_scatter) is exact without VMA tracking
+    return jax.shard_map(body, mesh=mesh, axis_names={"model"},
+                         in_specs=P(None, "model", None),
+                         out_specs=P(None, None, None),
+                         check_vma=False)(x)
+
+
+def _row_parallel_rs(x, w, einsum_str, x_spec, w_spec):
+    """Row-parallel matmul with the contraction dim model-sharded: local
+    einsum + psum_scatter over the sequence (bwd = all_gather). The einsum
+    must live INSIDE the manual region or GSPMD all-reduces first."""
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.logical import current_rules
+    mesh = current_rules().mesh
+
+    def body(xl, wl):
+        y = jnp.einsum(einsum_str, xl, wl)
+        return jax.lax.psum_scatter(y, "model", scatter_dimension=1,
+                                    tiled=True)
+    return jax.shard_map(body, mesh=mesh, axis_names={"model"},
+                         in_specs=(P(*x_spec), P(*w_spec)),
+                         out_specs=P(None, "model", None),
+                         check_vma=False)(x, w)
+
+
+# ------------------------------------------------------------- attention ----
+
+def attention_specs(cfg: ArchConfig, dims: Dims) -> dict:
+    d, hd = cfg.d_model, dims.head_dim
+    s = {
+        "wq": PSpec((d, dims.kv_heads, dims.q_group, hd),
+                    ("embed", "kv_heads", "q_group", "head_dim")),
+        "wk": PSpec((d, dims.kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": PSpec((d, dims.kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": PSpec((dims.kv_heads, dims.q_group, hd, d),
+                    ("kv_heads", "q_group", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = PSpec((hd,), ("head_dim",), init="ones")
+        s["k_norm"] = PSpec((hd,), ("head_dim",), init="ones")
+    return s
+
+
+def qkv_project(p, x, cfg: ArchConfig, positions):
+    dt = cdt(cfg)
+    x = gather_seq(x)
+    q = jnp.einsum("bsd,dkgh->bskgh", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dkh->bskh", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dkh->bskh", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    q, k = rope_qk(q, k, positions, cfg.rope_theta)
+    q = lsc(q, "batch", "seq_noshard", "kv_heads", None, None)
+    k = lsc(k, "batch", "seq_noshard", "kv_heads", None)
+    v = lsc(v, "batch", "seq_noshard", "kv_heads", None)
+    return q, k, v
+
+
+def out_project(p, attn, cfg: ArchConfig):
+    wo = p["wo"].astype(cdt(cfg))
+    if _seq_is_sharded():
+        y = _row_parallel_rs(attn, wo, "bskgh,kghd->bsd",
+                             (None, None, "model", None, None),
+                             ("model", None, None, None))
+    else:
+        y = jnp.einsum("bskgh,kghd->bsd", attn, wo)
+    return lsc(y, "batch", "seq", None)
+
+
+def _attn_core(qc, kc, vc, qpos, kpos, window: Optional[int], scale: float):
+    """qc: (B,c,K,G,H); kc/vc: (B,L,K,H); qpos: (c,), kpos: (L,)."""
+    s = jnp.einsum("bqkgh,blkh->bkgql", qc, kc,
+                   preferred_element_type=F32) * scale
+    mask = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(vc.dtype)
+    return jnp.einsum("bkgql,blkh->bqkgh", p, vc, preferred_element_type=F32
+                      ).astype(vc.dtype)
+
+
+def blocked_causal_attention(q, k, v, cfg: ArchConfig, *, window=None,
+                             q_offset=0, kv_offset=0):
+    """Flash-style q-chunked causal attention; slides the KV window when
+    `window` is set (sub-quadratic memory & FLOPs for SWA)."""
+    B, Sq, K, G, H = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / (H ** 0.5)
+    qpos_all = q_offset + jnp.arange(Sq)
+    kpos_all = kv_offset + jnp.arange(Skv)
+    chunk = cfg.attn_chunk
+    if Sq <= chunk or Sq % chunk != 0:
+        out = _attn_core(q, k, v, qpos_all, kpos_all, window, scale)
+        return out
+
+    n = Sq // chunk
+    use_slide = window is not None and Skv > window + chunk
+    L = window + chunk if use_slide else Skv
+
+    qcs = q.reshape(B, n, chunk, K, G, H).transpose(1, 0, 2, 3, 4, 5)
+    qpos = qpos_all.reshape(n, chunk)
+
+    def body(_, xs):
+        qc, qp = xs
+        if use_slide:
+            start = jnp.clip(qp[0] - kv_offset - window + 1, 0, Skv - L)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, L, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, L, axis=1)
+            kp = kv_offset + start + jnp.arange(L)
+        else:
+            kc, vc, kp = k, v, kpos_all
+        return None, _attn_core(qc, kc, vc, qp, kp, window, scale)
+
+    # flash-style backward: recompute per-chunk probabilities instead of
+    # keeping (B,K,G,chunk,Skv) score tensors alive for every chunk
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = jax.lax.scan(body, None, (qcs, qpos))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, K, G, H)
+    return out
+
+
+def cross_attention(q, k, v):
+    """Full (unmasked) attention — whisper decoder->encoder."""
+    H = q.shape[-1]
+    s = jnp.einsum("bqkgh,blkh->bkgql", q, k,
+                   preferred_element_type=F32) / (H ** 0.5)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgql,blkh->bqkgh", p, v,
+                      preferred_element_type=F32).astype(v.dtype)
+
+
+# ---------------------------------------------------------------- cache ----
+# Optional int8 KV storage ("kv_quant"): per-(b, slot, head) symmetric
+# scales; halves the decode memory-roofline term (weights/KV reads dominate
+# decode). Quantization error validated against the fp cache in tests.
+
+def _kv_q(x):
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale.squeeze(-1).astype(jnp.float32)
+
+
+def _kv_dq(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def make_kv_cache(batch: int, cache_len: int, dims: Dims, dtype,
+                  quant: bool = False) -> dict:
+    shp = (batch, cache_len, dims.kv_heads, dims.head_dim)
+    if quant:
+        return {
+            "k": jnp.zeros(shp, jnp.int8),
+            "v": jnp.zeros(shp, jnp.int8),
+            "k_s": jnp.zeros(shp[:-1], jnp.float32),
+            "v_s": jnp.zeros(shp[:-1], jnp.float32),
+            "slot_pos": jnp.full((cache_len,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros(shp, dtype),
+        "v": jnp.zeros(shp, dtype),
+        "slot_pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def kv_cache_axes(quant: bool = False) -> dict:
+    ax = {
+        "k": ("batch", None, "kv_heads", None),
+        "v": ("batch", None, "kv_heads", None),
+        "slot_pos": (None,),
+    }
+    if quant:
+        ax["k_s"] = ("batch", None, "kv_heads")
+        ax["v_s"] = ("batch", None, "kv_heads")
+    return ax
+
+
+def cache_write(cache: dict, k1, v1, pos):
+    """Write one step (B,1,K,H) at ring slot pos % L."""
+    L = cache["k"].shape[1]
+    slot = jnp.mod(pos, L)
+    out = dict(cache)
+    if "k_s" in cache:
+        kq, ks = _kv_q(k1)
+        vq, vs = _kv_q(v1)
+        out["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, 1)
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, 1)
+        out["k_s"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_s"], ks, slot, 1)
+        out["v_s"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v_s"], vs, slot, 1)
+    else:
+        out["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1, slot, 1)
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1, slot, 1)
+    out["slot_pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], pos[None].astype(jnp.int32), slot, axis=0)
+    return out
+
+
+def cache_prefill(cache: dict, k, v, start=0):
+    """Bulk write (B,S,K,H) for prefill; assumes S <= L and start==0."""
+    S = k.shape[1]
+    out = dict(cache)
+    if "k_s" in cache:
+        kq, ks = _kv_q(k)
+        vq, vs = _kv_q(v)
+        out["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, start, 1)
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, start, 1)
+        out["k_s"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_s"], ks, start, 1)
+        out["v_s"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v_s"], vs, start, 1)
+    else:
+        out["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, start, 1)
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, start, 1)
+    out["slot_pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], start + jnp.arange(S, dtype=jnp.int32), start,
+        axis=0)
+    return out
+
+
+def decode_attention(q, cache: dict, pos, window: Optional[int]):
+    """q: (B,1,K,G,H) attending over the ring cache; pos = current position."""
+    H = q.shape[-1]
+    if "k_s" in cache:
+        kc = _kv_dq(cache["k"], cache["k_s"], q.dtype)
+        vc = _kv_dq(cache["v"], cache["v_s"], q.dtype)
+        sp = cache["slot_pos"]
+    else:
+        kc, vc, sp = cache["k"], cache["v"], cache["slot_pos"]
+    s = jnp.einsum("bqkgh,blkh->bkgql", q, kc,
+                   preferred_element_type=F32) / (H ** 0.5)
+    valid = (sp >= 0) & (sp <= pos)
+    if window is not None:
+        valid &= (pos - sp) < window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(vc.dtype)
+    return jnp.einsum("bkgql,blkh->bqkgh", p, vc,
+                      preferred_element_type=F32).astype(vc.dtype)

@@ -1,0 +1,135 @@
+"""Mamba (selective SSM) block — used by the jamba hybrid architecture.
+
+Training/prefill uses a chunked associative scan (lax.scan over time chunks,
+`associative_scan` inside each chunk) so peak memory is O(chunk) not O(S).
+Decode carries (conv_state, ssm_state) and runs the exact recurrence.
+
+Sharding: d_inner is tensor-parallel over 'model'; the scan itself is
+embarrassingly parallel over d_inner so no collectives appear between the
+in-projection (column-parallel) and out-projection (row-parallel psum).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Dims
+from repro.models.params import PSpec
+from repro.sharding.logical import lsc
+
+F32 = jnp.float32
+
+
+def _dt_rank(cfg: ArchConfig) -> int:
+    return max(1, (cfg.d_model + 15) // 16)
+
+
+def mamba_specs(cfg: ArchConfig, dims: Dims) -> dict:
+    d, din, ds = cfg.d_model, dims.d_inner, cfg.mamba_d_state
+    dr = _dt_rank(cfg)
+    return {
+        "in_proj": PSpec((d, 2 * din), ("embed", "inner")),
+        "conv_w": PSpec((cfg.mamba_d_conv, din), ("conv", "inner"), scale=0.1),
+        "conv_b": PSpec((din,), ("inner",), init="zeros"),
+        "x_proj": PSpec((din, dr + 2 * ds), ("inner", None)),
+        "dt_proj": PSpec((dr, din), (None, "inner"), scale=0.1),
+        "dt_bias": PSpec((din,), ("inner",), init="zeros"),
+        "a_log": PSpec((din, ds), ("inner", "dstate"), init="zeros"),
+        "d_skip": PSpec((din,), ("inner",), init="ones"),
+        "out_proj": PSpec((din, d), ("inner", "embed")),
+    }
+
+
+def _ssm_inputs(p, xc, cfg: ArchConfig, dt_):
+    """xc: (B, S, Din) post-conv activations -> (a, bx, c) scan operands."""
+    ds = cfg.mamba_d_state
+    dr = _dt_rank(cfg)
+    proj = jnp.einsum("bsd,dr->bsr", xc, p["x_proj"].astype(dt_))
+    dt_raw, b_ssm, c_ssm = jnp.split(proj, [dr, dr + ds], axis=-1)
+    dt = jnp.einsum("bsr,rd->bsd", dt_raw, p["dt_proj"].astype(dt_))
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))  # (B,S,Din)
+    a = -jnp.exp(p["a_log"].astype(F32))                             # (Din, ds)
+    da = jnp.exp(dt[..., None] * a[None, None])                      # (B,S,Din,ds)
+    bx = (dt * xc.astype(F32))[..., None] * b_ssm.astype(F32)[:, :, None, :]
+    return da, bx, c_ssm.astype(F32)
+
+
+def _chunk_scan(da, bx, h0):
+    """Associative scan within a chunk; returns (h_all, h_last).
+    da/bx: (B, c, Din, ds); h0: (B, Din, ds)."""
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    a_s, b_s = jax.lax.associative_scan(comb, (da, bx), axis=1)
+    h_all = a_s * h0[:, None] + b_s
+    return h_all, h_all[:, -1]
+
+
+def mamba_forward(p, x, cfg: ArchConfig, dims: Dims, state=None):
+    """x: (B,S,D). Returns (y, new_state). state=None => fresh (prefill/train);
+    state = {conv: (B, d_conv-1, Din), ssm: (B, Din, ds)} for continuation."""
+    dt_ = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    B, S, D = x.shape
+    din, ds, dc = dims.d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    xz = lsc(xz, "batch", "seq_noshard", "inner")
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv (kernel dc)
+    conv_in = state["conv"] if state is not None else jnp.zeros((B, dc - 1, din), dt_)
+    xpad = jnp.concatenate([conv_in.astype(dt_), xi], axis=1)
+    w = p["conv_w"].astype(dt_)
+    xc = sum(xpad[:, i:i + S] * w[i] for i in range(dc)) + p["conv_b"].astype(dt_)
+    xc = jax.nn.silu(xc)
+    new_conv = xpad[:, -(dc - 1):] if dc > 1 else conv_in
+
+    h0 = state["ssm"] if state is not None else jnp.zeros((B, din, ds), F32)
+
+    chunk = min(cfg.scan_chunk, S)
+    if S % chunk == 0 and S > chunk:
+        n = S // chunk
+        xc_c = xc.reshape(B, n, chunk, din).transpose(1, 0, 2, 3)
+
+        def body(h, xcc):
+            # derive (da, bx, c) inside the chunk: the full-sequence
+            # (B,S,din,ds) discretized operands never materialize
+            xcc = lsc(xcc, "batch", None, "inner")
+            da, bx, c_ssm = _ssm_inputs(p, xcc, cfg, dt_)
+            da = lsc(da, "batch", None, "inner", None)
+            bx = lsc(bx, "batch", None, "inner", None)
+            h_all, h_last = _chunk_scan(da, bx, h)
+            yc = jnp.einsum("bsdn,bsn->bsd", h_all, c_ssm)
+            yc = lsc(yc, "batch", None, "inner")
+            return lsc(h_last, "batch", "inner", None), yc
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+        h_last, ys = jax.lax.scan(body, h0, xc_c)
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, din).astype(dt_)
+        y = lsc(y, "batch", "seq_noshard", "inner")
+    else:
+        da, bx, c_ssm = _ssm_inputs(p, xc, cfg, dt_)
+        h_all, h_last = _chunk_scan(da, bx, h0)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, c_ssm).astype(dt_)
+    y = y + p["d_skip"].astype(dt_) * xc
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(dt_))
+    out = lsc(out, "batch", "seq", None)
+    return out, {"conv": new_conv, "ssm": h_last}
+
+
+def mamba_decode_step(p, x1, cfg: ArchConfig, dims: Dims, state):
+    """x1: (B,1,D) single step; exact recurrence (shares mamba_forward)."""
+    return mamba_forward(p, x1, cfg, dims, state=state)
+
+
+def mamba_state_shapes(batch: int, cfg: ArchConfig, dims: Dims, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, dims.d_inner), dtype),
+        "ssm": jnp.zeros((batch, dims.d_inner, cfg.mamba_d_state), F32),
+    }
+
+
+def mamba_state_axes() -> dict:
+    return {"conv": ("batch", None, "inner"), "ssm": ("batch", "inner", None)}

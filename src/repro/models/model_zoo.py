@@ -1,0 +1,159 @@
+"""ModelBundle: a uniform functional API over all 10 architectures.
+
+  bundle.init_params(key)          -> param pytree (or eval_shape for dry-run)
+  bundle.param_logical_axes()      -> matching pytree of logical axis tuples
+  bundle.train_loss(params, batch) -> scalar loss
+  bundle.prefill(params, batch)    -> (last_logits, cache)
+  bundle.decode_step(params, cache, tokens) -> (logits, cache')
+  bundle.init_cache(batch, cache_len)       -> zeroed cache pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, Dims, ShapeConfig, resolve_dims
+from repro.models import hybrid as HY
+from repro.models import params as PR
+from repro.models import transformer as TF
+from repro.models import xlstm_model as XM
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    dims: Dims
+    specs: dict
+    train_loss: Callable
+    prefill: Callable              # (params, batch, cache_len)
+    decode_step: Callable
+    init_cache: Callable           # (batch, cache_len, dtype)
+    cache_axes: Callable
+
+    def init_params(self, key, dtype=jnp.float32):
+        return PR.init_params(self.specs, key, dtype)
+
+    def abstract_params(self, dtype=jnp.float32):
+        return PR.abstract_params(self.specs, dtype)
+
+    def param_logical_axes(self):
+        return PR.param_axes(self.specs)
+
+    def param_count(self) -> int:
+        return PR.param_count(self.specs)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE experts scaled by k/E)."""
+        total = 0
+        for path, s in PR._paths(self.specs):
+            n = int(np.prod(s.shape))
+            leaf = path.rsplit("/", 1)[-1]
+            if "/moe/" in path and leaf in ("w1", "w2", "w3"):
+                frac = self.cfg.experts_per_token / max(self.cfg.num_experts, 1)
+                n = int(n * frac)
+            total += n
+        return total
+
+
+def build_model(cfg: ArchConfig, tp: int = 1,
+                moe_mode: Optional[str] = None) -> ModelBundle:
+    dims = resolve_dims(cfg, tp, moe_mode)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        specs = TF.decoder_specs(cfg, dims)
+        return ModelBundle(
+            cfg=cfg, dims=dims, specs=specs,
+            train_loss=partial(TF.decoder_train_loss, cfg=cfg, dims=dims),
+            prefill=partial(TF.decoder_prefill, cfg=cfg, dims=dims),
+            decode_step=partial(TF.decoder_decode_step, cfg=cfg, dims=dims),
+            init_cache=partial(TF.decoder_init_cache, cfg=cfg, dims=dims),
+            cache_axes=partial(TF.decoder_cache_axes, cfg),
+        )
+    if fam == "audio":
+        specs = TF.encdec_specs(cfg, dims)
+        return ModelBundle(
+            cfg=cfg, dims=dims, specs=specs,
+            train_loss=partial(TF.encdec_train_loss, cfg=cfg, dims=dims),
+            prefill=partial(TF.encdec_prefill, cfg=cfg, dims=dims),
+            decode_step=partial(TF.encdec_decode_step, cfg=cfg, dims=dims),
+            init_cache=partial(TF.encdec_init_cache, cfg=cfg, dims=dims),
+            cache_axes=partial(TF.encdec_cache_axes, cfg),
+        )
+    if fam == "hybrid":
+        specs = HY.hybrid_specs(cfg, dims)
+        return ModelBundle(
+            cfg=cfg, dims=dims, specs=specs,
+            train_loss=partial(HY.hybrid_train_loss, cfg=cfg, dims=dims),
+            prefill=partial(HY.hybrid_prefill, cfg=cfg, dims=dims),
+            decode_step=partial(HY.hybrid_decode_step, cfg=cfg, dims=dims),
+            init_cache=partial(HY.hybrid_init_cache, cfg=cfg, dims=dims),
+            cache_axes=partial(HY.hybrid_cache_axes, cfg),
+        )
+    if fam == "ssm":
+        specs = XM.xlstm_specs(cfg, dims)
+        return ModelBundle(
+            cfg=cfg, dims=dims, specs=specs,
+            train_loss=partial(XM.xlstm_train_loss, cfg=cfg, dims=dims),
+            prefill=partial(XM.xlstm_prefill, cfg=cfg, dims=dims),
+            decode_step=partial(XM.xlstm_decode_step, cfg=cfg, dims=dims),
+            init_cache=partial(XM.xlstm_init_cache, cfg=cfg, dims=dims),
+            cache_axes=partial(XM.xlstm_cache_axes, cfg),
+        )
+    raise ValueError(fam)
+
+
+# ------------------------------------------------------- batch specs ----
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    d = {}
+    if cfg.family == "vlm":
+        st = S - cfg.num_patches
+        d["tokens"] = jax.ShapeDtypeStruct((B, st), i32)
+        d["patches"] = jax.ShapeDtypeStruct((B, cfg.num_patches, cfg.d_model), bf16)
+        if shape.kind == "train":
+            d["labels"] = jax.ShapeDtypeStruct((B, st), i32)
+    elif cfg.family == "audio":
+        d["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        d["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), bf16)
+        if shape.kind == "train":
+            d["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    else:
+        d["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if shape.kind == "train":
+            d["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    if shape.kind == "decode":
+        d = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    return d
+
+
+def batch_logical_axes(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    ax = {}
+    for k in batch_specs(cfg, shape):
+        if k in ("tokens", "labels"):
+            ax[k] = ("batch", None)
+        else:
+            ax[k] = ("batch", None, None)
+    return ax
+
+
+def make_concrete_batch(cfg: ArchConfig, shape: ShapeConfig, key) -> dict:
+    """Random concrete inputs (smoke tests / examples)."""
+    out = {}
+    for name, sds in batch_specs(cfg, shape).items():
+        key, k = jax.random.split(key)
+        if sds.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, sds.shape, 0, cfg.vocab_size,
+                                           jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, sds.shape, jnp.float32).astype(
+                sds.dtype)
+    return out

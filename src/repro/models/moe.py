@@ -1,0 +1,413 @@
+"""Mixture-of-Experts layers with three production dispatch modes.
+
+  "ep"    — expert parallelism over the 'model' mesh axis.
+            * train/prefill: fixed-capacity all-to-all dispatch (shard_map +
+              lax.all_to_all), tokens sequence-sharded over 'model'.
+            * decode: gather mode — every shard routes all (few) tokens,
+              computes only its local experts, psum('model') combines.
+  "tp"    — Megatron-style: every expert's d_ff sharded over 'model';
+            all-gather tokens over 'model', per-expert capacity bucketing,
+            psum_scatter back to sequence-sharded. Used when E % tp != 0
+            (mixtral: 8 experts on a 16-way model axis).
+  "dense" — exact reference (computes every expert for every token, gate-
+            weighted). Used for tiny smoke tests and as the numeric oracle.
+
+Expert weights are ZeRO-3 sharded on d_model over 'data' and gathered
+(bf16) per layer inside shard_map — the transpose of that all-gather is the
+gradient reduce-scatter, i.e. exactly ZeRO-3 semantics.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, Dims
+from repro.models.params import PSpec
+from repro.sharding.logical import current_rules, lsc
+
+F32 = jnp.float32
+
+
+def moe_specs(cfg: ArchConfig, dims: Dims) -> dict:
+    d, f, e = cfg.d_model, dims.d_ff, dims.experts
+    if dims.moe_mode == "ep2":
+        # hierarchical EP: expert e's d_ff is pre-split across its tpi
+        # sibling ranks -> store as (E*tpi, D, F/tpi) so a plain 'model'
+        # sharding of axis 0 lands each rank exactly its F-chunk.
+        tpi = dims.tp // e
+        ax = ("experts", "embed", "ffn_noshard")
+        return {
+            "router": PSpec((d, e), ("embed_noshard", "experts_noshard")),
+            "w1": PSpec((e * tpi, d, f // tpi), ax),
+            "w2": PSpec((e * tpi, f // tpi, d), (ax[0], ax[2], ax[1])),
+            "w3": PSpec((e * tpi, d, f // tpi), ax),
+        }
+    if dims.moe_mode == "tp":
+        ax = ("experts_noshard", "embed", "ffn")
+    else:  # ep / dense
+        ax = ("experts", "embed", "ffn_noshard")
+    return {
+        "router": PSpec((d, e), ("embed_noshard", "experts_noshard")),
+        "w1": PSpec((e,) + (d, f), ax),
+        "w2": PSpec((e, f, d), (ax[0], ax[2], ax[1])),
+        "w3": PSpec((e, d, f), ax),
+    }
+
+
+def _topk_gates(logits_f32, k):
+    """Returns (dense_gates (T,E) f32, topk_idx (T,k))."""
+    vals, idx = jax.lax.top_k(logits_f32, k)
+    w = jax.nn.softmax(vals, axis=-1)
+    E = logits_f32.shape[-1]
+    dense = jnp.sum(jax.nn.one_hot(idx, E, dtype=F32) * w[..., None], axis=-2)
+    return dense, idx, w
+
+
+def _capacity(tokens: int, k: int, e: int, cf: float) -> int:
+    return max(4, int(math.ceil(tokens * k / e * cf)))
+
+
+# ----------------------------------------------------------------- dense ----
+
+def _dense_moe(p, x, cfg: ArchConfig, dims: Dims, dt):
+    B, S, D = x.shape
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(dt),
+                        preferred_element_type=F32)
+    gates, _, _ = _topk_gates(logits, cfg.experts_per_token)
+    w1, w2, w3 = (p[n].astype(dt) for n in ("w1", "w2", "w3"))
+    h = jnp.einsum("bsd,edf->bsef", x, w1)
+    u = jnp.einsum("bsd,edf->bsef", x, w3)
+    h = jax.nn.silu(h) * u
+    y = jnp.einsum("bsef,efd->bsed", h, w2)
+    return jnp.einsum("bsed,bse->bsd", y, gates.astype(dt))
+
+
+# ------------------------------------------------------------ EP: a2a ----
+
+def _ep_a2a_shard(x, rw, w1, w2, w3, *, cfg: ArchConfig, dims: Dims, dt,
+                  data_axis):
+    """Per-shard body. x: (Bl, Sl, D); w*: (Eloc, Dl, F) ZeRO-3 blocks."""
+    tp, E = dims.tp, dims.experts
+    Eloc = E // tp
+    k = cfg.experts_per_token
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+
+    if data_axis is not None:
+        w1 = jax.lax.all_gather(w1.astype(dt), data_axis, axis=1, tiled=True)
+        w2 = jax.lax.all_gather(w2.astype(dt), data_axis, axis=2, tiled=True)
+        w3 = jax.lax.all_gather(w3.astype(dt), data_axis, axis=1, tiled=True)
+    else:
+        w1, w2, w3 = w1.astype(dt), w2.astype(dt), w3.astype(dt)
+
+    logits = jnp.einsum("td,de->te", xt, rw.astype(dt),
+                        preferred_element_type=F32)
+    _, idx, gw = _topk_gates(logits, k)
+
+    a = idx.reshape(-1)                       # (T*k,) global expert id
+    gflat = gw.reshape(-1)
+    onehot = jax.nn.one_hot(a, E, dtype=jnp.int32)
+    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1  # (T*k,)
+    Ce = _capacity(T, k, E, cfg.moe_cf)
+    keep = pos < Ce
+    dest = a // Eloc
+    eloc = a % Eloc
+    flat = (dest * Eloc + eloc) * Ce + pos
+    flat = jnp.where(keep, flat, tp * Eloc * Ce)  # dump slot
+
+    tok = jnp.arange(T * k) // k
+    xs = jnp.take(xt, tok, axis=0)                # (T*k, D)
+    buf = jnp.zeros((tp * Eloc * Ce + 1, D), dt).at[flat].set(xs)
+    buf = buf[: tp * Eloc * Ce].reshape(tp, Eloc, Ce, D)
+
+    recv = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=0)
+    toks = recv.transpose(1, 0, 2, 3).reshape(Eloc, tp * Ce, D)
+
+    h = jnp.einsum("etd,edf->etf", toks, w1)
+    u = jnp.einsum("etd,edf->etf", toks, w3)
+    h = jax.nn.silu(h) * u
+    y = jnp.einsum("etf,efd->etd", h, w2)
+
+    back = y.reshape(Eloc, tp, Ce, D).transpose(1, 0, 2, 3)
+    ret = jax.lax.all_to_all(back, "model", split_axis=0, concat_axis=0)
+    retf = jnp.concatenate(
+        [ret.reshape(tp * Eloc * Ce, D), jnp.zeros((1, D), dt)], axis=0)
+    y_asgn = jnp.take(retf, flat, axis=0)
+    y_asgn = y_asgn * (gflat * keep.astype(F32)).astype(dt)[:, None]
+    y_tok = jnp.sum(y_asgn.reshape(T, k, D), axis=1)
+    return y_tok.reshape(B, S, D)
+
+
+# --------------------------------------------------------- EP: gather ----
+
+def _ep_gather_shard(x, rw, w1, w2, w3, *, cfg: ArchConfig, dims: Dims, dt,
+                     data_axis):
+    """Decode path: x replicated over 'model'; each shard computes its local
+    experts for all tokens; psum('model') combines."""
+    tp, E = dims.tp, dims.experts
+    Eloc = E // tp
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    if data_axis is not None:
+        w1 = jax.lax.all_gather(w1.astype(dt), data_axis, axis=1, tiled=True)
+        w2 = jax.lax.all_gather(w2.astype(dt), data_axis, axis=2, tiled=True)
+        w3 = jax.lax.all_gather(w3.astype(dt), data_axis, axis=1, tiled=True)
+    else:
+        w1, w2, w3 = w1.astype(dt), w2.astype(dt), w3.astype(dt)
+    logits = jnp.einsum("td,de->te", xt, rw.astype(dt),
+                        preferred_element_type=F32)
+    gates, _, _ = _topk_gates(logits, cfg.experts_per_token)
+    e0 = jax.lax.axis_index("model") * Eloc
+    g_loc = jax.lax.dynamic_slice_in_dim(gates, e0, Eloc, axis=1)  # (T, Eloc)
+    h = jnp.einsum("td,edf->etf", xt, w1)
+    u = jnp.einsum("td,edf->etf", xt, w3)
+    h = jax.nn.silu(h) * u
+    y = jnp.einsum("etf,efd,te->td", h, w2, g_loc.astype(dt))
+    y = jax.lax.psum(y, "model")
+    return y.reshape(B, S, D)
+
+
+# ---------------------------------------- int8 dispatch (DeepSeek-style) ----
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _dispatch_a2a_q8(xs, flats, tp, Ce, dt):
+    """Scatter -> int8 all-to-all -> dequant, with a straight-through
+    backward (bf16 cotangent transpose routing). Forward dispatch bytes /2.
+    flats: (tpi, T*k) int32 destination slots."""
+    out, _ = _dispatch_q8_fwd(xs, flats, tp, Ce, dt)
+    return out
+
+
+def _dispatch_q8_fwd(xs, flats, tp, Ce, dt):
+    D = xs.shape[1]
+    s = jnp.maximum(jnp.max(jnp.abs(xs.astype(F32)), axis=-1,
+                            keepdims=True), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xs.astype(F32) / s), -127, 127).astype(jnp.int8)
+    buf = jnp.zeros((tp * Ce + 1, D), jnp.int8)
+    sbuf = jnp.zeros((tp * Ce + 1, 1), F32)
+    for i in range(flats.shape[0]):
+        buf = buf.at[flats[i]].set(q)
+        sbuf = sbuf.at[flats[i]].set(s)
+    recv = jax.lax.all_to_all(buf[: tp * Ce].reshape(tp, Ce, D),
+                              "model", split_axis=0, concat_axis=0)
+    srecv = jax.lax.all_to_all(sbuf[: tp * Ce].reshape(tp, Ce, 1),
+                               "model", split_axis=0, concat_axis=0)
+    toks = (recv.reshape(tp * Ce, D).astype(F32)
+            * srecv.reshape(tp * Ce, 1)).astype(dt)
+    return toks, flats
+
+
+def _dispatch_q8_bwd(tp, Ce, dt, res, g):
+    # transpose routing in bf16 (straight-through across quantization)
+    flats = res
+    D = g.shape[1]
+    back = jax.lax.all_to_all(g.reshape(tp, Ce, D), "model",
+                              split_axis=0, concat_axis=0)
+    gf = jnp.concatenate([back.reshape(tp * Ce, D),
+                          jnp.zeros((1, D), g.dtype)], axis=0)
+    d_xs = sum(jnp.take(gf, flats[i], axis=0)
+               for i in range(flats.shape[0]))
+    d_flats = jnp.zeros(flats.shape, jax.dtypes.float0)
+    return (d_xs.astype(dt), d_flats)
+
+
+_dispatch_a2a_q8.defvjp(_dispatch_q8_fwd, _dispatch_q8_bwd)
+
+
+# -------------------------------------------- hierarchical EP ("ep2") ----
+# tp % E == 0 (mixtral: 8 experts on 16-way model axis). Model rank
+# s = expert * tpi + f_slice, tpi = tp // E. Tokens stay sequence-sharded;
+# each routed token is sent (all-to-all over the FULL model axis) to all tpi
+# sibling ranks of its expert, which each apply their d_ff slice; the source
+# sums the tpi partial outputs. Send volume = tokens * k * tpi — far cheaper
+# than all-gathering the sequence, and capacities stay per-shard-small.
+
+def _ep2_a2a_shard(x, rw, w1, w2, w3, *, cfg: ArchConfig, dims: Dims, dt,
+                   data_axis):
+    """x: (Bl, Sl, D) seq-sharded; w*: (E, Dl, Fl) blocks (F model-sharded)."""
+    tp, E = dims.tp, dims.experts
+    tpi = tp // E
+    k = cfg.experts_per_token
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    if data_axis is not None:
+        w1 = jax.lax.all_gather(w1.astype(dt), data_axis, axis=1, tiled=True)
+        w2 = jax.lax.all_gather(w2.astype(dt), data_axis, axis=2, tiled=True)
+        w3 = jax.lax.all_gather(w3.astype(dt), data_axis, axis=1, tiled=True)
+    else:
+        w1, w2, w3 = w1.astype(dt), w2.astype(dt), w3.astype(dt)
+
+    logits = jnp.einsum("td,de->te", xt, rw.astype(dt),
+                        preferred_element_type=F32)
+    _, idx, gw = _topk_gates(logits, k)
+    a = idx.reshape(-1)                        # (T*k,) expert ids
+    gflat = gw.reshape(-1)
+    onehot = jax.nn.one_hot(a, E, dtype=jnp.int32)
+    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1
+    Ce = _capacity(T, k, E, cfg.moe_cf)
+    keep = pos < Ce
+    tok = jnp.arange(T * k) // k
+    xs = jnp.take(xt, tok, axis=0).astype(dt)  # (T*k, D)
+    # duplicate each assignment to all tpi sibling ranks of its expert
+    flats = []
+    for h in range(tpi):
+        dest = a * tpi + h
+        flats.append(jnp.where(keep, dest * Ce + pos, tp * Ce))
+    if cfg.moe_a2a_quant:
+        toks = _dispatch_a2a_q8(xs, jnp.stack(flats), tp, Ce, dt)
+    else:
+        buf = jnp.zeros((tp * Ce + 1, D), dt)
+        for flat in flats:
+            buf = buf.at[flat].set(xs)
+        buf = buf[: tp * Ce].reshape(tp, Ce, D)
+        recv = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=0)
+        toks = recv.reshape(tp * Ce, D)        # all for MY expert, F slice
+    w1e, w2e, w3e = w1[0], w2[0], w3[0]        # this rank's (D, F/tpi) chunk
+    h_ = jax.nn.silu(toks @ w1e) * (toks @ w3e)
+    y = h_ @ w2e                               # partial over F slice
+    back = y.reshape(tp, Ce, D)
+    ret = jax.lax.all_to_all(back, "model", split_axis=0, concat_axis=0)
+    retf = jnp.concatenate([ret.reshape(tp * Ce, D), jnp.zeros((1, D), dt)], 0)
+    acc = jnp.zeros((T * k, D), dt)
+    for flat in flats:                         # sum tpi partials
+        acc = acc + jnp.take(retf, flat, axis=0)
+    acc = acc * (gflat * keep.astype(F32)).astype(dt)[:, None]
+    y_tok = jnp.sum(acc.reshape(T, k, D), axis=1)
+    return y_tok.reshape(B, S, D)
+
+
+def _ep2_gather_shard(x, rw, w1, w2, w3, *, cfg: ArchConfig, dims: Dims, dt,
+                      data_axis):
+    """Decode: x replicated over 'model'; rank s computes expert s//tpi on
+    its F slice for all tokens; psum('model') sums experts and F partials."""
+    tp, E = dims.tp, dims.experts
+    tpi = tp // E
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D).astype(dt)
+    if data_axis is not None:
+        w1 = jax.lax.all_gather(w1.astype(dt), data_axis, axis=1, tiled=True)
+        w2 = jax.lax.all_gather(w2.astype(dt), data_axis, axis=2, tiled=True)
+        w3 = jax.lax.all_gather(w3.astype(dt), data_axis, axis=1, tiled=True)
+    else:
+        w1, w2, w3 = w1.astype(dt), w2.astype(dt), w3.astype(dt)
+    logits = jnp.einsum("td,de->te", xt, rw.astype(dt),
+                        preferred_element_type=F32)
+    gates, _, _ = _topk_gates(logits, cfg.experts_per_token)
+    me = jax.lax.axis_index("model") // tpi
+    ge = jax.lax.dynamic_index_in_dim(gates, me, axis=1, keepdims=False)
+    w1e, w2e, w3e = w1[0], w2[0], w3[0]
+    h_ = jax.nn.silu(xt @ w1e) * (xt @ w3e)
+    y = (h_ @ w2e) * ge.astype(dt)[:, None]
+    y = jax.lax.psum(y, "model")
+    return y.reshape(B, S, D)
+
+
+# ------------------------------------------------------------- TP mode ----
+
+def _tp_shard(x, rw, w1, w2, w3, *, cfg: ArchConfig, dims: Dims, dt,
+              data_axis, seq_sharded: bool):
+    """x: (Bl, Sl, D) seq-sharded (train/prefill) or replicated (decode).
+    w*: (E, Dl, Fl)."""
+    E = dims.experts
+    k = cfg.experts_per_token
+    if data_axis is not None:
+        w1 = jax.lax.all_gather(w1.astype(dt), data_axis, axis=1, tiled=True)
+        w2 = jax.lax.all_gather(w2.astype(dt), data_axis, axis=2, tiled=True)
+        w3 = jax.lax.all_gather(w3.astype(dt), data_axis, axis=1, tiled=True)
+    else:
+        w1, w2, w3 = w1.astype(dt), w2.astype(dt), w3.astype(dt)
+    if seq_sharded:
+        x = jax.lax.all_gather(x, "model", axis=1, tiled=True)
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = jnp.einsum("td,de->te", xt, rw.astype(dt),
+                        preferred_element_type=F32)
+    gates, _, _ = _topk_gates(logits, k)
+    Ce = _capacity(T, k, E, cfg.moe_cf)
+    Ce = min(Ce, T)
+    y = jnp.zeros((T, D), dt)
+    for e in range(E):                     # small E in tp mode (e.g. 8)
+        ge = gates[:, e]
+        gv, tidx = jax.lax.top_k(ge, Ce)   # capacity-select by gate weight
+        xe = jnp.take(xt, tidx, axis=0)    # (Ce, D)
+        h = jnp.einsum("td,df->tf", xe, w1[e])
+        u = jnp.einsum("td,df->tf", xe, w3[e])
+        h = jax.nn.silu(h) * u
+        ye = jnp.einsum("tf,fd->td", h, w2[e])
+        y = y.at[tidx].add(ye * gv.astype(dt)[:, None])
+    if seq_sharded:
+        y = jax.lax.psum_scatter(y.reshape(B, S, D), "model",
+                                 scatter_dimension=1, tiled=True)
+    else:
+        y = jax.lax.psum(y, "model").reshape(B, S, D)
+    return y
+
+
+# --------------------------------------------------------------- public ----
+
+def moe_apply(p, x, cfg: ArchConfig, dims: Dims, kind: str):
+    """kind: train | prefill | decode."""
+    dt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    rules = current_rules()
+    mode = dims.moe_mode
+    if rules is None or mode == "dense" or dims.tp == 1:
+        return _dense_moe(p, x, cfg, dims, dt)
+
+    mesh = rules.mesh
+    data_axis = "data" if "data" in mesh.axis_names and mesh.shape["data"] > 1 else None
+    batch_ax = rules.pspec(("batch",))[0]
+    seq_sharded = kind in ("train", "prefill")
+
+    if mode == "ep":
+        if seq_sharded:
+            body = partial(_ep_a2a_shard, cfg=cfg, dims=dims, dt=dt,
+                           data_axis=data_axis)
+            x_spec = P(batch_ax, "model", None)
+            out_spec = P(batch_ax, "model", None)
+        else:
+            body = partial(_ep_gather_shard, cfg=cfg, dims=dims, dt=dt,
+                           data_axis=data_axis)
+            x_spec = P(batch_ax, None, None)
+            out_spec = P(batch_ax, None, None)
+        w_spec = P("model", data_axis, None)
+    elif mode == "ep2":
+        body = partial(_ep2_a2a_shard if seq_sharded else _ep2_gather_shard,
+                       cfg=cfg, dims=dims, dt=dt, data_axis=data_axis)
+        x_spec = P(batch_ax, "model" if seq_sharded else None, None)
+        out_spec = x_spec
+        w_spec = P("model", data_axis, None)   # (E*tpi, D, F/tpi) storage
+    elif mode == "tp":
+        body = partial(_tp_shard, cfg=cfg, dims=dims, dt=dt,
+                       data_axis=data_axis, seq_sharded=seq_sharded)
+        x_spec = P(batch_ax, "model" if seq_sharded else None, None)
+        out_spec = x_spec
+        w_spec = P(None, data_axis, "model")
+    else:
+        raise ValueError(mode)
+
+    r_spec = P(None, None)
+    # w2 has (E, F, D) layout => its spec permutes the F and D axes
+    if mode in ("ep", "ep2"):
+        w2_spec = P("model", None, data_axis)
+    else:
+        w2_spec = P(None, "model", data_axis)
+    x = lsc(x, "batch", "seq" if seq_sharded else "seq_noshard", None)
+    # decode (gather/psum) paths produce data-invariant outputs that the
+    # static VMA checker cannot prove (batch may be replicated); they carry
+    # no autodiff, so the check is safely skipped there.
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(x_spec, r_spec, w_spec, w2_spec, w_spec),
+                       out_specs=out_spec, check_vma=seq_sharded)
+    return fn(x, p["router"], p["w1"], p["w2"], p["w3"])

@@ -1,0 +1,88 @@
+"""Parameter spec trees: one declaration yields init, logical axes, and
+abstract shapes (for the allocation-free dry-run)."""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: tuple
+    axes: tuple              # logical axis names, len == len(shape)
+    init: str = "normal"     # normal | zeros | ones
+    scale: float = 0.02
+    dtype: Any = None        # overrides the model param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def _leaf_key(key, path: str):
+    return jax.random.fold_in(key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
+
+
+def _paths(tree, prefix=""):
+    if is_spec(tree):
+        yield prefix, tree
+        return
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _paths(tree[k], f"{prefix}/{k}")
+        return
+    raise TypeError(f"bad spec tree node at {prefix}: {type(tree)}")
+
+
+def init_params(specs, key, default_dtype=jnp.float32):
+    """Materialize a spec tree into a pytree of arrays (deterministic)."""
+    def build(path: str, s: PSpec):
+        dt = s.dtype or default_dtype
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dt)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dt)
+        if s.init == "normal":
+            k = _leaf_key(key, path)
+            return (jax.random.normal(k, s.shape, jnp.float32) * s.scale).astype(dt)
+        raise ValueError(s.init)
+    return _map_with_path(specs, build)
+
+
+def abstract_params(specs, default_dtype=jnp.float32):
+    """ShapeDtypeStructs without allocation (dry-run path)."""
+    def build(path, s: PSpec):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype or default_dtype)
+    return _map_with_path(specs, build)
+
+
+def param_axes(specs):
+    """Pytree of logical-axis tuples matching the param tree structure."""
+    return _map_with_path(specs, lambda path, s: s.axes)
+
+
+def _map_with_path(tree, fn, prefix=""):
+    if is_spec(tree):
+        return fn(prefix, tree)
+    if isinstance(tree, dict):
+        return {k: _map_with_path(v, fn, f"{prefix}/{k}") for k, v in tree.items()}
+    raise TypeError(f"bad spec tree node at {prefix}: {type(tree)}")
+
+
+def stack_specs(specs, n: int, axis_name: str = "layers"):
+    """Prepend a stacked-layer dimension to every leaf (for scan-over-layers)."""
+    def f(path, s: PSpec):
+        return PSpec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale, s.dtype)
+    return _map_with_path(specs, f)
+
+
+def param_count(specs) -> int:
+    return int(sum(int(np.prod(s.shape)) for _, s in _paths(specs)))

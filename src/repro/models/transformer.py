@@ -1,0 +1,391 @@
+"""Decoder-only LM (dense / MoE / VLM-prefix) and encoder-decoder (whisper)
+transformers. Layers are stacked on a leading axis and applied with
+lax.scan (small HLO, natural remat unit)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Dims
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models.params import PSpec, stack_specs
+from repro.sharding.logical import lsc
+
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------- specs ----
+
+def decoder_layer_specs(cfg: ArchConfig, dims: Dims) -> dict:
+    s = {
+        "ln1": L.norm_spec(cfg.d_model),
+        "attn": L.attention_specs(cfg, dims),
+        "ln2": L.norm_spec(cfg.d_model),
+    }
+    if cfg.num_experts > 0 and cfg.moe_every == 1:
+        s["moe"] = MOE.moe_specs(cfg, dims)
+    else:
+        s["mlp"] = L.mlp_specs(cfg, dims.d_ff)
+    return s
+
+
+def decoder_specs(cfg: ArchConfig, dims: Dims) -> dict:
+    return {
+        "embed": L.embed_specs(dims),
+        "layers": stack_specs(decoder_layer_specs(cfg, dims), cfg.num_layers),
+        "ln_f": L.norm_spec(cfg.d_model),
+    }
+
+
+def encdec_specs(cfg: ArchConfig, dims: Dims) -> dict:
+    enc_layer = {
+        "ln1": L.norm_spec(cfg.d_model),
+        "attn": L.attention_specs(cfg, dims),
+        "ln2": L.norm_spec(cfg.d_model),
+        "mlp": L.mlp_specs(cfg, dims.d_ff),
+    }
+    dec_layer = dict(decoder_layer_specs(cfg, dims))
+    dec_layer["ln_x"] = L.norm_spec(cfg.d_model)
+    dec_layer["xattn"] = L.attention_specs(cfg, dims)
+    return {
+        "embed": L.embed_specs(dims),
+        "enc_pos": PSpec((cfg.encoder_seq, cfg.d_model), (None, "embed_noshard")),
+        "enc_layers": stack_specs(enc_layer, cfg.encoder_layers),
+        "enc_ln_f": L.norm_spec(cfg.d_model),
+        "layers": stack_specs(dec_layer, cfg.num_layers),
+        "ln_f": L.norm_spec(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------- loss util ----
+
+def lm_loss(logits, labels):
+    """Cross-entropy; labels < 0 are masked out."""
+    ll, mask = _ce_sums(logits, labels)
+    return ll / jnp.maximum(mask, 1.0)
+
+
+def _ce_sums(logits, labels):
+    lf = logits.astype(F32)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    lse = jnp.squeeze(m, -1) + jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1))
+    onehot = jax.nn.one_hot(labels, lf.shape[-1], dtype=F32)
+    ll = lse - jnp.sum(lf * onehot, axis=-1)
+    mask = (labels >= 0).astype(F32)
+    return jnp.sum(ll * mask), jnp.sum(mask)
+
+
+LOSS_CHUNK = 512
+
+
+def chunked_lm_loss(params_embed, x, labels, cfg):
+    """Cross-entropy fused over sequence chunks: the (B, chunk, V) logits
+    block is rematerialized in the backward pass instead of keeping the full
+    (B, S, V) activations live — the decisive memory term for 150k-256k
+    vocabularies."""
+    B, S, D = x.shape
+    c = LOSS_CHUNK
+    if S <= c or S % c != 0:
+        logits = L.unembed(params_embed, x, cfg)
+        return lm_loss(logits, labels)
+    n = S // c
+    xc = x.reshape(B, n, c, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, c).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        xch, lch = xs
+        logits = L.unembed(params_embed, xch, cfg)
+        ll, mk = _ce_sums(logits, lch)
+        return (carry[0] + ll, carry[1] + mk), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), F32),) * 2, (xc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ------------------------------------------------- decoder-only forward ----
+
+def _block(lp, x, cfg, dims, kind, positions):
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    q, k, v = L.qkv_project(lp["attn"], h, cfg, positions)
+    attn = L.blocked_causal_attention(q, k, v, cfg, window=cfg.sliding_window)
+    x = x + L.out_project(lp["attn"], attn, cfg)
+    h2 = L.apply_norm(lp["ln2"], x, cfg)
+    if "moe" in lp:
+        y = MOE.moe_apply(lp["moe"], h2, cfg, dims, kind)
+    else:
+        y = L.mlp_apply(lp["mlp"], h2, cfg)
+    return x + y
+
+
+def decoder_forward(params, tokens, cfg: ArchConfig, dims: Dims, *,
+                    kind: str, prefix: Optional[jnp.ndarray] = None,
+                    remat: bool = True):
+    """tokens (B,St) [+ prefix (B,P,D) embeds] -> hidden (B,S,D)."""
+    x = L.embed_lookup(params["embed"], tokens, cfg)
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    x = lsc(x, "batch", "seq", None)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        return _block(lp, x, cfg, dims, kind, positions), None
+    if remat:
+        body = jax.checkpoint(body, policy=_remat_policy(cfg))
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.apply_norm(params["ln_f"], x, cfg)
+
+
+def _remat_policy(cfg: ArchConfig):
+    """none: recompute everything (min memory). dots: keep GEMM outputs
+    (skips the recompute forward -> ~25% less train compute, more HBM)."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def decoder_train_loss(params, batch, cfg: ArchConfig, dims: Dims):
+    prefix = batch.get("patches")
+    x = decoder_forward(params, batch["tokens"], cfg, dims, kind="train",
+                        prefix=prefix)
+    if prefix is not None:
+        x = x[:, prefix.shape[1]:]
+    return chunked_lm_loss(params["embed"], x, batch["labels"], cfg)
+
+
+def decoder_prefill(params, batch, cfg: ArchConfig, dims: Dims, cache_len: int):
+    """Returns (last_logits (B,V), cache)."""
+    tokens = batch["tokens"]
+    prefix = batch.get("patches")
+    x = L.embed_lookup(params["embed"], tokens, cfg)
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    x = lsc(x, "batch", "seq", None)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    eff_len = _cache_len(cfg, cache_len)
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        q, k, v = L.qkv_project(lp["attn"], h, cfg, positions)
+        attn = L.blocked_causal_attention(q, k, v, cfg,
+                                          window=cfg.sliding_window)
+        x = x + L.out_project(lp["attn"], attn, cfg)
+        h2 = L.apply_norm(lp["ln2"], x, cfg)
+        if "moe" in lp:
+            y = MOE.moe_apply(lp["moe"], h2, cfg, dims, "prefill")
+        else:
+            y = L.mlp_apply(lp["mlp"], h2, cfg)
+        cache = L.make_kv_cache(B, eff_len, dims, k.dtype,
+                                quant=cfg.kv_quant)
+        if cfg.sliding_window is not None and S > eff_len:
+            # ring invariant: abs position p lives at slot p % eff_len
+            shift = S % eff_len
+            cache = L.cache_prefill(
+                cache, jnp.roll(k[:, -eff_len:], shift, axis=1),
+                jnp.roll(v[:, -eff_len:], shift, axis=1), 0)
+            cache["slot_pos"] = jnp.roll(
+                jnp.arange(S - eff_len, S, dtype=jnp.int32), shift)
+        else:
+            cache = L.cache_prefill(cache, k, v, 0)
+        return x + y, cache
+
+    x, caches = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    last = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+    return last, {"layers": caches, "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decoder_decode_step(params, cache, tokens, cfg: ArchConfig, dims: Dims):
+    """tokens (B,1) -> (logits (B,1,V), cache')."""
+    x = L.embed_lookup(params["embed"], tokens, cfg)
+    x = lsc(x, "batch", "seq_noshard", None)
+    pos = cache["pos"]
+    positions = pos[None].astype(jnp.int32)
+
+    def body(x, xs):
+        lp, lc = xs
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        q, k, v = L.qkv_project(lp["attn"], h, cfg, positions)
+        lc = L.cache_write(lc, k, v, pos)
+        attn = L.decode_attention(q, lc, pos, cfg.sliding_window)
+        x = x + L.out_project(lp["attn"], attn, cfg)
+        h2 = L.apply_norm(lp["ln2"], x, cfg)
+        if "moe" in lp:
+            y = MOE.moe_apply(lp["moe"], h2, cfg, dims, "decode")
+        else:
+            y = L.mlp_apply(lp["mlp"], h2, cfg)
+        return x + y, lc
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"layers": new_caches, "pos": pos + 1}
+
+
+def _cache_len(cfg: ArchConfig, cache_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cache_len, cfg.sliding_window)
+    return cache_len
+
+
+def decoder_init_cache(batch: int, cache_len: int, cfg: ArchConfig,
+                       dims: Dims, dtype):
+    eff = _cache_len(cfg, cache_len)
+    one = L.make_kv_cache(batch, eff, dims, dtype, quant=cfg.kv_quant)
+    caches = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), one)
+    return {"layers": caches, "pos": jnp.asarray(0, jnp.int32)}
+
+
+def decoder_cache_axes(cfg: ArchConfig) -> dict:
+    one = L.kv_cache_axes(cfg.kv_quant)
+    return {"layers": jax.tree.map(lambda ax: ("layers",) + ax, one,
+                                   is_leaf=lambda x: isinstance(x, tuple)),
+            "pos": ()}
+
+
+# --------------------------------------------------- encoder-decoder ----
+
+def encoder_forward(params, frames, cfg: ArchConfig, dims: Dims):
+    """frames: (B, S_enc, D) stub embeddings -> (B, S_enc, D)."""
+    x = frames.astype(L.cdt(cfg)) + params["enc_pos"].astype(L.cdt(cfg))[None]
+    x = lsc(x, "batch", "seq", None)
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        q = jnp.einsum("bsd,dkgh->bskgh", h, lp["attn"]["wq"].astype(L.cdt(cfg)))
+        k = jnp.einsum("bsd,dkh->bskh", h, lp["attn"]["wk"].astype(L.cdt(cfg)))
+        v = jnp.einsum("bsd,dkh->bskh", h, lp["attn"]["wv"].astype(L.cdt(cfg)))
+        attn = L.cross_attention(q, k, v)     # bidirectional
+        x = x + L.out_project(lp["attn"], attn, cfg)
+        h2 = L.apply_norm(lp["ln2"], x, cfg)
+        return x + L.mlp_apply(lp["mlp"], h2, cfg), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.apply_norm(params["enc_ln_f"], x, cfg)
+
+
+def _xattn_kv(lp, enc, cfg):
+    dt = L.cdt(cfg)
+    k = jnp.einsum("bsd,dkh->bskh", enc, lp["xattn"]["wk"].astype(dt))
+    v = jnp.einsum("bsd,dkh->bskh", enc, lp["xattn"]["wv"].astype(dt))
+    return k, v
+
+
+def _dec_block(lp, x, enc_kv, cfg, dims, kind, positions):
+    dt = L.cdt(cfg)
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    q, k, v = L.qkv_project(lp["attn"], h, cfg, positions)
+    attn = L.blocked_causal_attention(q, k, v, cfg, window=cfg.sliding_window)
+    x = x + L.out_project(lp["attn"], attn, cfg)
+    hx = L.apply_norm(lp["ln_x"], x, cfg)
+    qx = jnp.einsum("bsd,dkgh->bskgh", hx, lp["xattn"]["wq"].astype(dt))
+    xa = L.cross_attention(qx, *enc_kv)
+    x = x + L.out_project(lp["xattn"], xa, cfg)
+    h2 = L.apply_norm(lp["ln2"], x, cfg)
+    return x + L.mlp_apply(lp["mlp"], h2, cfg)
+
+
+def encdec_train_loss(params, batch, cfg: ArchConfig, dims: Dims):
+    enc = encoder_forward(params, batch["frames"], cfg, dims)
+    tokens = batch["tokens"]
+    x = L.embed_lookup(params["embed"], tokens, cfg)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, lp):
+        enc_kv = _xattn_kv(lp, enc, cfg)
+        return _dec_block(lp, x, enc_kv, cfg, dims, "train", positions), None
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return chunked_lm_loss(params["embed"], x, batch["labels"], cfg)
+
+
+def encdec_prefill(params, batch, cfg: ArchConfig, dims: Dims, cache_len: int):
+    enc = encoder_forward(params, batch["frames"], cfg, dims)
+    tokens = batch["tokens"]
+    x = L.embed_lookup(params["embed"], tokens, cfg)
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    eff = _cache_len(cfg, cache_len)
+
+    def body(x, lp):
+        dt = L.cdt(cfg)
+        xk, xv = _xattn_kv(lp, enc, cfg)
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        q, k, v = L.qkv_project(lp["attn"], h, cfg, positions)
+        attn = L.blocked_causal_attention(q, k, v, cfg,
+                                          window=cfg.sliding_window)
+        x = x + L.out_project(lp["attn"], attn, cfg)
+        hx = L.apply_norm(lp["ln_x"], x, cfg)
+        qx = jnp.einsum("bsd,dkgh->bskgh", hx, lp["xattn"]["wq"].astype(dt))
+        xa = L.cross_attention(qx, xk, xv)
+        x = x + L.out_project(lp["xattn"], xa, cfg)
+        h2 = L.apply_norm(lp["ln2"], x, cfg)
+        x = x + L.mlp_apply(lp["mlp"], h2, cfg)
+        cache = L.make_kv_cache(B, eff, dims, k.dtype)
+        cache = L.cache_prefill(cache, k, v, 0)
+        return x, {"self": cache, "xk": xk, "xv": xv}
+
+    x, caches = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    last = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+    return last, {"layers": caches, "pos": jnp.asarray(S, jnp.int32)}
+
+
+def encdec_decode_step(params, cache, tokens, cfg: ArchConfig, dims: Dims):
+    x = L.embed_lookup(params["embed"], tokens, cfg)
+    pos = cache["pos"]
+    positions = pos[None].astype(jnp.int32)
+
+    def body(x, xs):
+        dt = L.cdt(cfg)
+        lp, lc = xs
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        q, k, v = L.qkv_project(lp["attn"], h, cfg, positions)
+        sc = L.cache_write(lc["self"], k, v, pos)
+        attn = L.decode_attention(q, sc, pos, cfg.sliding_window)
+        x = x + L.out_project(lp["attn"], attn, cfg)
+        hx = L.apply_norm(lp["ln_x"], x, cfg)
+        qx = jnp.einsum("bsd,dkgh->bskgh", hx, lp["xattn"]["wq"].astype(dt))
+        xa = L.cross_attention(qx, lc["xk"], lc["xv"])
+        x = x + L.out_project(lp["xattn"], xa, cfg)
+        h2 = L.apply_norm(lp["ln2"], x, cfg)
+        x = x + L.mlp_apply(lp["mlp"], h2, cfg)
+        return x, {"self": sc, "xk": lc["xk"], "xv": lc["xv"]}
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"layers": new_caches, "pos": pos + 1}
+
+
+def encdec_init_cache(batch: int, cache_len: int, cfg: ArchConfig,
+                      dims: Dims, dtype):
+    eff = _cache_len(cfg, cache_len)
+    one = {
+        "self": L.make_kv_cache(batch, eff, dims, dtype),
+        "xk": jnp.zeros((batch, cfg.encoder_seq, dims.kv_heads,
+                         dims.head_dim), dtype),
+        "xv": jnp.zeros((batch, cfg.encoder_seq, dims.kv_heads,
+                         dims.head_dim), dtype),
+    }
+    caches = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), one)
+    return {"layers": caches, "pos": jnp.asarray(0, jnp.int32)}
+
+
+def encdec_cache_axes(cfg: ArchConfig) -> dict:
+    one = {
+        "self": L.kv_cache_axes(),
+        "xk": ("batch", None, "kv_heads", None),
+        "xv": ("batch", None, "kv_heads", None),
+    }
+    return {"layers": jax.tree.map(lambda ax: ("layers",) + ax, one,
+                                   is_leaf=lambda x: isinstance(x, tuple)),
+            "pos": ()}

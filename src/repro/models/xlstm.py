@@ -1,0 +1,236 @@
+"""xLSTM blocks (mLSTM + sLSTM) — arXiv:2405.04517, adapted to JAX/TPU.
+
+mLSTM: matrix-memory LSTM with exponential gating. Train/prefill uses the
+*chunkwise-parallel* form (intra-chunk quadratic attention-like math +
+inter-chunk recurrent carry (C, n, m)) — the production formulation used by
+linear-attention kernels. Decode is the exact single-step recurrence.
+
+sLSTM: scalar-memory LSTM with exponential gating and per-head recurrent
+(block-diagonal) connections — inherently sequential, implemented as a
+lax.scan over time (projections are GEMMs and run batched up front).
+
+Sharding: the mLSTM value dimension (dv) is tensor-parallel over 'model'
+("dv_shard" logical axis); q/k are replicated so the normalizer is computed
+redundantly per shard (cheap: dk ~ 100s). sLSTM cells are replicated (tiny).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Dims
+from repro.models.params import PSpec
+from repro.sharding.logical import lsc
+
+F32 = jnp.float32
+
+
+def _dims(cfg: ArchConfig):
+    din = 2 * cfg.d_model              # projection factor 2
+    H = cfg.num_heads
+    dk = din // H
+    return din, H, dk
+
+
+# ------------------------------------------------------------------ mLSTM --
+
+def mlstm_specs(cfg: ArchConfig, dims: Dims) -> dict:
+    d = cfg.d_model
+    din, H, dk = _dims(cfg)
+    return {
+        "up": PSpec((d, 2 * din), ("embed", "inner")),
+        "conv_w": PSpec((4, din), ("conv", None), scale=0.1),
+        "conv_b": PSpec((din,), (None,), init="zeros"),
+        "wq": PSpec((din, H, dk), (None, None, None)),
+        "wk": PSpec((din, H, dk), (None, None, None)),
+        "wv": PSpec((din, H, dk), (None, None, "dv_shard")),
+        "wi": PSpec((din, H), (None, None)),
+        "wf": PSpec((din, H), (None, None)),
+        "bi": PSpec((H,), (None,), init="zeros"),
+        "bf": PSpec((H,), (None,), init="ones", ),  # positive forget bias
+        "out_norm": PSpec((H, dk), (None, "dv_shard"), init="ones"),
+        "down": PSpec((din, d), ("inner", "embed")),
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lf, carry):
+    """One chunk of the stabilized chunkwise-parallel mLSTM.
+    q,k: (B,c,H,dk) f32; v: (B,c,H,dv); li/lf: (B,c,H) log gates.
+    carry: (C (B,H,dk,dv), n (B,H,dk), m (B,H))."""
+    C0, n0, m0 = carry
+    B, c, H, dk = q.shape
+    cum = jnp.cumsum(lf, axis=1)                      # inclusive Σ log f
+    # a[t,s] = cum_t - cum_s + li_s  (valid for s <= t)
+    a = cum[:, :, None, :] - cum[:, None, :, :] + li[:, None, :, :]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    a = jnp.where(tri[None, :, :, None], a, -jnp.inf)  # (B,t,s,H)
+    b = m0[:, None, :] + cum                           # carry path scale (B,c,H)
+    m = jnp.maximum(b, jnp.max(a, axis=2))             # (B,c,H)
+    # intra-chunk weights
+    w = jnp.exp(a - m[:, :, None, :])                  # (B,t,s,H)
+    qk = jnp.einsum("bthd,bshd->btsh", q, k)           # (B,t,s,H)
+    num_intra = jnp.einsum("btsh,bshv->bthv", w * qk, v)  # (B,t,H,dv)
+    den_intra = jnp.einsum("btsh,btsh->bth", w, qk)
+    # carry contributions
+    sc = jnp.exp(b - m)                                # (B,c,H)
+    num_carry = jnp.einsum("bth,bhkv,bthk->bthv", sc, C0, q)
+    den_carry = sc * jnp.einsum("bhk,bthk->bth", n0, q)
+    num = num_intra + num_carry
+    den = den_intra + den_carry
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+    # end-of-chunk carry update
+    dec_all = cum[:, -1:, :] - cum + li                # (B,c,H) per-s weight
+    m_new = jnp.maximum(b[:, -1], jnp.max(dec_all, axis=1))  # (B,H)
+    wC = jnp.exp(dec_all - m_new[:, None])             # (B,c,H)
+    C_new = (jnp.exp(b[:, -1] - m_new)[:, :, None, None] * C0
+             + jnp.einsum("bsh,bshk,bshv->bhkv", wC, k, v))
+    n_new = (jnp.exp(b[:, -1] - m_new)[:, :, None] * n0
+             + jnp.einsum("bsh,bshk->bhk", wC, k))
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_forward(p, x, cfg: ArchConfig, dims: Dims, state=None):
+    """x: (B,S,D) -> (y, state). state: {C,n,m,conv}."""
+    dt_ = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    B, S, D = x.shape
+    din, H, dk = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["up"].astype(dt_))
+    xm, z = jnp.split(xz, 2, axis=-1)
+    # causal conv on the qk path
+    dc = p["conv_w"].shape[0]
+    conv_in = state["conv"] if state is not None else jnp.zeros((B, dc - 1, din), dt_)
+    xpad = jnp.concatenate([conv_in.astype(dt_), xm], axis=1)
+    w = p["conv_w"].astype(dt_)
+    xc = sum(xpad[:, i:i + S] * w[i] for i in range(dc)) + p["conv_b"].astype(dt_)
+    xc = jax.nn.silu(xc)
+    new_conv = xpad[:, -(dc - 1):]
+
+    q = jnp.einsum("bsd,dhk->bshk", xc, p["wq"].astype(dt_)).astype(F32)
+    k = jnp.einsum("bsd,dhk->bshk", xc, p["wk"].astype(dt_)).astype(F32) / (dk ** 0.5)
+    v = jnp.einsum("bsd,dhk->bshk", xm, p["wv"].astype(dt_)).astype(F32)
+    v = lsc(v, "batch", "seq_noshard", None, "dv_shard")
+    li = (jnp.einsum("bsd,dh->bsh", xc, p["wi"].astype(dt_)).astype(F32)
+          + p["bi"].astype(F32))
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", xc, p["wf"].astype(dt_)).astype(F32)
+        + p["bf"].astype(F32))
+
+    if state is not None:
+        carry = (state["C"], state["n"], state["m"])
+    else:
+        carry = (jnp.zeros((B, H, dk, dk), F32), jnp.zeros((B, H, dk), F32),
+                 jnp.full((B, H), -1e30, F32))
+
+    c = min(cfg.xlstm_chunk, S)
+    if S > c and S % c == 0:
+        n_chunks = S // c
+        def split(t):
+            return t.reshape((B, n_chunks, c) + t.shape[2:]).transpose(
+                (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+        qs, ks, vs, lis, lfs = map(split, (q, k, v, li, lf))
+
+        def body(cy, xs):
+            h, cy2 = _mlstm_chunk(*xs, cy)
+            return cy2, h
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+        carry, hs = jax.lax.scan(body, carry, (qs, ks, vs, lis, lfs))
+        h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dk)
+    else:
+        h, carry = _mlstm_chunk(q, k, v, li, lf, carry)
+
+    # per-head RMS norm (GroupNorm stand-in), then gate & down-project
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + 1e-6) * p["out_norm"].astype(F32)
+    h = h.reshape(B, S, din).astype(dt_) * jax.nn.silu(z)
+    y = jnp.einsum("bsd,de->bse", h, p["down"].astype(dt_))
+    y = lsc(y, "batch", "seq", None)
+    C_new, n_new, m_new = carry
+    return y, {"C": C_new, "n": n_new, "m": m_new, "conv": new_conv}
+
+
+def mlstm_state_shapes(batch: int, cfg: ArchConfig, dtype):
+    din, H, dk = _dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dk, dk), F32),
+        "n": jnp.zeros((batch, H, dk), F32),
+        "m": jnp.full((batch, H), -1e30, F32),
+        "conv": jnp.zeros((batch, 3, din), dtype),
+    }
+
+
+def mlstm_state_axes() -> dict:
+    return {"C": ("batch", None, None, "dv_shard"),
+            "n": ("batch", None, None),
+            "m": ("batch", None),
+            "conv": ("batch", None, None)}
+
+
+# ------------------------------------------------------------------ sLSTM --
+
+def slstm_specs(cfg: ArchConfig, dims: Dims) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    return {
+        "wx": PSpec((d, 4, H, dh), ("embed", None, None, None)),   # i,f,z,o
+        "r": PSpec((4, H, dh, dh), (None, None, None, None), scale=0.05),
+        "b": PSpec((4, H, dh), (None, None, None), init="zeros"),
+        "out_norm": PSpec((H, dh), (None, None), init="ones"),
+        "proj": PSpec((d, d), ("embed", "embed_noshard")),
+    }
+
+
+def _slstm_step(p_r, p_b, carry, xg):
+    """carry: (h,c,n,m) each (B,H,dh); xg: (B,4,H,dh) precomputed Wx."""
+    h, c, n, m = carry
+    rec = jnp.einsum("bhd,ghde->bghe", h, p_r)         # (B,4,H,dh)
+    g = xg + rec + p_b[None]
+    gi, gf, gz, go = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    m_new = jnp.maximum(jax.nn.log_sigmoid(gf) + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(jax.nn.log_sigmoid(gf) + m - m_new)
+    c_new = f * c + i * jnp.tanh(gz)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_forward(p, x, cfg: ArchConfig, dims: Dims, state=None):
+    dt_ = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dh = D // H
+    xg = jnp.einsum("bsd,dghe->bsghe", x, p["wx"].astype(dt_)).astype(F32)
+    if state is None:
+        z = jnp.zeros((B, H, dh), F32)
+        carry = (z, z, z, jnp.full((B, H, dh), -1e30, F32))
+    else:
+        carry = (state["h"], state["c"], state["n"], state["m"])
+    r = p["r"].astype(F32)
+    b = p["b"].astype(F32)
+
+    def body(cy, xt):
+        cy2 = _slstm_step(r, b, cy, xt)
+        return cy2, cy2[0]
+    carry, hs = jax.lax.scan(body, carry, xg.transpose(1, 0, 2, 3, 4))
+    h = hs.transpose(1, 0, 2, 3)                       # (B,S,H,dh)
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + 1e-6) * p["out_norm"].astype(F32)
+    y = jnp.einsum("bsd,de->bse", h.reshape(B, S, D).astype(dt_),
+                   p["proj"].astype(dt_))
+    y = lsc(y, "batch", "seq", None)
+    new_state = {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
+    return y, new_state
+
+
+def slstm_state_shapes(batch: int, cfg: ArchConfig):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), F32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, H, dh), -1e30, F32)}
+
+
+def slstm_state_axes() -> dict:
+    ax = ("batch", None, None)
+    return {"h": ax, "c": ax, "n": ax, "m": ax}

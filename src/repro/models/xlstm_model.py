@@ -1,0 +1,95 @@
+"""xLSTM-LM: alternating mLSTM / sLSTM blocks (1:1), scanned in pairs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Dims
+from repro.models import layers as L
+from repro.models import xlstm as X
+from repro.models.params import stack_specs
+from repro.sharding.logical import lsc
+
+
+def xlstm_specs(cfg: ArchConfig, dims: Dims) -> dict:
+    assert cfg.num_layers % 2 == 0
+    pair = {
+        "ln_m": L.norm_spec(cfg.d_model),
+        "mlstm": X.mlstm_specs(cfg, dims),
+        "ln_s": L.norm_spec(cfg.d_model),
+        "slstm": X.slstm_specs(cfg, dims),
+    }
+    return {
+        "embed": L.embed_specs(dims),
+        "pairs": stack_specs(pair, cfg.num_layers // 2),
+        "ln_f": L.norm_spec(cfg.d_model),
+    }
+
+
+def _pair_forward(pp, x, cfg, dims, states):
+    m_state = states["mlstm"] if states is not None else None
+    s_state = states["slstm"] if states is not None else None
+    y, m_new = X.mlstm_forward(pp["mlstm"], L.apply_norm(pp["ln_m"], x, cfg),
+                               cfg, dims, state=m_state)
+    x = x + y
+    y, s_new = X.slstm_forward(pp["slstm"], L.apply_norm(pp["ln_s"], x, cfg),
+                               cfg, dims, state=s_state)
+    x = x + y
+    return x, {"mlstm": m_new, "slstm": s_new}
+
+
+def xlstm_train_loss(params, batch, cfg: ArchConfig, dims: Dims):
+    from repro.models.transformer import chunked_lm_loss
+    x = L.embed_lookup(params["embed"], batch["tokens"], cfg)
+    x = lsc(x, "batch", "seq", None)
+
+    def body(x, pp):
+        x, _ = _pair_forward(pp, x, cfg, dims, None)
+        return x, None
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["pairs"])
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return chunked_lm_loss(params["embed"], x, batch["labels"], cfg)
+
+
+def xlstm_prefill(params, batch, cfg: ArchConfig, dims: Dims, cache_len: int):
+    x = L.embed_lookup(params["embed"], batch["tokens"], cfg)
+    x = lsc(x, "batch", "seq", None)
+    S = batch["tokens"].shape[1]
+
+    def body(x, pp):
+        return _pair_forward(pp, x, cfg, dims, None)
+    x, states = jax.lax.scan(body, x, params["pairs"])
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    last = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+    return last, {"pairs": states, "pos": jnp.asarray(S, jnp.int32)}
+
+
+def xlstm_decode_step(params, cache, tokens, cfg: ArchConfig, dims: Dims):
+    x = L.embed_lookup(params["embed"], tokens, cfg)
+
+    def body(x, xs):
+        pp, st = xs
+        return _pair_forward(pp, x, cfg, dims, st)
+    x, new_states = jax.lax.scan(body, x, (params["pairs"], cache["pairs"]))
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"pairs": new_states, "pos": cache["pos"] + 1}
+
+
+def xlstm_init_cache(batch: int, cache_len: int, cfg: ArchConfig,
+                     dims: Dims, dtype):
+    one = {
+        "mlstm": X.mlstm_state_shapes(batch, cfg, dtype),
+        "slstm": X.slstm_state_shapes(batch, cfg),
+    }
+    n = cfg.num_layers // 2
+    states = jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+    return {"pairs": states, "pos": jnp.asarray(0, jnp.int32)}
+
+
+def xlstm_cache_axes(cfg: ArchConfig) -> dict:
+    one = {"mlstm": X.mlstm_state_axes(), "slstm": X.slstm_state_axes()}
+    return {"pairs": jax.tree.map(lambda ax: ("layers",) + ax, one,
+                                  is_leaf=lambda x: isinstance(x, tuple)),
+            "pos": ()}

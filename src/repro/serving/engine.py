@@ -1,0 +1,101 @@
+"""Batched serving engine: continuous batching over prefill + decode steps.
+
+A slot-based scheduler (vLLM-style, TPU-friendly static shapes): the decode
+batch is a fixed-size slot array; finished/empty slots are refilled by
+prefilling queued requests and splicing their KV into the batch cache.
+For the dry-run shapes, decode_32k is one `decode_step` with a full slot
+array; this module adds the request lifecycle around it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int = 16
+    out: Optional[list] = None
+
+
+class ServingEngine:
+    def __init__(self, bundle, params, *, slots: int, cache_len: int,
+                 eos_id: int = -1):
+        self.bundle = bundle
+        self.params = params
+        self.slots = slots
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.queue: List[Request] = []
+        self.active: list[Optional[Request]] = [None] * slots
+        self.remaining = np.zeros(slots, np.int32)
+        self.cache = bundle.init_cache(slots, cache_len, dtype=jnp.bfloat16)
+        self.next_tokens = jnp.zeros((slots, 1), jnp.int32)
+        self._decode = jax.jit(bundle.decode_step, donate_argnums=(1,))
+        self._prefill_one = jax.jit(
+            lambda p, b: bundle.prefill(p, b, cache_len=cache_len))
+
+    def submit(self, req: Request) -> None:
+        req.out = []
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            last, cache1 = self._prefill_one(
+                self.params, {"tokens": jnp.asarray(req.prompt)[None]})
+            self.cache = _splice_slot(self.cache, cache1, slot)
+            tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            self.next_tokens = self.next_tokens.at[slot, 0].set(tok[0])
+            self.active[slot] = req
+            self.remaining[slot] = req.max_new
+
+    def step(self) -> int:
+        """One engine tick: admit, decode, collect. Returns #active."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.next_tokens)
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        self.next_tokens = nxt[:, None]
+        done_slots = []
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            self.remaining[slot] -= 1
+            if self.remaining[slot] <= 0 or tok == self.eos_id:
+                done_slots.append(slot)
+        for slot in done_slots:
+            self.active[slot] = None
+        return sum(r is not None for r in self.active) + len(self.queue)
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if self.step() == 0 and not self.queue:
+                return
+        raise RuntimeError("serving did not drain")
+
+
+def _splice_slot(big_cache, one_cache, slot: int):
+    """Copy a batch-1 cache pytree into slot `slot` of the batch cache.
+    Batch is axis 0 of every array leaf whose leading dim matches; 'pos'
+    scalars are merged by max (batch-synchronous decode clock)."""
+    def fn(big, small):
+        if big.ndim == 0:
+            return jnp.maximum(big, small)
+        if big.ndim >= 1 and small.ndim == big.ndim \
+                and small.shape[1:] == big.shape[1:]:
+            return jax.lax.dynamic_update_slice_in_dim(big, small, slot, 0)
+        return big   # position tables etc (shared)
+    return jax.tree.map(fn, big_cache, one_cache)

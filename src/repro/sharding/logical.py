@@ -1,0 +1,135 @@
+"""Logical-axis sharding: map model-level axis names to mesh axes.
+
+Models annotate every parameter and key activation with *logical* axis names
+("batch", "seq", "heads", "ffn", ...).  A `MeshRules` object — installed by
+the launcher (or absent for single-device smoke tests) — maps logical names
+to physical mesh axes.  `lsc(x, ...axes)` applies a sharding constraint when
+rules are installed and is a no-op otherwise, so the same model code runs on
+one CPU device and on a 512-chip mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, None]
+
+# Default logical->physical rules for the (data, model) production mesh.
+# Order matters: first rule naming a free mesh axis wins per tensor dim.
+DEFAULT_RULES: dict[str, Any] = {
+    # activations
+    "batch": ("pod", "data"),   # pod axis collapses out on single-pod meshes
+    "seq": "model",             # Megatron-style sequence sharding between blocks
+    "seq_noshard": None,
+    # attention
+    "kv_heads": "model",
+    "q_group": None,
+    "head_dim": None,
+    # params
+    "embed": "data",            # FSDP / ZeRO-3 dim
+    "embed_noshard": None,
+    "vocab": "model",
+    "ffn": "model",
+    "experts": "model",         # EP
+    "experts_noshard": None,
+    "inner": "model",           # mamba d_inner / xlstm inner dim
+    "dstate": None,
+    "layers": None,
+    "conv": None,
+    "dv_shard": "model",        # xlstm per-head value-dim sharding
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Mesh
+    rules: dict[str, Any]
+
+    def physical(self, name: Axis):
+        if name is None:
+            return None
+        got = self.rules.get(name, None)
+        if got is None:
+            return None
+        axes = (got,) if isinstance(got, str) else tuple(got)
+        # Drop mesh axes that don't exist (e.g. "pod" on the single-pod mesh).
+        axes = tuple(a for a in axes if a in self.mesh.axis_names)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def pspec(self, logical_axes: Sequence[Axis]) -> P:
+        used: set[str] = set()
+        out = []
+        for name in logical_axes:
+            phys = self.physical(name)
+            if phys is None:
+                out.append(None)
+                continue
+            tup = (phys,) if isinstance(phys, str) else tuple(phys)
+            tup = tuple(a for a in tup if a not in used)
+            used.update(tup)
+            if not tup:
+                out.append(None)
+            elif len(tup) == 1:
+                out.append(tup[0])
+            else:
+                out.append(tup)
+        return P(*out)
+
+    def sharding(self, logical_axes: Sequence[Axis]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(logical_axes))
+
+
+_ACTIVE: list[Optional[MeshRules]] = [None]
+
+
+def current_rules() -> Optional[MeshRules]:
+    return _ACTIVE[-1]
+
+
+@contextlib.contextmanager
+def use_mesh_rules(rules: Optional[MeshRules]):
+    _ACTIVE.append(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.pop()
+
+
+def make_rules(mesh: Mesh, overrides: Optional[dict[str, Any]] = None) -> MeshRules:
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    return MeshRules(mesh=mesh, rules=rules)
+
+
+def lsc(x, *logical_axes: Axis):
+    """Logical sharding constraint (no-op without installed rules)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(logical_axes))
+
+
+def tp_size() -> int:
+    """Size of the tensor-parallel ('model') mesh axis under current rules."""
+    rules = current_rules()
+    if rules is None:
+        return 1
+    return rules.mesh.shape.get("model", 1)
+
+
+def axis_size(name: str) -> int:
+    rules = current_rules()
+    if rules is None:
+        return 1
+    return rules.mesh.shape.get(name, 1)
+
+
+def ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

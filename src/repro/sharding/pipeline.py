@@ -1,0 +1,79 @@
+"""GPipe-style pipeline parallelism over the 'pod' mesh axis.
+
+The inter-pod DCN link is the natural pipeline boundary at 1000+ node
+scale: each pod owns a contiguous span of layers; microbatches stream
+through via collective_permute. Implemented as a shard_map program so it
+composes with the in-pod (data, model) GSPMD sharding (subset-manual over
+'pod' only).
+
+API mirrors a plain layer stack:
+    y = pipeline_apply(fn_stage, params_stacked, x, mesh,
+                       n_microbatches=M)
+where params_stacked has a leading [n_stages] axis sharded over 'pod' and
+fn_stage(stage_params, x) -> x applies one stage.
+
+Schedule: standard GPipe fill-drain — T = M + S - 1 ticks; bubble fraction
+(S-1)/(M+S-1); each tick every pod runs its stage on the microbatch it
+holds, then ppermutes activations forward.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(fn_stage, stage_params, x_microbatches, mesh,
+                   axis_name: str = "pod"):
+    """x_microbatches: (M, ...) microbatched input (replicated over pod).
+    stage_params: pytree with leading [S] axis, sharded over `axis_name`.
+    Returns (M, ...) outputs after all S stages."""
+    S = mesh.shape[axis_name]
+    M = x_microbatches.shape[0]
+    T = M + S - 1
+    perm = [(i, i + 1) for i in range(S - 1)]
+
+    def body(my_params, xs):
+        # my_params: stage params with leading [1]; xs: (M, ...) full
+        sp = jax.tree.map(lambda a: a[0], my_params)
+        stage = jax.lax.axis_index(axis_name)
+
+        def tick(t, carry):
+            buf, outs = carry         # buf: (...) activation held this tick
+            mb = t - stage            # stage s works microbatch t-s
+            active = (mb >= 0) & (mb < M)
+            mb_c = jnp.clip(mb, 0, M - 1)
+            fresh = jax.lax.dynamic_index_in_dim(xs, mb_c, 0, keepdims=False)
+            inp = jnp.where(stage == 0, fresh, buf)
+            y = fn_stage(sp, inp)
+            y = jnp.where(active, y, buf)
+            # the last stage banks finished microbatches
+            upd = jax.lax.dynamic_update_index_in_dim(outs, y, mb_c, 0)
+            outs = jnp.where(active & (stage == S - 1), upd, outs)
+            # forward activations to the next stage
+            buf_next = jax.lax.ppermute(y, axis_name, perm)
+            return (buf_next, outs)
+
+        buf0 = jnp.zeros_like(xs[0])
+        outs0 = jnp.zeros_like(xs)
+        _, outs = jax.lax.fori_loop(0, T, tick, (buf0, outs0))
+        # only the last stage holds real outputs; share with all stages
+        return _bcast_from_last(outs, axis_name, S)
+
+    return jax.shard_map(
+        body, mesh=mesh, axis_names={axis_name},
+        in_specs=(P(axis_name), P()), out_specs=P(),
+        check_vma=False)(stage_params, x_microbatches)
+
+
+def _bcast_from_last(x, axis_name, S):
+    """All stages end with stage S-1's outputs (psum of masked values)."""
+    stage = jax.lax.axis_index(axis_name)
+    contrib = jnp.where(stage == S - 1, x, jnp.zeros_like(x))
+    return jax.lax.psum(contrib, axis_name)
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)

@@ -1,0 +1,6 @@
+# Smoke tests run on ONE device (the dry-run alone uses 512 host devices,
+# in its own process). Keep jax imports out of conftest.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

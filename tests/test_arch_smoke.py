@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests: reduced same-family config, one train
+step + prefill->decode consistency on CPU. (Full configs are exercised
+only by the allocation-free dry-run.)"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import (SHAPES, ShapeConfig, cells_for, get_config,
+                                list_archs, reduced, resolve_dims)
+from repro.models.model_zoo import build_model, make_concrete_batch
+
+ARCHS = list(list_archs())
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = reduced(get_config(arch))
+    b = build_model(cfg)
+    params = b.init_params(jax.random.key(0))
+    batch = make_concrete_batch(cfg, ShapeConfig("t", 64, 2, "train"),
+                                jax.random.key(1))
+    loss, grads = jax.jit(jax.value_and_grad(b.train_loss))(params, batch)
+    assert jnp.isfinite(loss)
+    gnorm = sum(jnp.sum(jnp.abs(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill(arch):
+    cfg = reduced(get_config(arch))
+    b = build_model(cfg)
+    params = b.init_params(jax.random.key(0))
+    batch = make_concrete_batch(cfg, ShapeConfig("p", 64, 2, "prefill"),
+                                jax.random.key(2))
+    toks = batch["tokens"]
+    St = toks.shape[1]
+    b1 = dict(batch)
+    b1["tokens"] = toks[:, :St - 1]
+    last1, cache = jax.jit(lambda p, bb: b.prefill(p, bb, cache_len=96))(
+        params, b1)
+    logits, cache2 = jax.jit(b.decode_step)(params, cache,
+                                            toks[:, St - 1:St])
+    last2, _ = jax.jit(lambda p, bb: b.prefill(p, bb, cache_len=96))(
+        params, batch)
+    err = jnp.max(jnp.abs(logits[:, 0].astype(jnp.float32)
+                          - last2.astype(jnp.float32)))
+    assert float(err) < 2e-2, f"{arch}: decode/prefill diverge by {err}"
+    assert int(cache2["pos"]) == 64
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_output_shapes_and_cells(arch):
+    cfg = reduced(get_config(arch))
+    b = build_model(cfg)
+    params = b.init_params(jax.random.key(0))
+    batch = make_concrete_batch(cfg, ShapeConfig("p", 32, 2, "prefill"),
+                                jax.random.key(3))
+    last, cache = jax.jit(lambda p, bb: b.prefill(p, bb, cache_len=48))(
+        params, batch)
+    V = resolve_dims(cfg, 1).vocab
+    assert last.shape == (2, V)
+    assert not jnp.isnan(last.astype(jnp.float32)).any()
+    cells = cells_for(get_config(arch).name)
+    assert "train_4k" in cells
+    if arch in ("nemotron-4-15b", "yi-9b", "qwen3-14b", "whisper-small",
+                "internvl2-1b"):
+        assert "long_500k" not in cells        # full attention: skipped
+    else:
+        assert "long_500k" in cells
+
+
+def test_sliding_window_bounds_cache():
+    cfg = reduced(get_config("mixtral-8x22b"))
+    assert cfg.sliding_window == 16
+    b = build_model(cfg)
+    cache = b.init_cache(2, 64, dtype=jnp.bfloat16)
+    # ring cache is bounded by the window, not the sequence
+    k = cache["layers"]["k"]
+    assert k.shape[2] == 16
+
+
+def test_param_counts_full_configs():
+    """Full (unreduced) param counts are in the right ballpark."""
+    expect = {
+        "olmoe-1b-7b": (6.5e9, 7.5e9),
+        "mixtral-8x22b": (135e9, 145e9),
+        "nemotron-4-15b": (14e9, 17e9),
+        "yi-9b": (8.0e9, 9.5e9),
+        "qwen3-14b": (13e9, 16e9),
+        "h2o-danube-3-4b": (3.5e9, 4.5e9),
+        "whisper-small": (0.2e9, 0.3e9),
+        "xlstm-125m": (0.1e9, 0.2e9),
+        "jamba-1.5-large-398b": (390e9, 420e9),
+        "internvl2-1b": (0.4e9, 0.8e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        b = build_model(get_config(arch), tp=1)
+        n = b.param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_int8_kv_cache_decode_close():
+    import dataclasses
+    cfg = dataclasses.replace(reduced(get_config("qwen3-14b")),
+                              kv_quant=True)
+    b = build_model(cfg)
+    params = b.init_params(jax.random.key(0))
+    batch = make_concrete_batch(cfg, ShapeConfig("p", 64, 2, "prefill"),
+                                jax.random.key(2))
+    toks = batch["tokens"]
+    _, cache = jax.jit(lambda p, bb: b.prefill(p, bb, cache_len=96))(
+        params, {"tokens": toks[:, :63]})
+    assert cache["layers"]["k"].dtype == jnp.int8
+    logits, _ = jax.jit(b.decode_step)(params, cache, toks[:, 63:64])
+    last2, _ = jax.jit(lambda p, bb: b.prefill(p, bb, cache_len=96))(
+        params, {"tokens": toks})
+    err = jnp.max(jnp.abs(logits[:, 0].astype(jnp.float32)
+                          - last2.astype(jnp.float32)))
+    scale = jnp.max(jnp.abs(last2.astype(jnp.float32)))
+    assert float(err) < 0.05 * float(scale)

@@ -1,0 +1,89 @@
+"""HLO parsing: collective byte accounting + trip-count-aware FLOPs."""
+import textwrap
+
+from repro.launch.hlo_analysis import (analyze_collectives, structural_cost,
+                                       _type_bytes)
+
+
+HLO = textwrap.dedent("""\
+    HloModule test
+
+    %cond.1 (p: (s32[], f32[8,8])) -> pred[] {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %c = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(10)
+      ROOT %lt = pred[] compare(%c, %n), direction=LT
+    }
+
+    %body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %c = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,8] get-tuple-element(%p), index=1
+      %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}
+      %one = s32[] constant(1)
+      %c2 = s32[] add(%c, %one)
+      ROOT %t = (s32[], f32[8,8]) tuple(%c2, %ar)
+    }
+
+    ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+      %a = f32[8,8]{1,0} parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[8,8]) tuple(%zero, %a)
+      %w = (s32[], f32[8,8]) while(%init), condition=%cond.1, body=%body.1
+      %g = f32[8,8]{1,0} get-tuple-element(%w), index=1
+      ROOT %ag = f32[16,8]{1,0} all-gather(%g), dimensions={0}
+    }
+    """)
+
+
+def test_type_bytes():
+    assert _type_bytes("f32[8,8]{1,0}") == 256
+    assert _type_bytes("(s32[], f32[8,8])") == 4 + 256
+    assert _type_bytes("bf16[2,3,4]") == 48
+
+
+def test_collectives_flat_counts():
+    c = analyze_collectives(HLO)
+    assert c["all-reduce"]["count"] == 1
+    assert c["all-reduce"]["operand_bytes"] == 256
+    assert c["all-gather"]["operand_bytes"] == 256
+    assert c["all-gather"]["output_bytes"] == 512
+
+
+def test_structural_cost_multiplies_trip_counts():
+    s = structural_cost(HLO)
+    # dot: 2 * 64 * 8 flops per iteration, 10 iterations
+    assert s["flops"] == 10 * 2 * 64 * 8
+    # all-reduce inside the loop: 10 x 256 bytes; all-gather outside: 256
+    assert s["collective_operand_bytes"]["all-reduce"] == 2560
+    assert s["collective_operand_bytes"]["all-gather"] == 256
+
+
+def test_auto_rules_policy():
+    """Size-aware sharding: small models drop TP, big models keep it."""
+    import os
+    import subprocess
+    import sys
+    SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    code = r"""
+import jax
+from repro.configs.base import SHAPES, get_config
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.shardings import auto_rules
+mesh = make_debug_mesh(data=2, model=4)
+shape = SHAPES["train_4k"]
+small = auto_rules(mesh, get_config("internvl2-1b"), shape, int(0.6e9))
+big = auto_rules(mesh, get_config("mixtral-8x22b"), shape, int(141e9))
+assert small.physical("ffn") is None          # pure DP: no TP
+assert small.physical("batch") == ("data", "model")
+assert big.physical("ffn") == "model"         # TP retained
+print("AUTO_OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0 and "AUTO_OK" in r.stdout, r.stderr
