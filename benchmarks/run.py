@@ -9,6 +9,8 @@ CSV and writes machine-readable results to results/benchmarks/.
   fig6  equal-PE-count aspect-ratio study                [paper Fig. 6]
   lm    the 10 assigned LM archs on the same DSE         [paper future work]
   ablations  model-accounting options (act_reread, idle-PE, load hops)
+  backends   grid_sweep numpy-float64 vs fused Pallas sweep kernel
+  precision  bitwidth DSE: (h, w, act_bits, weight_bits) design points
   kernels    Pallas kernel microbenches (interpret mode)
 """
 from __future__ import annotations
@@ -48,9 +50,14 @@ def fig2_resnet_heatmap():
     s, us = _timeit(lambda: grid_sweep(wl))
     be = np.unravel_index(np.argmin(s.energy), s.energy.shape)
     bu = np.unravel_index(np.argmax(s.utilization), s.utilization.shape)
+    # index of the TPU-like 128x128 config, derived from the actual axes
+    # (the nearest grid point if 128 is not on the grid)
+    i128 = int(np.argmin(np.abs(s.hs - 128)))
+    j128 = int(np.argmin(np.abs(s.ws - 128)))
     derived = (f"minE=({s.hs[be[0]]}x{s.ws[be[1]]})"
                f";maxUtil=({s.hs[bu[0]]}x{s.ws[bu[1]]})"
-               f";util128x128={s.utilization[14][14]:.3f}")
+               f";util{s.hs[i128]}x{s.ws[j128]}="
+               f"{s.utilization[i128][j128]:.3f}")
     _emit("fig2_resnet152_961cfg_sweep", us, derived)
     _save("fig2", {"hs": s.hs, "ws": s.ws, "energy": s.energy,
                    "cycles": s.cycles, "utilization": s.utilization})
@@ -184,6 +191,46 @@ def future_work():
               f";energy_x={float(m.energy)/float(one.energy):.2f}")
 
 
+def backends():
+    """Same 961-config sweep on both grid_sweep backends: numpy float64 vs
+    the fused Pallas kernel (Mosaic on TPU; interpret mode on CPU, where the
+    jit-cached call is the relevant number)."""
+    from repro.core import get_workloads, grid_sweep
+    wl = get_workloads("resnet152")
+    s_np, us_np = _timeit(lambda: grid_sweep(wl, backend="numpy"))
+    _emit("backend_numpy_961cfg", us_np, "float64")
+    s_pl, us_pl = _timeit(lambda: grid_sweep(wl, backend="pallas"))
+    rel = np.abs(s_pl.energy - s_np.energy) / (np.abs(s_np.energy) + 1.0)
+    _emit("backend_pallas_961cfg", us_pl,
+          f"max_rel_vs_numpy={float(rel.max()):.2e}"
+          f";speedup={us_np / us_pl:.2f}x")
+
+
+def precision():
+    """Bitwidth DSE (ArrayFlex-style): (h, w, act_bits, weight_bits) design
+    points with bit-normalized energy and bits/cycle UB bandwidth."""
+    from repro.core import get_workloads, precision_sweep
+    out = {}
+    for model in ("resnet152", "mobilenetv3_large"):
+        wl = get_workloads(model)
+        recs, us = _timeit(
+            lambda w=wl: precision_sweep(w, bit_widths=(4, 8, 16)), n=1)
+        e8 = next(r for r in recs
+                  if r["act_bits"] == 8 and r["weight_bits"] == 8)
+        e4 = next(r for r in recs
+                  if r["act_bits"] == 4 and r["weight_bits"] == 4)
+        e16 = next(r for r in recs
+                   if r["act_bits"] == 16 and r["weight_bits"] == 16)
+        _emit(f"precision_{model}_9pt", us,
+              f"bestE_a4w4=({e4['best_h']}x{e4['best_w']})"
+              f";E4/E8={e4['min_energy'] / e8['min_energy']:.3f}"
+              f";E16/E8={e16['min_energy'] / e8['min_energy']:.3f}"
+              f";bw_bits_a8w8={e8['ub_bw_bits_at_best']:.0f}")
+        out[model] = [{k: v for k, v in r.items() if k != "sweep"}
+                      for r in recs]
+    _save("precision", out)
+
+
 def kernels():
     import jax.numpy as jnp
     from repro.kernels import ops
@@ -218,6 +265,8 @@ def main() -> None:
     lm_architectures()
     ablations()
     future_work()
+    backends()
+    precision()
     kernels()
 
 

@@ -1,14 +1,18 @@
-"""CAMUY core: weight-stationary systolic-array modeling + DSE.
+"""CAMUY core: systolic-array modeling + DSE.
 
 Public API:
     analyze_gemm / analyze_network  — analytical model (cycles, util, Eq.1)
+    Precision / list_dataflows      — bitwidths + dataflow registry
     emulate_gemm                    — cycle-level wavefront oracle
-    grid_sweep / pareto_* / robust_config / equal_pe_sweep — paper §4-§5
+    grid_sweep (numpy|pallas) / precision_sweep / pareto_* /
+        robust_config / equal_pe_sweep — paper §4-§5 + bitwidth DSE
     get_workloads (CNN zoo) / extract_workloads (LM archs)
 """
+from repro.core.model_core import (Precision, list_dataflows,  # noqa
+                                   register_dataflow)
 from repro.core.systolic import SystolicMetrics, analyze_gemm, analyze_network  # noqa
 from repro.core.emulator import emulate_gemm, emulate_tile_pass  # noqa
-from repro.core.dse import (grid_sweep, pareto_grid, pareto_nsga2,  # noqa
-                            robust_config, equal_pe_sweep)
+from repro.core.dse import (grid_sweep, precision_sweep, pareto_grid,  # noqa
+                            pareto_nsga2, robust_config, equal_pe_sweep)
 from repro.core.cnn_zoo import ZOO, get_workloads  # noqa
 from repro.core.lm_workloads import extract_workloads  # noqa

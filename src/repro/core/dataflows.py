@@ -1,94 +1,44 @@
-"""Beyond-paper: the two extensions the paper names as future work —
-an OUTPUT-STATIONARY dataflow variant and MULTI-ARRAY configurations.
+"""Beyond-paper dataflow variants: thin wrappers over the registry in
+core/model_core.py (the single home of the closed forms).
 
-Output-stationary (OS) model
-----------------------------
+Output-stationary (OS)
+----------------------
 Each PE owns one output element o(m, j); A streams from the left, W from
-the top, both skewed; the K reduction happens in place. For tiles
-(m_t <= h rows of O, w_t <= w cols):
+the top, both skewed; the K reduction happens in place:
     pass_cycles = K + h_t + w_t - 1          (stream K + skew)
     tiles: Tm = ceil(M/h), Tn = ceil(N/w)
-    UB traffic: A re-read per column tile (Tn * M * K), W re-read per row
-    tile (Tm * K * N), O written once (no accumulator array: M_AA = 0).
-    inter-PE: A hops right (w_t - 1 per element-pass), W hops down
-    (h_t - 1), no psum hops.
+    UB traffic: A re-read per column tile, W re-read per row tile, O written
+    once (no accumulator array: M_AA = 0); A hops right, W hops down, no
+    psum hops.
 Weight-stationary amortizes weight fetches; output-stationary eliminates
 partial-sum movement — the cycles/energy crossover the paper's future work
 asks about falls out of comparing the two closed forms (benchmarks
 `os_vs_ws`).
 
-Multi-array model
------------------
+Multi-array
+-----------
 P independent h x w arrays with the layer's GEMM partitioned N-wise
-(output-channel parallel, the natural weight-stationary split):
-    N_p = ceil(N / P); cycles = cycles(M, K, N_p); UB weight traffic is
-unchanged (each array loads only its filters); activation reads REPLICATE
-per array (each needs the full A stream) — the energy/parallelism tension
-the TPU's single big array avoids.
+(output-channel parallel, the natural weight-stationary split): cycles are
+the parallel makespan; weight/output traffic splits across arrays while the
+activation stream REPLICATES per array — the energy/parallelism tension the
+TPU's single big array avoids.
 """
 from __future__ import annotations
 
-import dataclasses
-
-import numpy as np
-
+from repro.core.model_core import Precision, list_dataflows  # noqa: F401
 from repro.core.systolic import SystolicMetrics, analyze_gemm
 
 
-def analyze_gemm_os(M, K, N, h, w, *, groups: int = 1):
+def analyze_gemm_os(M, K, N, h, w, *, groups: int = 1,
+                    precision: Precision = None) -> SystolicMetrics:
     """Output-stationary counterpart of systolic.analyze_gemm."""
-    f = lambda x: np.asarray(x, np.float64)
-    M, K, N, h, w = map(f, (M, K, N, h, w))
-    g = f(groups)
-    Tm = np.ceil(M / h)
-    Tn = np.ceil(N / w)
-    rm = M - (Tm - 1) * h
-    rn = N - (Tn - 1) * w
-
-    def tsum(fn):
-        return ((Tm - 1) * (Tn - 1) * fn(h, w) + (Tm - 1) * fn(h, rn)
-                + (Tn - 1) * fn(rm, w) + fn(rm, rn))
-
-    pass_cycles = tsum(lambda ht, wt: K + ht + wt - 1)
-    cycles = g * pass_cycles
-    macs = g * M * K * N
-    util = macs / (cycles * h * w)
-
-    ub_act = Tn * M * K                   # A re-read per column tile
-    ub_weight = Tm * K * N                # W re-read per row tile
-    ub_out = M * N
-    m_ub = g * (ub_act + ub_weight + ub_out)
-    inter = g * (tsum(lambda ht, wt: K * ht * (wt - 1))      # A right-hops
-                 + tsum(lambda ht, wt: K * wt * (ht - 1)))   # W down-hops
-    m_intra = g * (3 * M * K * N + M * N)  # acc reg rw + final store
-    m_aa = np.zeros_like(cycles)           # no accumulator array
-    energy = 6 * m_ub + 2 * (inter + m_aa) + m_intra
-    return SystolicMetrics(
-        cycles=cycles, utilization=util, macs=macs, m_ub=m_ub,
-        m_ub_act=g * ub_act, m_ub_weight=g * ub_weight, m_ub_out=g * ub_out,
-        m_inter_pe=inter, m_intra_pe=m_intra, m_aa=m_aa, energy=energy,
-        weight_load_cycles=np.zeros_like(cycles),
-        update_ports=np.ones_like(cycles),
-        ub_bandwidth=h + w)
+    return analyze_gemm(M, K, N, h, w, groups=groups, dataflow="os",
+                        precision=precision)
 
 
-def analyze_gemm_multi(M, K, N, h, w, *, n_arrays: int = 2,
-                       groups: int = 1):
+def analyze_gemm_multi(M, K, N, h, w, *, n_arrays: int = 2, groups: int = 1,
+                       precision: Precision = None) -> SystolicMetrics:
     """P arrays, output-channel (N) partitioned; returns combined metrics.
     Cycles reflect the parallel makespan; data movement sums all arrays."""
-    P = n_arrays
-    Np = np.ceil(np.asarray(N, np.float64) / P)
-    one = analyze_gemm(M, K, Np, h, w, groups=groups)
-    # activation stream replicated to every array; weights/outputs split
-    d = dataclasses.asdict(one)
-    d["m_ub_act"] = one.m_ub_act * P
-    d["m_ub"] = d["m_ub_act"] + one.m_ub_weight * P + one.m_ub_out * P
-    d["m_inter_pe"] = one.m_inter_pe * P
-    d["m_intra_pe"] = one.m_intra_pe * P
-    d["m_aa"] = one.m_aa * P
-    d["macs"] = one.macs * P
-    d["energy"] = (6 * d["m_ub"] + 2 * (d["m_inter_pe"] + d["m_aa"])
-                   + d["m_intra_pe"])
-    d["utilization"] = d["macs"] / np.maximum(
-        np.asarray(one.cycles) * h * w * P, 1.0)
-    return SystolicMetrics(**d)
+    return analyze_gemm(M, K, N, h, w, groups=groups, dataflow="multi_array",
+                        n_arrays=n_arrays, precision=precision)

@@ -2,6 +2,11 @@
 
 * grid_sweep: all (h, w) in [16..256 step 8]^2 (961 configs) for a network's
   workloads — vectorized in one shot over the whole grid (Fig. 2/4 heatmaps).
+  `backend="numpy"` (float64, exact) or `backend="pallas"` (the fused sweep
+  kernel from kernels/dse_eval.py; Mosaic on TPU, interpret mode elsewhere).
+* precision_sweep: the bitwidth design space — (h, w, act_bits, weight_bits)
+  points with bit-normalized energy / bits-per-cycle UB bandwidth
+  (ArrayFlex-style configurable-precision arrays).
 * pareto_grid / pareto_nsga2: frontier of (cycles vs energy) and
   (cycles vs -utilization) (Fig. 3).
 * robust_config: averaged min-max-normalized (energy, cycles) across a model
@@ -12,11 +17,13 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+import itertools
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core import systolic
+from repro.core.model_core import Precision
 from repro.core.pareto import nsga2, pareto_mask
 from repro.core.workloads import Workload
 
@@ -39,17 +46,14 @@ class SweepResult:
     m_ub: np.ndarray
     m_inter_pe: np.ndarray
     m_aa: np.ndarray
+    ub_bw_bits: Optional[np.ndarray] = None   # (G, G) bits/cycle
 
     def flat(self):
         return {k: getattr(self, k).reshape(-1)
                 for k in ("cycles", "energy", "utilization")}
 
 
-def grid_sweep(workloads: Sequence[Workload], hs=None, ws=None,
-               **model_kw) -> SweepResult:
-    hs = grid_axes() if hs is None else np.asarray(hs)
-    ws = grid_axes() if ws is None else np.asarray(ws)
-    H, W = np.meshgrid(hs, ws, indexing="ij")
+def _grid_sweep_numpy(workloads, hs, ws, H, W, **model_kw):
     m = systolic.analyze_network(list(workloads), H.astype(np.float64),
                                  W.astype(np.float64), **model_kw)
     return SweepResult(hs=hs, ws=ws, H=H, W=W, cycles=np.asarray(m.cycles),
@@ -57,7 +61,82 @@ def grid_sweep(workloads: Sequence[Workload], hs=None, ws=None,
                        utilization=np.asarray(m.utilization),
                        m_ub=np.asarray(m.m_ub),
                        m_inter_pe=np.asarray(m.m_inter_pe),
-                       m_aa=np.asarray(m.m_aa))
+                       m_aa=np.asarray(m.m_aa),
+                       ub_bw_bits=np.asarray(m.ub_bandwidth_bits))
+
+
+def _grid_sweep_pallas(workloads, hs, ws, H, W, block_c=128, **model_kw):
+    """Dispatch the whole grid to the fused Pallas sweep kernel.
+
+    The config list is auto-padded up to a multiple of the kernel block
+    (repeating the last design point) and unpadded afterwards; off-TPU the
+    kernel runs in interpret mode (kernels/ops handles the fallback).
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels.dse_eval import OUT_COLS
+
+    cfgs = np.stack([H.reshape(-1), W.reshape(-1)], axis=1)
+    C = cfgs.shape[0]
+    pad = (-C) % block_c
+    if pad:
+        cfgs = np.concatenate([cfgs, np.repeat(cfgs[-1:], pad, 0)], axis=0)
+    layers = np.asarray(
+        [(m, k, n, g, r) for (m, k, n, g, r) in workloads], np.float32)
+    out = np.asarray(ops.sweep(jnp.asarray(cfgs, jnp.float32),
+                               jnp.asarray(layers), block_c=block_c,
+                               **model_kw))[:C]
+    col = {k: out[:, j].reshape(H.shape) for j, k in enumerate(OUT_COLS)}
+    return SweepResult(hs=hs, ws=ws, H=H, W=W, cycles=col["cycles"],
+                       energy=col["energy"],
+                       utilization=col["utilization"], m_ub=col["m_ub"],
+                       m_inter_pe=col["m_inter_pe"], m_aa=col["m_aa"],
+                       ub_bw_bits=col["ub_bandwidth_bits"])
+
+
+def grid_sweep(workloads: Sequence[Workload], hs=None, ws=None,
+               backend: str = "numpy", **model_kw) -> SweepResult:
+    hs = grid_axes() if hs is None else np.asarray(hs)
+    ws = grid_axes() if ws is None else np.asarray(ws)
+    H, W = np.meshgrid(hs, ws, indexing="ij")
+    if backend == "numpy":
+        return _grid_sweep_numpy(workloads, hs, ws, H, W, **model_kw)
+    if backend == "pallas":
+        return _grid_sweep_pallas(workloads, hs, ws, H, W, **model_kw)
+    raise ValueError(f"unknown backend {backend!r} (numpy|pallas)")
+
+
+def precision_sweep(workloads: Sequence[Workload],
+                    bit_widths: Sequence[int] = (4, 8, 16),
+                    hs=None, ws=None, out_bits: int = None,
+                    backend: str = "numpy", **model_kw) -> List[dict]:
+    """Sweep the (h, w, act_bits, weight_bits) design space.
+
+    For every (act_bits, weight_bits) pair the full (h, w) grid is evaluated
+    with bit-normalized energy and bits/cycle UB bandwidth; `out_bits`
+    defaults to max(act_bits, weight_bits) (accumulate at the wider operand
+    width). Returns one record per precision point with the best-energy
+    configuration and its bandwidth demand.
+    """
+    records = []
+    for ab, wb in itertools.product(bit_widths, bit_widths):
+        prec = Precision(act_bits=ab, weight_bits=wb,
+                         out_bits=out_bits if out_bits else max(ab, wb))
+        s = grid_sweep(workloads, hs=hs, ws=ws, backend=backend,
+                       precision=prec, **model_kw)
+        i, j = np.unravel_index(np.argmin(s.energy), s.energy.shape)
+        records.append({
+            "act_bits": ab, "weight_bits": wb,
+            "out_bits": prec.out_bits,
+            "best_h": int(s.hs[i]), "best_w": int(s.ws[j]),
+            "min_energy": float(s.energy[i, j]),
+            "cycles_at_best": float(s.cycles[i, j]),
+            "util_at_best": float(s.utilization[i, j]),
+            "ub_bw_bits_at_best": float(s.ub_bw_bits[i, j]),
+            "sweep": s,
+        })
+    return records
 
 
 def pareto_grid(sweep: SweepResult, objectives=("energy", "cycles")):

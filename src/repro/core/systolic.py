@@ -19,18 +19,21 @@ For a GEMM  O[M,N] = A[M,K] @ W[K,N]:
   * data movement counters follow Eyeriss-style accounting (paper Eq. 1):
         E = 6*M_UB + 2*(M_INTER_PE + M_AA) + M_INTRA_PE
 
-All outputs are exact closed forms over the 4 tile classes
-(full/edge-row/edge-col/corner), so the whole model is jnp-vectorizable over
-thousands of (h, w) configurations at once. Counts are validated
+This module is a thin float64-numpy wrapper: the closed forms themselves
+live ONCE in core/model_core.py (backend-agnostic over numpy / jax.numpy,
+with a dataflow registry and bitwidth-aware accounting) and are shared with
+the Pallas sweep kernel in kernels/dse_eval.py. Counts are validated
 instruction-exactly against the cycle-level wavefront emulator
 (core/emulator.py) in tests/test_systolic.py.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Union
 
 import numpy as np
+
+from repro.core.model_core import (METRIC_FIELDS, Precision,
+                                   analyze_gemm_core, pe_multiplier)
 
 # numpy float64 throughout: cycle/movement counts exceed 2^24 for real nets,
 # where float32 would silently round. The JAX-side vectorized evaluation of
@@ -40,7 +43,13 @@ Array = np.ndarray
 
 @dataclasses.dataclass(frozen=True)
 class SystolicMetrics:
-    """All counts are totals for the given GEMM (scalar or batched array)."""
+    """All counts are totals for the given GEMM (scalar or batched array).
+
+    Movement counters (m_*) are word counts; `energy` is bit-normalized
+    Eq. 1 (scaled per operand by bits/8 — identical to the word-count paper
+    accounting at the default 8/8/8 precision). `ub_bandwidth` is words/
+    cycle, `ub_bandwidth_bits` the same requirement in bits/cycle.
+    """
     cycles: Array
     utilization: Array
     macs: Array
@@ -51,10 +60,11 @@ class SystolicMetrics:
     m_inter_pe: Array           # neighbour-register reads
     m_intra_pe: Array           # local register reads/writes
     m_aa: Array                 # array -> accumulator transfers
-    energy: Array               # paper Eq. 1
+    energy: Array               # paper Eq. 1, bit-normalized
     weight_load_cycles: Array   # not hidden by double buffering
     update_ports: Array         # concurrent weight updates for stall-free
     ub_bandwidth: Array         # words/cycle for stall-free execution
+    ub_bandwidth_bits: Array    # bits/cycle for stall-free execution
 
     def tree(self):
         return dataclasses.asdict(self)
@@ -62,7 +72,8 @@ class SystolicMetrics:
 
 def analyze_gemm(M, K, N, h, w, *, count_weight_load_hops: bool = False,
                  act_reread: bool = False, idle_pe_energy: float = 0.0,
-                 groups: int = 1):
+                 groups: int = 1, dataflow: str = "ws",
+                 precision: Precision = None, n_arrays: int = 1):
     """Analytical metrics for (possibly grouped) GEMM on an h x w array.
 
     All of M, K, N, h, w may be numpy/jnp arrays (broadcastable): the model
@@ -80,107 +91,54 @@ def analyze_gemm(M, K, N, h, w, *, count_weight_load_hops: bool = False,
       count_weight_load_hops — additionally count the pass-through hops of
         weights sinking to their rows during loads (penalizes extreme
         heights; off by default since Eq. 1 does not include them).
+      dataflow — "ws" (default), "os", or "multi_array" (see
+        core/model_core.py); `n_arrays` applies to "multi_array" only.
+      precision — per-operand bitwidths for bit-normalized energy and
+        bits/cycle bandwidth (default 8/8/8 == the paper's word counts).
     """
     f = lambda x: np.asarray(x, np.float64)
-    M, K, N, h, w = map(f, (M, K, N, h, w))
-    g = f(groups)
-
-    Tk = np.ceil(K / h)
-    Tn = np.ceil(N / w)
-    rk = K - (Tk - 1) * h          # edge tile height (1..h)
-    rn = N - (Tn - 1) * w
-
-    def tsum(fn):
-        """sum over tiles of fn(h_t, w_t) — exact via the 4 tile classes."""
-        return ((Tk - 1) * (Tn - 1) * fn(h, w)
-                + (Tk - 1) * fn(h, rn)
-                + (Tn - 1) * fn(rk, w)
-                + fn(rk, rn))
-
-    # ---- cycles --------------------------------------------------------
-    # Subsequent weight loads are ALWAYS hidden by double buffering here:
-    # a load takes h_t <= h cycles while the previous pass runs
-    # M + h_prev + w_prev - 1 >= h cycles. Only the first load is exposed.
-    # (Validated cycle-exactly by the emulator.)
-    pass_cycles = tsum(lambda ht, wt: M + ht + wt - 1)
-    first_load = np.where(Tk * Tn > 1, h, rk)
-    weight_load_cycles = first_load
-    min_pass = M + np.minimum(h, rk) + np.minimum(w, rn) - 1
-    cycles = g * (pass_cycles + weight_load_cycles)
-
-    # ---- MACs / utilization -------------------------------------------
-    macs = g * M * K * N
-    utilization = macs / (cycles * h * w)
-
-    # ---- data movements (per group, scaled by g) -----------------------
-    ub_act = (Tn * M * K) if act_reread else (M * K)
-    ub_weight = K * N                      # W fetched once
-    ub_out = M * N                         # final outputs written back
-    m_ub = g * (ub_act + ub_weight + ub_out)
-
-    inter_act = tsum(lambda ht, wt: M * ht * (wt - 1))
-    inter_psum = tsum(lambda ht, wt: M * wt * (ht - 1))
-    inter_wload = tsum(lambda ht, wt: wt * ht * (ht - 1) / 2.0) \
-        if count_weight_load_hops else 0.0
-    m_inter = g * (inter_act + inter_psum + inter_wload)
-
-    # 3 local register accesses per MAC (weight-reg read, psum write,
-    # activation latch) + double-buffer weight-reg writes
-    m_intra = g * (3 * M * K * N + K * N)
-
-    # accumulator array: each deposited partial is a read-modify-write
-    # (2 accesses). Note this is what breaks the exact cancellation between
-    # psum-hop reduction and extra partials — energy becomes height-
-    # dominated, reproducing the paper's Fig.2/Fig.5 tall-narrow optima.
-    m_aa = 2.0 * g * tsum(lambda ht, wt: M * wt)   # = 2 g Tk M N
-    energy = 6 * m_ub + 2 * (m_inter + m_aa) + m_intra
-    if idle_pe_energy:
-        # optional clock/leakage cost of idle PE-cycles: strict Eq.1 carries
-        # no such term; with it, group-conv models sharply prefer SMALL
-        # arrays (the paper's "smaller is better" finding). Ablated in
-        # benchmarks/ablations.py.
-        energy = energy + idle_pe_energy * (cycles * h * w - macs)
-
-    # stall-free UB bandwidth: activations in (h/cycle) + AA drain (w/cycle)
-    # + weight prefetch rate (h*w words over one pass)
-    ports = np.maximum(np.ceil(h / np.maximum(min_pass, 1.0)), 1.0)
-    ub_bw = h + w + h * w / np.maximum(min_pass, 1.0)
-
-    return SystolicMetrics(
-        cycles=cycles, utilization=utilization, macs=macs,
-        m_ub=m_ub, m_ub_act=g * ub_act, m_ub_weight=g * ub_weight,
-        m_ub_out=g * ub_out, m_inter_pe=m_inter, m_intra_pe=m_intra,
-        m_aa=m_aa, energy=energy, weight_load_cycles=g * weight_load_cycles,
-        update_ports=ports, ub_bandwidth=ub_bw)
+    d = analyze_gemm_core(
+        np, f(M), f(K), f(N), f(h), f(w), dataflow=dataflow,
+        groups=f(groups), precision=precision, act_reread=act_reread,
+        count_weight_load_hops=count_weight_load_hops,
+        idle_pe_energy=idle_pe_energy, n_arrays=n_arrays)
+    return SystolicMetrics(**{k: d[k] for k in METRIC_FIELDS})
 
 
-def combine(metrics_list):
-    """Sum metrics over a network's layers (cycles add: serialized)."""
+def combine(metrics_list, pe_count=None):
+    """Sum metrics over a network's layers (cycles add: serialized).
+
+    `pe_count` (h*w, or h*w*P for multi-array) is needed to normalize the
+    combined utilization; when it is None the field is explicitly deferred
+    as NaN rather than silently wrong.
+    """
+    _MAXED = ("update_ports", "ub_bandwidth", "ub_bandwidth_bits")
     out = {}
     for k in SystolicMetrics.__dataclass_fields__:
         vals = [getattr(m, k) for m in metrics_list]
-        if k in ("utilization", "update_ports", "ub_bandwidth"):
-            out[k] = None    # recomputed below / maxed
+        if k == "utilization":
+            out[k] = None      # recomputed below
+        elif k in _MAXED:
+            out[k] = np.stack([np.asarray(v) for v in vals]).max(axis=0)
         else:
             out[k] = sum(vals)
-    out["utilization"] = out["macs"] / np.maximum(out["cycles"], 1.0) \
-        / 1.0  # filled by caller with /(h*w)
-    out["update_ports"] = np.stack(
-        [np.asarray(m.update_ports) for m in metrics_list]).max(axis=0)
-    out["ub_bandwidth"] = np.stack(
-        [np.asarray(m.ub_bandwidth) for m in metrics_list]).max(axis=0)
+    if pe_count is None:
+        out["utilization"] = np.full_like(
+            np.asarray(out["cycles"], np.float64), np.nan)
+    else:
+        out["utilization"] = out["macs"] / (
+            np.maximum(out["cycles"], 1.0) * np.asarray(pe_count, np.float64))
     return SystolicMetrics(**out)
 
 
 def analyze_network(workloads, h, w, **kw):
     """workloads: iterable of (M, K, N, groups, repeats). Returns combined
-    SystolicMetrics with utilization normalized by h*w."""
+    SystolicMetrics with utilization normalized by the PE count."""
     ms = []
     for wl in workloads:
         M, K, N, g, rep = wl
         m = analyze_gemm(M, K, N, h, w, groups=g * rep, **kw)
         ms.append(m)
-    tot = combine(ms)
-    util = tot.macs / (np.maximum(tot.cycles, 1.0)
-                       * np.asarray(h, np.float64) * np.asarray(w, np.float64))
-    return dataclasses.replace(tot, utilization=util)
+    pe = (np.asarray(h, np.float64) * np.asarray(w, np.float64)
+          * pe_multiplier(kw.get("dataflow", "ws"), kw.get("n_arrays", 1)))
+    return combine(ms, pe_count=pe)

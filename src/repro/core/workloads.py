@@ -25,15 +25,37 @@ class Conv:
     repeats: int = 1
     pad: str = "same"      # same | valid
     name: str = ""
+    w_in: int = 0          # 0 => square input (w_in = h_in)
+    dilation: int = 1
+
+    @property
+    def k_eff(self) -> int:
+        """Effective receptive field of the dilated kernel."""
+        return self.dilation * (self.k - 1) + 1
+
+    def _out(self, d_in: int) -> int:
+        if self.pad == "same":
+            return -(-d_in // self.stride)
+        out = (d_in - self.k_eff) // self.stride + 1
+        if out < 1:
+            raise ValueError(
+                f"Conv{(' ' + self.name) if self.name else ''}: effective "
+                f"receptive field {self.k_eff} (k={self.k}, dilation="
+                f"{self.dilation}) exceeds valid-padded input {d_in}")
+        return out
 
     @property
     def h_out(self) -> int:
-        if self.pad == "same":
-            return -(-self.h_in // self.stride)
-        return (self.h_in - self.k) // self.stride + 1
+        return self._out(self.h_in)
+
+    @property
+    def w_out(self) -> int:
+        return self._out(self.w_in or self.h_in)
 
     def gemm(self) -> Workload:
-        m = self.h_out * self.h_out
+        # im2col: dilation changes WHICH taps are gathered, not how many,
+        # so K is unchanged; M shrinks via the effective receptive field.
+        m = self.h_out * self.w_out
         kk = (self.c_in // self.groups) * self.k * self.k
         n = self.c_out // self.groups
         return (m, kk, n, self.groups, self.repeats)

@@ -4,11 +4,19 @@ Evaluates the CAMUY closed forms for a whole block of (h, w) configurations
 against a VMEM-resident layer table in one grid step — the TPU-native
 version of the paper's config sweep (961 configs x O(100) layers).
 
+The closed forms are NOT duplicated here: the kernel body calls the same
+backend-agnostic core as the float64 numpy path (core/model_core.py with
+xp=jax.numpy), so every model option (dataflow ws/os/multi_array,
+act_reread, count_weight_load_hops, idle_pe_energy, per-operand bitwidths)
+is supported identically on both backends. Options are jit-static: each
+distinct option set compiles once.
+
 Inputs:
   configs: (C, 2) float32 — (h, w) per design point, C % block_c == 0
   layers:  (L, 5) float32 — (M, K, N, groups, repeats) per GEMM workload
 Outputs:
-  (C, 4) float32 — [cycles, energy, macs, util]
+  (C, 8) float32 — OUT_COLS per design point (movement counters summed over
+  layers, ub_bw_bits maxed, utilization normalized by the PE count).
 """
 from __future__ import annotations
 
@@ -18,61 +26,80 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.model_core import (Precision, analyze_gemm_core,
+                                   pe_multiplier)
 
-def _eval_block(h, w, layers):
-    """Vectorized closed forms (mirrors core/systolic.py, f32)."""
+OUT_COLS = ("cycles", "energy", "macs", "utilization", "m_ub", "m_inter_pe",
+            "m_aa", "ub_bandwidth_bits")
+
+
+def _eval_block(h, w, layers, *, dataflow, precision, act_reread,
+                count_weight_load_hops, idle_pe_energy, n_arrays):
+    """(block_c,) h/w vs (L, 5) layer table -> (block_c, 8) metrics."""
     M = layers[:, 0][None, :]
     K = layers[:, 1][None, :]
     N = layers[:, 2][None, :]
     g = (layers[:, 3] * layers[:, 4])[None, :]
     h = h[:, None]
     w = w[:, None]
-    Tk = jnp.ceil(K / h)
-    Tn = jnp.ceil(N / w)
-    rk = K - (Tk - 1) * h
-    rn = N - (Tn - 1) * w
+    d = analyze_gemm_core(
+        jnp, M, K, N, h, w, dataflow=dataflow, groups=g,
+        precision=precision, act_reread=act_reread,
+        count_weight_load_hops=count_weight_load_hops,
+        idle_pe_energy=idle_pe_energy, n_arrays=n_arrays)
+    # terms independent of (h, w) — e.g. macs, UB word counts — come back
+    # (1, L); broadcast to the full (block_c, L) before reducing over layers
+    full = (h.shape[0], layers.shape[0])
+    _sum = lambda x: jnp.sum(jnp.broadcast_to(x, full), axis=1)
+    _max = lambda x: jnp.max(jnp.broadcast_to(x, full), axis=1)
+    cyc = _sum(d["cycles"])
+    mc = _sum(d["macs"])
+    pe = h[:, 0] * w[:, 0] * pe_multiplier(dataflow, n_arrays)
+    cols = {
+        "cycles": cyc,
+        "energy": _sum(d["energy"]),
+        "macs": mc,
+        "utilization": mc / jnp.maximum(cyc * pe, 1.0),
+        "m_ub": _sum(d["m_ub"]),
+        "m_inter_pe": _sum(d["m_inter_pe"]),
+        "m_aa": _sum(d["m_aa"]),
+        "ub_bandwidth_bits": _max(d["ub_bandwidth_bits"]),
+    }
+    return jnp.stack([cols[k] for k in OUT_COLS], axis=1)
 
-    def tsum(fn):
-        return ((Tk - 1) * (Tn - 1) * fn(h, w) + (Tk - 1) * fn(h, rn)
-                + (Tn - 1) * fn(rk, w) + fn(rk, rn))
 
-    pass_cycles = tsum(lambda ht, wt: M + ht + wt - 1)
-    first_load = jnp.where(Tk * Tn > 1, h, rk)
-    cycles = g * (pass_cycles + first_load)
-    macs = (g * M * K * N) * jnp.ones_like(h)   # broadcast to (C, L)
-    m_ub = g * (M * K + K * N + M * N)
-    inter = g * (tsum(lambda ht, wt: M * ht * (wt - 1))
-                 + tsum(lambda ht, wt: M * wt * (ht - 1)))
-    m_intra = g * (3 * M * K * N + K * N)
-    m_aa = 2.0 * g * tsum(lambda ht, wt: M * wt)
-    energy = 6 * m_ub + 2 * (inter + m_aa) + m_intra
-    cyc = jnp.sum(cycles, axis=1)
-    en = jnp.sum(energy, axis=1)
-    mc = jnp.sum(macs, axis=1)
-    util = mc / jnp.maximum(cyc * h[:, 0] * w[:, 0], 1.0)
-    return jnp.stack([cyc, en, mc, util], axis=1)
-
-
-def _kernel(cfg_ref, layers_ref, out_ref):
+def _kernel(cfg_ref, layers_ref, out_ref, **opts):
     h = cfg_ref[:, 0]
     w = cfg_ref[:, 1]
-    out_ref[...] = _eval_block(h, w, layers_ref[...])
+    out_ref[...] = _eval_block(h, w, layers_ref[...], **opts)
 
 
-@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_c", "interpret", "dataflow", "precision",
+                     "act_reread", "count_weight_load_hops",
+                     "idle_pe_energy", "n_arrays"))
 def dse_eval(configs, layers, *, block_c: int = 128,
-             interpret: bool = False):
+             interpret: bool = False, dataflow: str = "ws",
+             precision: Precision = None, act_reread: bool = False,
+             count_weight_load_hops: bool = False,
+             idle_pe_energy: float = 0.0, n_arrays: int = 1):
     C = configs.shape[0]
     L = layers.shape[0]
     assert C % block_c == 0, (C, block_c)
+    kernel = functools.partial(
+        _kernel, dataflow=dataflow, precision=precision,
+        act_reread=act_reread,
+        count_weight_load_hops=count_weight_load_hops,
+        idle_pe_energy=idle_pe_energy, n_arrays=n_arrays)
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid=(C // block_c,),
         in_specs=[
             pl.BlockSpec((block_c, 2), lambda i: (i, 0)),
             pl.BlockSpec((L, 5), lambda i: (0, 0)),   # layer table resident
         ],
-        out_specs=pl.BlockSpec((block_c, 4), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((C, 4), jnp.float32),
+        out_specs=pl.BlockSpec((block_c, len(OUT_COLS)), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, len(OUT_COLS)), jnp.float32),
         interpret=interpret,
     )(configs.astype(jnp.float32), layers.astype(jnp.float32))

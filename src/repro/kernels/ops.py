@@ -32,6 +32,9 @@ def attention(q, k, v, *, window=None, block_q=128, block_kv=128,
                          block_kv=block_kv, interpret=interpret)
 
 
-def sweep(configs, layers, *, block_c=128, interpret=None):
+def sweep(configs, layers, *, block_c=128, interpret=None, **model_kw):
+    """DSE sweep kernel; `model_kw` passes dataflow/precision/accounting
+    options through to the shared model core (see kernels/dse_eval.py)."""
     interpret = _default_interpret() if interpret is None else interpret
-    return dse_eval(configs, layers, block_c=block_c, interpret=interpret)
+    return dse_eval(configs, layers, block_c=block_c, interpret=interpret,
+                    **model_kw)

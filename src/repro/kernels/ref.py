@@ -27,15 +27,15 @@ def swa_attention_ref(q, k, v, *, window=None):
                       ).astype(q.dtype)
 
 
-def dse_eval_ref(configs, layers):
-    """numpy oracle via core.systolic (float64, exact)."""
+def dse_eval_ref(configs, layers, **model_kw):
+    """numpy oracle via core.systolic (float64, exact); columns follow
+    kernels.dse_eval.OUT_COLS."""
     from repro.core.systolic import analyze_network
+    from repro.kernels.dse_eval import OUT_COLS
     configs = np.asarray(configs, np.float64)
-    out = np.zeros((configs.shape[0], 4), np.float32)
+    out = np.zeros((configs.shape[0], len(OUT_COLS)), np.float32)
     wls = [tuple(map(float, row)) for row in np.asarray(layers)]
-    m = analyze_network(wls, configs[:, 0], configs[:, 1])
-    out[:, 0] = m.cycles
-    out[:, 1] = m.energy
-    out[:, 2] = m.macs
-    out[:, 3] = m.utilization
+    m = analyze_network(wls, configs[:, 0], configs[:, 1], **model_kw)
+    for j, k in enumerate(OUT_COLS):
+        out[:, j] = getattr(m, k)
     return out

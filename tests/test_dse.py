@@ -1,6 +1,6 @@
 """DSE layer: paper-claim regressions + Pareto/NSGA-II correctness."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (ZOO, equal_pe_sweep, get_workloads, grid_sweep,
                         pareto_grid, robust_config)

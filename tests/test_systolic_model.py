@@ -3,7 +3,7 @@ plus hypothesis property tests on the model's invariants."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.emulator import emulate_gemm
 from repro.core.systolic import analyze_gemm, analyze_network
