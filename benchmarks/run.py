@@ -8,13 +8,19 @@ CSV and writes machine-readable results to results/benchmarks/.
   fig5  robust configuration across the model mix        [paper Fig. 5]
   fig6  equal-PE-count aspect-ratio study                [paper Fig. 6]
   lm    the 10 assigned LM archs on the same DSE         [paper future work]
+  connectivity  graph-IR liveness: peak UB residency + finite-UB spill for
+        chain vs residual vs dense-concat networks       [beyond paper]
   ablations  model-accounting options (act_reread, idle-PE, load hops)
   backends   grid_sweep numpy-float64 vs fused Pallas sweep kernel
   precision  bitwidth DSE: (h, w, act_bits, weight_bits) design points
   kernels    Pallas kernel microbenches (interpret mode)
+
+``--quick`` runs only a reduced capacity sweep on both backends and writes
+results/benchmarks/BENCH_graph.json (the CI smoke/perf-trajectory probe).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -151,6 +157,70 @@ def lm_architectures():
     _save("lm_archs", out)
 
 
+def connectivity():
+    """Graph-IR study: how connectivity (skip / dense-concat edges) changes
+    peak UB residency and finite-capacity spill energy, chain baseline
+    (VGG-16) vs residual (ResNet-152) vs dense concat (DenseNet-201)."""
+    from repro.core.dse import UB_KIBS, capacity_sweep
+    from repro.graph import build_graph
+    from repro.graph.schedule import occupancy_profile
+    out = {"ub_kibs": list(UB_KIBS), "models": {}}
+    for name in ("vgg16", "resnet152", "densenet201"):
+        g = build_graph(name)
+        (cs, us) = _timeit(lambda gg=g: capacity_sweep(gg), n=1)
+        chain = occupancy_profile(g.as_chain(), "dfs")
+        bfs = occupancy_profile(g, "bfs")
+        mib = 1.0 / (8.0 * 2 ** 20)
+        rec = {
+            "peak_mib_dfs": cs.peak_bits * mib,
+            "peak_mib_bfs": bfs.peak_bits * mib,
+            "peak_mib_chain": chain.peak_bits * mib,
+            "connectivity_ratio": cs.peak_bits / chain.peak_bits,
+            "spill_energy": cs.spill_energy.tolist(),
+            # the best (h, w) is capacity-independent by construction (the
+            # spill term is a scalar offset per ub); store it once
+            "best_h_w": cs.best(0)[:2],
+            "best_energy_total_per_ub": [cs.best(u)[2]
+                                         for u in range(len(cs.ub_kibs))],
+        }
+        out["models"][name] = rec
+        _emit(f"connectivity_{name}", us,
+              f"peak={rec['peak_mib_dfs']:.2f}MiB"
+              f";chain_ratio={rec['connectivity_ratio']:.2f}"
+              f";spillE@{int(cs.ub_kibs[0])}KiB={cs.spill_energy[0]:.2e}")
+    _save("connectivity", out)
+
+
+def graph_quick():
+    """--quick smoke: reduced-grid capacity sweep, numpy vs Pallas backend
+    wall-clock, written to BENCH_graph.json so the perf trajectory of the
+    graph subsystem accumulates in CI."""
+    from repro.core.dse import capacity_sweep, grid_axes
+    from repro.graph import build_graph
+    g = build_graph("resnet152")
+    hs = grid_axes()[::4]                      # 8x8 = 64 configs
+    cs_np, us_np = _timeit(lambda: capacity_sweep(g, hs=hs, ws=hs,
+                                                  backend="numpy"))
+    _emit("graph_capacity_sweep_numpy", us_np,
+          f"peak={cs_np.peak_bits / 8 / 2**20:.2f}MiB")
+    cs_pl, us_pl = _timeit(lambda: capacity_sweep(g, hs=hs, ws=hs,
+                                                  backend="pallas"))
+    rel = (np.abs(cs_pl.base.energy - cs_np.base.energy)
+           / (np.abs(cs_np.base.energy) + 1.0))
+    _emit("graph_capacity_sweep_pallas", us_pl,
+          f"max_rel_vs_numpy={float(rel.max()):.2e}"
+          f";speedup={us_np / us_pl:.2f}x")
+    _save("BENCH_graph", {
+        "model": "resnet152", "configs": int(cs_np.base.energy.size),
+        "ub_kibs": cs_np.ub_kibs.tolist(),
+        "numpy_us_per_call": us_np, "pallas_us_per_call": us_pl,
+        "speedup_numpy_over_pallas": us_np / us_pl,
+        "peak_occupancy_mib": cs_np.peak_bits / 8 / 2 ** 20,
+        "spill_energy": cs_np.spill_energy.tolist(),
+        "max_rel_backend_err": float(rel.max()),
+    })
+
+
 def ablations():
     from repro.core import get_workloads, grid_sweep
     wl = get_workloads("resnet152")
@@ -256,18 +326,28 @@ def kernels():
 
 
 def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true",
+                        help="reduced graph capacity-sweep smoke only "
+                             "(writes BENCH_graph.json)")
+    args = parser.parse_args()
     print("name,us_per_call,derived")
+    if args.quick:
+        graph_quick()
+        return
     fig2_resnet_heatmap()
     fig3_pareto()
     fig4_model_heatmaps()
     fig5_robust()
     fig6_equal_pe()
     lm_architectures()
+    connectivity()
     ablations()
     future_work()
     backends()
     precision()
     kernels()
+    graph_quick()
 
 
 if __name__ == "__main__":

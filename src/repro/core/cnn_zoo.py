@@ -5,6 +5,13 @@ Models (paper §4.2): AlexNet, VGG-16, GoogLeNet, BN-Inception, ResNet-152,
 DenseNet-201, ResNeXt-152 (g=32), MobileNetV3-Large, EfficientNet-B0.
 Tables follow the original publications; pooling/activation layers carry no
 GEMMs and are omitted (the systolic model sees matrix multiplies only).
+
+These flat lists erase connectivity (skip/concat/branch edges) and with it
+the Unified-Buffer residency cost of each network. The graph-IR builders in
+`repro.graph.builders` construct the same models as DAGs — same layer
+specs, same order, `Graph.flatten()` reproduces these lists exactly — with
+the connectivity needed for liveness/occupancy analysis and the
+capacity-aware DSE (`repro.core.dse.capacity_sweep`).
 """
 from __future__ import annotations
 

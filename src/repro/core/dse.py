@@ -12,11 +12,16 @@
 * robust_config: averaged min-max-normalized (energy, cycles) across a model
   mix, Pareto over configurations (Fig. 5).
 * equal_pe_sweep: extreme aspect ratios at constant PE count (Fig. 6,
-  Samajdar et al. comparison).
+  Samajdar et al. comparison), on either backend.
+* capacity_sweep: the connectivity-aware (h, w, ub_kib) design space — the
+  per-config closed forms run on the numpy/pallas grid backends over
+  `graph.flatten()`, and the graph's liveness profile (repro.graph) adds
+  finite-UB spill energy per capacity point.
 """
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import itertools
 from typing import Dict, List, Optional, Sequence
 
@@ -56,17 +61,23 @@ class SweepResult:
 def _grid_sweep_numpy(workloads, hs, ws, H, W, **model_kw):
     m = systolic.analyze_network(list(workloads), H.astype(np.float64),
                                  W.astype(np.float64), **model_kw)
-    return SweepResult(hs=hs, ws=ws, H=H, W=W, cycles=np.asarray(m.cycles),
-                       energy=np.asarray(m.energy),
-                       utilization=np.asarray(m.utilization),
-                       m_ub=np.asarray(m.m_ub),
-                       m_inter_pe=np.asarray(m.m_inter_pe),
-                       m_aa=np.asarray(m.m_aa),
-                       ub_bw_bits=np.asarray(m.ub_bandwidth_bits))
+    # some counters (e.g. m_ub without act_reread) are config-independent
+    # and come back 0-d; broadcast so every field honors the (G, G) grid
+    # contract on both backends.
+    grid = lambda x: np.broadcast_to(np.asarray(x, np.float64),
+                                     H.shape).copy()
+    return SweepResult(hs=hs, ws=ws, H=H, W=W, cycles=grid(m.cycles),
+                       energy=grid(m.energy),
+                       utilization=grid(m.utilization),
+                       m_ub=grid(m.m_ub),
+                       m_inter_pe=grid(m.m_inter_pe),
+                       m_aa=grid(m.m_aa),
+                       ub_bw_bits=grid(m.ub_bandwidth_bits))
 
 
-def _grid_sweep_pallas(workloads, hs, ws, H, W, block_c=128, **model_kw):
-    """Dispatch the whole grid to the fused Pallas sweep kernel.
+def _pallas_eval_configs(workloads, cfgs, block_c=128, **model_kw):
+    """Evaluate an arbitrary (C, 2) config list on the fused Pallas sweep
+    kernel, returning a dict of per-config metric columns.
 
     The config list is auto-padded up to a multiple of the kernel block
     (repeating the last design point) and unpadded afterwards; off-TPU the
@@ -77,7 +88,7 @@ def _grid_sweep_pallas(workloads, hs, ws, H, W, block_c=128, **model_kw):
     from repro.kernels import ops
     from repro.kernels.dse_eval import OUT_COLS
 
-    cfgs = np.stack([H.reshape(-1), W.reshape(-1)], axis=1)
+    cfgs = np.asarray(cfgs, np.float64)
     C = cfgs.shape[0]
     pad = (-C) % block_c
     if pad:
@@ -87,7 +98,14 @@ def _grid_sweep_pallas(workloads, hs, ws, H, W, block_c=128, **model_kw):
     out = np.asarray(ops.sweep(jnp.asarray(cfgs, jnp.float32),
                                jnp.asarray(layers), block_c=block_c,
                                **model_kw))[:C]
-    col = {k: out[:, j].reshape(H.shape) for j, k in enumerate(OUT_COLS)}
+    return {k: out[:, j] for j, k in enumerate(OUT_COLS)}
+
+
+def _grid_sweep_pallas(workloads, hs, ws, H, W, block_c=128, **model_kw):
+    """Dispatch the whole grid to the fused Pallas sweep kernel."""
+    cfgs = np.stack([H.reshape(-1), W.reshape(-1)], axis=1)
+    col = {k: v.reshape(H.shape) for k, v in _pallas_eval_configs(
+        workloads, cfgs, block_c=block_c, **model_kw).items()}
     return SweepResult(hs=hs, ws=ws, H=H, W=W, cycles=col["cycles"],
                        energy=col["energy"],
                        utilization=col["utilization"], m_ub=col["m_ub"],
@@ -153,11 +171,32 @@ def pareto_grid(sweep: SweepResult, objectives=("energy", "cycles")):
     return configs[mask], F[mask], mask
 
 
-def pareto_nsga2(workloads, objectives=("energy", "cycles"), **kw):
+# keyword arguments consumed by pareto.nsga2 itself (derived from its
+# signature so the split can't drift); anything else passed to pareto_nsga2
+# is a model option and must reach analyze_network.
+_NSGA2_KEYS = frozenset(
+    p.name for p in inspect.signature(nsga2).parameters.values()
+    if p.kind == p.KEYWORD_ONLY)
+
+
+def pareto_nsga2(workloads, objectives=("energy", "cycles"),
+                 model_kw: Optional[dict] = None, **kw):
+    """NSGA-II frontier with full model-option support.
+
+    Optimizer knobs (`pop`, `gens`, `seed`, `quantum`) go to `nsga2`; every
+    other keyword — `precision=`, `dataflow=`, `act_reread=`, ... — is
+    threaded through to `analyze_network`, so the evolved frontier reflects
+    the same accounting as the exact grid. `model_kw` may also be passed
+    explicitly."""
+    model_kw = dict(model_kw or {})
+    for k in list(kw):
+        if k not in _NSGA2_KEYS:
+            model_kw[k] = kw.pop(k)
+
     def eval_fn(pop):
         h = pop[:, 0].astype(np.float64)
         w = pop[:, 1].astype(np.float64)
-        m = systolic.analyze_network(list(workloads), h, w)
+        m = systolic.analyze_network(list(workloads), h, w, **model_kw)
         cols = []
         for o in objectives:
             v = {"energy": m.energy, "cycles": m.cycles,
@@ -192,9 +231,11 @@ def robust_config(model_workloads: Dict[str, Sequence[Workload]], **model_kw):
 
 
 def equal_pe_sweep(model_workloads: Dict[str, Sequence[Workload]],
-                   total_pes: int = 16384, **model_kw):
+                   total_pes: int = 16384, backend: str = "numpy",
+                   **model_kw):
     """Fig. 6: aspect-ratio sweep at constant PE count (Samajdar-style):
-    h x w with h*w = total_pes, h in powers of two."""
+    h x w with h*w = total_pes, h in powers of two. `backend` selects the
+    numpy float64 path or the fused Pallas sweep kernel, like grid_sweep."""
     hs = []
     h = 2
     while h <= total_pes // 2:
@@ -205,12 +246,79 @@ def equal_pe_sweep(model_workloads: Dict[str, Sequence[Workload]],
     ws = total_pes // hs
     out = {}
     for name, wls in model_workloads.items():
-        m = systolic.analyze_network(list(wls), hs.astype(np.float64),
-                                     ws.astype(np.float64), **model_kw)
+        if backend == "numpy":
+            m = systolic.analyze_network(list(wls), hs.astype(np.float64),
+                                         ws.astype(np.float64), **model_kw)
+            energy, cycles, util = (np.asarray(m.energy),
+                                    np.asarray(m.cycles),
+                                    np.asarray(m.utilization))
+        elif backend == "pallas":
+            col = _pallas_eval_configs(wls, np.stack([hs, ws], axis=1),
+                                       **model_kw)
+            energy, cycles, util = (col["energy"], col["cycles"],
+                                    col["utilization"])
+        else:
+            raise ValueError(f"unknown backend {backend!r} (numpy|pallas)")
         out[name] = {
             "h": hs, "w": ws,
-            "energy": _normalize(np.asarray(m.energy)),
-            "cycles": _normalize(np.asarray(m.cycles)),
-            "utilization": np.asarray(m.utilization),
+            "energy": _normalize(energy),
+            "cycles": _normalize(cycles),
+            "utilization": util,
         }
     return out
+
+
+# ------------------------------------------------------ capacity-aware DSE --
+
+# Default UB capacities (KiB): spans "everything spills" to "nothing does"
+# for the 224x224 CNN zoo, whose liveness peaks sit between ~0.3 and ~6 MiB.
+UB_KIBS = (128, 256, 512, 1024, 2048, 4096, 8192)
+
+
+@dataclasses.dataclass
+class CapacitySweepResult:
+    """(h, w, ub_kib) design space for one network graph.
+
+    The closed-form grid (`base`) is capacity-independent; the liveness
+    profile of the graph's schedule determines a per-capacity spill term,
+    so `energy_total[u, i, j] = base.energy[i, j] + spill_energy[u]`."""
+    base: SweepResult
+    order: str
+    peak_bits: float               # schedule's peak UB occupancy
+    ub_kibs: np.ndarray            # (U,)
+    spill_bits: np.ndarray         # (U,) DRAM round-trip traffic
+    spill_energy: np.ndarray       # (U,) Eq. 1-relative
+    energy_total: np.ndarray       # (U, G, G)
+
+    def best(self, u: int):
+        """(h, w, energy_total) of the best design point at capacity u."""
+        i, j = np.unravel_index(np.argmin(self.energy_total[u]),
+                                self.energy_total[u].shape)
+        return (int(self.base.hs[i]), int(self.base.ws[j]),
+                float(self.energy_total[u, i, j]))
+
+
+def capacity_sweep(graph, ub_kibs: Sequence[float] = UB_KIBS, hs=None,
+                   ws=None, order: str = "dfs", backend: str = "numpy",
+                   **model_kw) -> CapacitySweepResult:
+    """Sweep the (h, w, ub_kib) design space for a network graph.
+
+    The per-config part reuses the grid backends (numpy float64 or the
+    fused Pallas kernel) over `graph.flatten()` — bit-identical to the flat
+    workload list — while the graph's liveness profile under the chosen
+    schedule `order` ("dfs" | "bfs") converts each finite capacity into
+    spill/refetch energy (see repro.graph.occupancy)."""
+    from repro.core.model_core import dram_spill_energy
+    from repro.graph.occupancy import spill_bits
+    from repro.graph.schedule import occupancy_profile
+
+    base = grid_sweep(graph.flatten(), hs=hs, ws=ws, backend=backend,
+                      **model_kw)
+    prof = occupancy_profile(graph, order=order)
+    ubs = np.asarray(list(ub_kibs), np.float64)
+    sp = np.asarray([spill_bits(prof, u * 1024.0 * 8.0) for u in ubs])
+    se = np.asarray([dram_spill_energy(s) for s in sp])
+    return CapacitySweepResult(
+        base=base, order=order, peak_bits=prof.peak_bits, ub_kibs=ubs,
+        spill_bits=sp, spill_energy=se,
+        energy_total=base.energy[None, :, :] + se[:, None, None])

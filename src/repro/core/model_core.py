@@ -40,6 +40,20 @@ from typing import Callable, Dict, List
 
 REF_BITS = 8.0
 
+# Eq. 1-relative cost of moving one REF_BITS word to/from DRAM. Eq. 1 prices
+# a UB access at 6; off-chip DRAM is one energy order of magnitude above the
+# on-chip SRAM hierarchy (SCALE-Sim / Eyeriss accounting), so spill traffic
+# from a finite Unified Buffer (graph/occupancy.py) is charged at this
+# weight. A single constant here keeps the graph-level spill accounting in
+# the same unit system as every other Eq. 1 term.
+DRAM_COST_PER_WORD = 100.0
+
+
+def dram_spill_energy(spill_bits):
+    """Eq. 1-relative energy of `spill_bits` of DRAM spill/refetch traffic
+    (bit-normalized like every other term: bits / REF_BITS words)."""
+    return DRAM_COST_PER_WORD * spill_bits / REF_BITS
+
 
 @dataclasses.dataclass(frozen=True)
 class Precision:

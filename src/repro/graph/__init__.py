@@ -1,0 +1,21 @@
+"""Network-graph IR: connectivity-aware view of the workloads.
+
+The paper singles out network connectivity (ResNet skips, DenseNet
+concatenations, Inception branches) as a driver of accelerator efficiency;
+the flat GEMM lists in `core/cnn_zoo.py` erase it. This package makes it
+explicit:
+
+    ir        DAG of layer nodes whose edges are activation tensors
+    builders  the full CNN zoo + a transformer block, with real connectivity
+              (``Graph.flatten()`` reproduces the legacy flat lists exactly)
+    schedule  topological orders (depth/breadth-first) + tensor liveness ->
+              per-step and peak Unified-Buffer occupancy in bits
+    occupancy finite-UB spill/refetch accounting on top of the Eq.1 model
+
+Public API re-exported here for convenience.
+"""
+from repro.graph.ir import Graph, Node, Tensor  # noqa
+from repro.graph.builders import GRAPH_ZOO, build_graph, transformer_block  # noqa
+from repro.graph.schedule import (OccupancyProfile, occupancy_profile,  # noqa
+                                  toposort)
+from repro.graph.occupancy import GraphMetrics, analyze_graph, spill_bits  # noqa

@@ -1,0 +1,397 @@
+"""Graph builders: the CNN zoo with real connectivity + a transformer block.
+
+Each builder constructs the same layer specs as the flat tables in
+`core/cnn_zoo.py`, in the same order, but wires them into a DAG with the
+connectivity the flat lists erase: skip edges (ResNet/ResNeXt and the
+stride-1 MBConv blocks of MobileNetV3/EfficientNet), dense concatenations
+(DenseNet-201), and branch/join modules (GoogLeNet/BN-Inception). Pooling
+layers — omitted from the GEMM tables — appear as `pool` nodes so tensor
+shapes stay consistent across stages; `Graph.flatten()` skips them and
+reproduces `cnn_zoo.get_workloads(name)` exactly (pinned by the
+flatten-equivalence test).
+
+Two deliberate modeling choices, inherited from the legacy tables:
+
+  * `repeats` on a Conv stays collapsed in one node. Every repeated layer
+    in the zoo maps c -> c at constant spatial size, so the collapse is
+    liveness-neutral (in + out of the repeated layer is the live set at
+    every step of the chain) and `flatten()` stays bit-identical.
+  * BN-Inception grid-reduction modules keep their convs at the input
+    resolution (as the legacy table does) with the downsampling expressed
+    as a pool after the join.
+
+`transformer_block` builds one decoder layer over the `configs.base`
+architectures with the residual edges the flat `lm_workloads` extraction
+drops — the block input stays live across the whole attention span.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence, Tuple
+
+from repro.configs.base import ArchConfig, ShapeConfig, resolve_dims
+from repro.core.workloads import FC, Conv, Gemm
+from repro.graph.ir import Graph, Node, Tensor
+
+DEFAULT_ACT_BITS = 8.0
+
+
+class _B:
+    """Tiny builder DSL: each method appends one node and returns its name."""
+
+    def __init__(self, name: str, act_bits: float = DEFAULT_ACT_BITS):
+        self.g = Graph(name)
+        self.bits = act_bits
+        self._n = 0
+
+    def _name(self, prefix: str) -> str:
+        self._n += 1
+        return f"{prefix}{self._n}"
+
+    def input(self, shape: Tuple[int, ...]) -> str:
+        return self.g.add(Node(self._name("in"), "input",
+                               Tensor(shape, self.bits)))
+
+    def conv(self, src: str, spec: Conv) -> str:
+        out = Tensor((spec.h_out, spec.w_out, spec.c_out), self.bits)
+        return self.g.add(Node(self._name("conv"), "gemm", out, spec), (src,))
+
+    def fc(self, src: str, spec: FC) -> str:
+        out = Tensor((spec.batch, spec.d_out), self.bits)
+        return self.g.add(Node(self._name("fc"), "gemm", out, spec), (src,))
+
+    def gemm(self, srcs: Sequence[str], spec: Gemm,
+             out_shape: Tuple[int, ...]) -> str:
+        return self.g.add(Node(self._name(spec.name or "gemm"), "gemm",
+                               Tensor(out_shape, self.bits), spec),
+                          tuple(srcs))
+
+    def pool(self, src: str, shape: Tuple[int, ...]) -> str:
+        return self.g.add(Node(self._name("pool"), "pool",
+                               Tensor(shape, self.bits)), (src,))
+
+    def add(self, *srcs: str) -> str:
+        out = self.g.node(srcs[0]).out
+        return self.g.add(Node(self._name("add"), "add",
+                               Tensor(out.shape, self.bits)), srcs)
+
+    def concat(self, *srcs: str) -> str:
+        shapes = [self.g.node(s).out.shape for s in srcs]
+        h, w = shapes[0][0], shapes[0][1]
+        out = Tensor((h, w, sum(s[2] for s in shapes)), self.bits)
+        return self.g.add(Node(self._name("cat"), "concat", out), srcs)
+
+
+# ------------------------------------------------------------------ chains --
+
+def alexnet(act_bits: float = DEFAULT_ACT_BITS) -> Graph:
+    b = _B("alexnet", act_bits)
+    x = b.input((224, 224, 3))
+    c = b.conv(x, Conv(224, 3, 64, k=11, stride=4, pad="valid"))
+    c = b.pool(c, (27, 27, 64))
+    c = b.conv(c, Conv(27, 64, 192, k=5))
+    c = b.pool(c, (13, 13, 192))
+    c = b.conv(c, Conv(13, 192, 384, k=3))
+    c = b.conv(c, Conv(13, 384, 256, k=3))
+    c = b.conv(c, Conv(13, 256, 256, k=3))
+    c = b.pool(c, (6, 6, 256))
+    c = b.fc(c, FC(9216, 4096))
+    c = b.fc(c, FC(4096, 4096))
+    b.fc(c, FC(4096, 1000))
+    return b.g
+
+
+def vgg16(act_bits: float = DEFAULT_ACT_BITS) -> Graph:
+    b = _B("vgg16", act_bits)
+    x = b.input((224, 224, 3))
+    c = b.conv(x, Conv(224, 3, 64))
+    c = b.conv(c, Conv(224, 64, 64))
+    c = b.pool(c, (112, 112, 64))
+    c = b.conv(c, Conv(112, 64, 128))
+    c = b.conv(c, Conv(112, 128, 128))
+    c = b.pool(c, (56, 56, 128))
+    c = b.conv(c, Conv(56, 128, 256))
+    c = b.conv(c, Conv(56, 256, 256, repeats=2))
+    c = b.pool(c, (28, 28, 256))
+    c = b.conv(c, Conv(28, 256, 512))
+    c = b.conv(c, Conv(28, 512, 512, repeats=2))
+    c = b.pool(c, (14, 14, 512))
+    c = b.conv(c, Conv(14, 512, 512, repeats=3))
+    c = b.pool(c, (7, 7, 512))
+    c = b.fc(c, FC(25088, 4096))
+    c = b.fc(c, FC(4096, 4096))
+    b.fc(c, FC(4096, 1000))
+    return b.g
+
+
+# -------------------------------------------------------- branch/join nets --
+
+def _inception(b: _B, src: str, h, c_in, b1, b3r, b3, b5r, b5, bp) -> str:
+    """GoogLeNet module: 4 branches from `src`, concatenated (node order
+    matches cnn_zoo._inception: b1, b3r, b3, b5r, b5, bp)."""
+    n1 = b.conv(src, Conv(h, c_in, b1, k=1))
+    n3 = b.conv(b.conv(src, Conv(h, c_in, b3r, k=1)), Conv(h, b3r, b3, k=3))
+    n5 = b.conv(b.conv(src, Conv(h, c_in, b5r, k=1)), Conv(h, b5r, b5, k=5))
+    p = b.pool(src, (h, h, c_in))          # 3x3 stride-1 maxpool branch
+    np_ = b.conv(p, Conv(h, c_in, bp, k=1))
+    return b.concat(n1, n3, n5, np_)
+
+
+def googlenet(act_bits: float = DEFAULT_ACT_BITS) -> Graph:
+    b = _B("googlenet", act_bits)
+    x = b.input((224, 224, 3))
+    c = b.conv(x, Conv(224, 3, 64, k=7, stride=2))
+    c = b.pool(c, (56, 56, 64))
+    c = b.conv(c, Conv(56, 64, 64, k=1))
+    c = b.conv(c, Conv(56, 64, 192, k=3))
+    c = b.pool(c, (28, 28, 192))
+    c = _inception(b, c, 28, 192, 64, 96, 128, 16, 32, 32)
+    c = _inception(b, c, 28, 256, 128, 128, 192, 32, 96, 64)
+    c = b.pool(c, (14, 14, 480))
+    c = _inception(b, c, 14, 480, 192, 96, 208, 16, 48, 64)
+    c = _inception(b, c, 14, 512, 160, 112, 224, 24, 64, 64)
+    c = _inception(b, c, 14, 512, 128, 128, 256, 24, 64, 64)
+    c = _inception(b, c, 14, 512, 112, 144, 288, 32, 64, 64)
+    c = _inception(b, c, 14, 528, 256, 160, 320, 32, 128, 128)
+    c = b.pool(c, (7, 7, 832))
+    c = _inception(b, c, 7, 832, 256, 160, 320, 32, 128, 128)
+    c = _inception(b, c, 7, 832, 384, 192, 384, 48, 128, 128)
+    c = b.pool(c, (1, 1, 1024))            # global average pool
+    b.fc(c, FC(1024, 1000))
+    return b.g
+
+
+def _inception_bn(b: _B, src: str, h, c_in, b1, b3r, b3, bd3r, bd3, bp) -> str:
+    """BN-Inception module; b1 == bp == 0 marks a grid-reduction module
+    whose pass-through branch is the pooled input (downsampling itself is a
+    pool after the join, keeping the legacy per-conv resolutions)."""
+    branches: List[str] = []
+    if b1:
+        branches.append(b.conv(src, Conv(h, c_in, b1, k=1)))
+    branches.append(b.conv(b.conv(src, Conv(h, c_in, b3r, k=1)),
+                           Conv(h, b3r, b3, k=3)))
+    d = b.conv(b.conv(src, Conv(h, c_in, bd3r, k=1)), Conv(h, bd3r, bd3, k=3))
+    branches.append(b.conv(d, Conv(h, bd3, bd3, k=3)))
+    p = b.pool(src, (h, h, c_in))
+    if bp:
+        branches.append(b.conv(p, Conv(h, c_in, bp, k=1)))
+    else:
+        branches.append(p)                 # reduction: pooled pass-through
+    return b.concat(*branches)
+
+
+def bn_inception(act_bits: float = DEFAULT_ACT_BITS) -> Graph:
+    b = _B("bn_inception", act_bits)
+    x = b.input((224, 224, 3))
+    c = b.conv(x, Conv(224, 3, 64, k=7, stride=2))
+    c = b.pool(c, (56, 56, 64))
+    c = b.conv(c, Conv(56, 64, 64, k=1))
+    c = b.conv(c, Conv(56, 64, 192, k=3))
+    c = b.pool(c, (28, 28, 192))
+    c = _inception_bn(b, c, 28, 192, 64, 64, 64, 64, 96, 32)
+    c = _inception_bn(b, c, 28, 256, 64, 64, 96, 64, 96, 64)
+    c = _inception_bn(b, c, 28, 320, 0, 128, 160, 64, 96, 0)
+    c = b.pool(c, (14, 14, 576))           # reduction-module downsample
+    c = _inception_bn(b, c, 14, 576, 224, 64, 96, 96, 128, 128)
+    c = _inception_bn(b, c, 14, 576, 192, 96, 128, 96, 128, 128)
+    c = _inception_bn(b, c, 14, 576, 160, 128, 160, 128, 160, 128)
+    # legacy-table quirk: this module and the next emit 608 channels
+    # (160+160+160+128 and 96+192+192+128) but the downstream convs declare
+    # c_in=576; keep the graph faithful to the table on both sides.
+    b.g.channel_quirks.add(c)
+    c = _inception_bn(b, c, 14, 576, 96, 128, 192, 160, 192, 128)
+    b.g.channel_quirks.add(c)
+    c = _inception_bn(b, c, 14, 576, 0, 128, 192, 192, 256, 0)
+    c = b.pool(c, (7, 7, 1024))            # reduction-module downsample
+    c = _inception_bn(b, c, 7, 1024, 352, 192, 320, 160, 224, 128)
+    c = _inception_bn(b, c, 7, 1024, 352, 192, 320, 192, 224, 128)
+    c = b.pool(c, (1, 1, 1024))            # global average pool
+    b.fc(c, FC(1024, 1000))
+    return b.g
+
+
+# ------------------------------------------------------------ residual nets --
+
+def _res_stage(b: _B, src: str, h, c_in, c_mid, c_out, n_blocks,
+               groups: int = 1, first_stride: int = 2) -> str:
+    """Bottleneck stage; the projection ("downsample") conv is inserted
+    first (legacy node order) but wired as block 0's skip path."""
+    ds = b.conv(src, Conv(h * first_stride, c_in, c_out, k=1,
+                          stride=first_stride, name="downsample"))
+    x = src
+    for i in range(n_blocks):
+        cin = c_in if i == 0 else c_out
+        s = first_stride if i == 0 else 1
+        hh = h * first_stride if i == 0 else h
+        c1 = b.conv(x, Conv(hh, cin, c_mid, k=1))
+        c2 = b.conv(c1, Conv(hh, c_mid, c_mid, k=3, stride=s, groups=groups))
+        c3 = b.conv(c2, Conv(h, c_mid, c_out, k=1))
+        x = b.add(c3, ds if i == 0 else x)   # residual join
+    return x
+
+
+def _resnet(name: str, c_mids: Tuple[int, ...], groups: int,
+            act_bits: float) -> Graph:
+    b = _B(name, act_bits)
+    x = b.input((224, 224, 3))
+    c = b.conv(x, Conv(224, 3, 64, k=7, stride=2))
+    c = b.pool(c, (56, 56, 64))
+    c = _res_stage(b, c, 56, 64, c_mids[0], 256, 3, groups, first_stride=1)
+    c = _res_stage(b, c, 28, 256, c_mids[1], 512, 8, groups)
+    c = _res_stage(b, c, 14, 512, c_mids[2], 1024, 36, groups)
+    c = _res_stage(b, c, 7, 1024, c_mids[3], 2048, 3, groups)
+    c = b.pool(c, (1, 1, 2048))            # global average pool
+    b.fc(c, FC(2048, 1000))
+    return b.g
+
+
+def resnet152(act_bits: float = DEFAULT_ACT_BITS) -> Graph:
+    return _resnet("resnet152", (64, 128, 256, 512), 1, act_bits)
+
+
+def resnext152_32x4d(act_bits: float = DEFAULT_ACT_BITS) -> Graph:
+    return _resnet("resnext152_32x4d", (128, 256, 512, 1024), 32, act_bits)
+
+
+def densenet201(k: int = 32, act_bits: float = DEFAULT_ACT_BITS) -> Graph:
+    b = _B("densenet201", act_bits)
+    x = b.input((224, 224, 3))
+    c = b.conv(x, Conv(224, 3, 64, k=7, stride=2))
+    cur = b.pool(c, (56, 56, 64))
+    ch, h = 64, 56
+    for blocks in (6, 12, 48, 32):
+        feats = [cur]                       # all stay live until transition
+        for _ in range(blocks):
+            src = feats[0] if len(feats) == 1 else b.concat(*feats)
+            c1 = b.conv(src, Conv(h, ch, 4 * k, k=1))
+            feats.append(b.conv(c1, Conv(h, 4 * k, k, k=3)))
+            ch += k
+        cur = b.concat(*feats)
+        if blocks != 32:                    # transition: 1x1 halving + pool
+            t = b.conv(cur, Conv(h, ch, ch // 2, k=1))
+            ch //= 2
+            h //= 2
+            cur = b.pool(t, (h, h, ch))
+    cur = b.pool(cur, (1, 1, ch))           # global average pool
+    b.fc(cur, FC(ch, 1000))
+    return b.g
+
+
+# -------------------------------------------------------- inverted residual --
+
+def _mbconv(b: _B, src: str, h, cin, exp, cout, kk, s) -> str:
+    """Expand (if exp != cin) -> depthwise -> project, with a residual add
+    when the block preserves shape (stride 1, cin == cout)."""
+    e = b.conv(src, Conv(h, cin, exp, k=1)) if exp != cin else src
+    d = b.conv(e, Conv(h, exp, exp, k=kk, stride=s, groups=exp))
+    p = b.conv(d, Conv(h // s, exp, cout, k=1))
+    return b.add(p, src) if (s == 1 and cin == cout) else p
+
+
+def mobilenetv3_large(act_bits: float = DEFAULT_ACT_BITS) -> Graph:
+    rows = [
+        (112, 16, 16, 16, 3, 1),
+        (112, 16, 64, 24, 3, 2), (56, 24, 72, 24, 3, 1),
+        (56, 24, 72, 40, 5, 2), (28, 40, 120, 40, 5, 1),
+        (28, 40, 120, 40, 5, 1),
+        (28, 40, 240, 80, 3, 2), (14, 80, 200, 80, 3, 1),
+        (14, 80, 184, 80, 3, 1), (14, 80, 184, 80, 3, 1),
+        (14, 80, 480, 112, 3, 1), (14, 112, 672, 112, 3, 1),
+        (14, 112, 672, 160, 5, 2), (7, 160, 960, 160, 5, 1),
+        (7, 160, 960, 160, 5, 1),
+    ]
+    b = _B("mobilenetv3_large", act_bits)
+    x = b.input((224, 224, 3))
+    c = b.conv(x, Conv(224, 3, 16, k=3, stride=2))
+    for (h, cin, exp, cout, kk, s) in rows:
+        c = _mbconv(b, c, h, cin, exp, cout, kk, s)
+    c = b.conv(c, Conv(7, 160, 960, k=1))
+    c = b.pool(c, (1, 1, 960))             # global average pool
+    c = b.fc(c, FC(960, 1280))
+    b.fc(c, FC(1280, 1000))
+    return b.g
+
+
+def efficientnet_b0(act_bits: float = DEFAULT_ACT_BITS) -> Graph:
+    rows = [  # (h_in, c_in, c_out, expand, k, stride, repeats)
+        (112, 32, 16, 1, 3, 1, 1),
+        (112, 16, 24, 6, 3, 2, 2),
+        (56, 24, 40, 6, 5, 2, 2),
+        (28, 40, 80, 6, 3, 2, 3),
+        (14, 80, 112, 6, 5, 1, 3),
+        (14, 112, 192, 6, 5, 2, 4),
+        (7, 192, 320, 6, 3, 1, 1),
+    ]
+    b = _B("efficientnet_b0", act_bits)
+    x = b.input((224, 224, 3))
+    c = b.conv(x, Conv(224, 3, 32, k=3, stride=2))
+    for (h, cin, cout, e, kk, s, reps) in rows:
+        for i in range(reps):
+            ci = cin if i == 0 else cout
+            st = s if i == 0 else 1
+            hh = h if i == 0 else h // s
+            c = _mbconv(b, c, hh, ci, ci * e, cout, kk, st)
+    c = b.conv(c, Conv(7, 320, 1280, k=1))
+    c = b.pool(c, (1, 1, 1280))            # global average pool
+    b.fc(c, FC(1280, 1000))
+    return b.g
+
+
+# ------------------------------------------------------------- transformers --
+
+def transformer_block(cfg: ArchConfig, shape: ShapeConfig,
+                      act_bits: float = DEFAULT_ACT_BITS) -> Graph:
+    """One decoder layer as a DAG, following the `lm_workloads` lowering
+    conventions (per-head score/value GEMMs via `groups`, sliding-window
+    KV truncation) but keeping the residual edges: the block input stays
+    live across the whole attention span, and the post-attention residual
+    across the MLP — the transformer's connectivity cost."""
+    d = resolve_dims(cfg, 1)
+    B = shape.global_batch
+    if shape.kind == "decode":
+        Sq, Skv, T = 1, shape.seq_len, B
+    else:
+        Sq = Skv = shape.seq_len
+        T = B * Sq
+    hd, qh, kvh = d.head_dim, cfg.num_heads, cfg.num_kv_heads
+    win = cfg.sliding_window
+    eff_kv = min(Skv, win) if win else Skv
+    dm, dff = cfg.d_model, cfg.d_ff
+
+    b = _B(f"transformer_block[{shape.kind}]", act_bits)
+    x = b.input((T, dm))
+    q = b.gemm([x], Gemm(T, dm, qh * hd, name="wq"), (T, qh * hd))
+    k = b.gemm([x], Gemm(T, dm, kvh * hd, name="wk"), (T, kvh * hd))
+    v = b.gemm([x], Gemm(T, dm, kvh * hd, name="wv"), (T, kvh * hd))
+    s = b.gemm([q, k], Gemm(Sq, hd, eff_kv, groups=B * qh, name="scores"),
+               (B * qh, Sq, eff_kv))
+    av = b.gemm([s, v], Gemm(Sq, eff_kv, hd, groups=B * qh, name="attnv"),
+                (T, qh * hd))
+    o = b.gemm([av], Gemm(T, qh * hd, dm, name="wo"), (T, dm))
+    r1 = b.add(o, x)                        # residual: x live across attn
+    if cfg.mlp_activation == "silu":        # gated MLP: up & gate branches
+        up = b.gemm([r1], Gemm(T, dm, dff, name="wup"), (T, dff))
+        gate = b.gemm([r1], Gemm(T, dm, dff, name="wgate"), (T, dff))
+        hmid = b.add(up, gate)              # elementwise gate merge
+    else:
+        hmid = b.gemm([r1], Gemm(T, dm, dff, name="wup"), (T, dff))
+    down = b.gemm([hmid], Gemm(T, dff, dm, name="wdown"), (T, dm))
+    b.add(down, r1)                         # residual: r1 live across MLP
+    return b.g
+
+
+GRAPH_ZOO: Dict[str, Callable[..., Graph]] = {
+    "alexnet": alexnet,
+    "vgg16": vgg16,
+    "googlenet": googlenet,
+    "bn_inception": bn_inception,
+    "resnet152": resnet152,
+    "resnext152_32x4d": resnext152_32x4d,
+    "densenet201": densenet201,
+    "mobilenetv3_large": mobilenetv3_large,
+    "efficientnet_b0": efficientnet_b0,
+}
+
+
+def build_graph(name: str, **kw) -> Graph:
+    """Graph-IR counterpart of `cnn_zoo.get_workloads(name)`."""
+    return GRAPH_ZOO[name](**kw)

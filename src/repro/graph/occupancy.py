@@ -1,0 +1,71 @@
+"""Finite-UB occupancy accounting: overflow -> spill/refetch traffic.
+
+The Eq. 1 model treats the Unified Buffer as infinite. Given a capacity,
+any bits of the liveness profile above it cannot stay resident: they round
+trip to DRAM (a spill write when evicted, a refetch read at the next use).
+We charge the per-step overflow integral
+
+    spill_bits(C) = 2 * sum_t max(0, occ(t) - C)
+
+which is exactly monotone non-increasing in C (each step's overflow is),
+and convert it to Eq. 1-relative energy with the DRAM cost weight from
+`core/model_core.py` — SCALE-Sim's observation that SRAM sizing manifests
+as DRAM traffic, made part of the paper's accounting.
+
+`analyze_graph` is the graph-level counterpart of
+`systolic.analyze_network`: same closed-form metrics over `flatten()`
+(bit-identical to the flat lists), plus the residency/spill terms the flat
+lists cannot express.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import systolic
+from repro.core.model_core import dram_spill_energy
+from repro.graph.ir import Graph
+from repro.graph.schedule import OccupancyProfile, occupancy_profile
+
+
+def spill_bits(profile: OccupancyProfile, ub_bits: Optional[float]) -> float:
+    """Round-trip DRAM traffic (bits) for a finite UB; 0 when infinite."""
+    if ub_bits is None or np.isinf(ub_bits):
+        return 0.0
+    over = np.maximum(profile.occ_bits - float(ub_bits), 0.0)
+    return float(2.0 * over.sum())
+
+
+@dataclasses.dataclass
+class GraphMetrics:
+    """Closed-form network metrics + liveness/spill terms."""
+    metrics: systolic.SystolicMetrics   # Eq. 1 accounting over flatten()
+    profile: OccupancyProfile
+    ub_bits: Optional[float]            # None => infinite buffer
+    spill_bits: float
+    spill_energy: float                 # Eq. 1-relative units
+    energy_total: np.ndarray            # metrics.energy + spill_energy
+
+    @property
+    def peak_bits(self) -> float:
+        return self.profile.peak_bits
+
+
+def analyze_graph(g: Graph, h, w, *, ub_kib: Optional[float] = None,
+                  order: str = "dfs", **model_kw) -> GraphMetrics:
+    """Analyze a network graph on an h x w array with a finite UB.
+
+    `model_kw` passes through to `analyze_network` (dataflow, precision,
+    accounting options); `h`/`w` may be arrays (the spill term is a scalar
+    added uniformly — occupancy depends on the schedule and tensor sizes,
+    not on the array shape)."""
+    m = systolic.analyze_network(g.flatten(), h, w, **model_kw)
+    prof = occupancy_profile(g, order=order)
+    ub_bits = None if ub_kib is None else float(ub_kib) * 1024.0 * 8.0
+    sp = spill_bits(prof, ub_bits)
+    se = dram_spill_energy(sp)
+    return GraphMetrics(metrics=m, profile=prof, ub_bits=ub_bits,
+                        spill_bits=sp, spill_energy=se,
+                        energy_total=np.asarray(m.energy) + se)

@@ -1,5 +1,6 @@
 """DSE layer: paper-claim regressions + Pareto/NSGA-II correctness."""
 import numpy as np
+import pytest
 from _hyp import given, settings, st
 
 from repro.core import (ZOO, equal_pe_sweep, get_workloads, grid_sweep,
@@ -114,6 +115,39 @@ def test_output_stationary_dataflow():
     ws2 = analyze_gemm(2048, 8192, 256, 128, 128)
     os2 = analyze_gemm_os(2048, 8192, 256, 128, 128)
     assert float(ws2.m_ub_weight) < float(os2.m_ub_weight)
+
+
+def test_pareto_nsga2_threads_model_options():
+    """Regression: model options passed to pareto_nsga2 must reach
+    analyze_network inside eval_fn (they used to be swallowed by **kw going
+    only to nsga2). Halving all operand widths halves every energy
+    objective, so frontier energies must scale by exactly 0.5."""
+    from repro.core.dse import pareto_nsga2
+    from repro.core.model_core import Precision
+    wl = get_workloads("alexnet")
+    _, F8 = pareto_nsga2(wl, pop=16, gens=4, seed=0)
+    _, F4 = pareto_nsga2(wl, pop=16, gens=4, seed=0,
+                         precision=Precision(4, 4, 4))
+    # same seed + width-independent cycles => identical evolution path
+    assert F4[:, 0].min() == pytest.approx(F8[:, 0].min() / 2)
+    # explicit model_kw dict works too
+    _, F4b = pareto_nsga2(wl, pop=16, gens=4, seed=0,
+                          model_kw={"precision": Precision(4, 4, 4)})
+    np.testing.assert_allclose(F4b, F4)
+
+
+def test_equal_pe_sweep_backend_dispatch():
+    """equal_pe_sweep(backend="pallas") must match the numpy path (Fig. 6
+    on the fused kernel), and reject unknown backends."""
+    mw = {"alexnet": get_workloads("alexnet")}
+    a = equal_pe_sweep(mw, total_pes=4096)
+    b = equal_pe_sweep(mw, total_pes=4096, backend="pallas")
+    np.testing.assert_array_equal(a["alexnet"]["h"], b["alexnet"]["h"])
+    for k in ("energy", "cycles", "utilization"):
+        np.testing.assert_allclose(a["alexnet"][k], b["alexnet"][k],
+                                   rtol=1e-4, atol=1e-5)
+    with pytest.raises(ValueError):
+        equal_pe_sweep(mw, total_pes=4096, backend="fortran")
 
 
 def test_multi_array_parallelism():

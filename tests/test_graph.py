@@ -1,0 +1,227 @@
+"""Graph IR: flatten equivalence vs the legacy flat lists, liveness
+oracle, branch-order effects, and the capacity-aware DSE acceptance
+properties (connectivity raises peak residency; spill monotone in UB)."""
+import numpy as np
+import pytest
+
+from repro.core import capacity_sweep, grid_sweep
+from repro.core.cnn_zoo import ZOO, get_workloads
+from repro.core.dse import UB_KIBS, grid_axes
+from repro.core.model_core import DRAM_COST_PER_WORD, dram_spill_energy
+from repro.core.workloads import FC
+from repro.graph import (GRAPH_ZOO, Graph, Node, Tensor, analyze_graph,
+                         build_graph, occupancy_profile, spill_bits,
+                         toposort, transformer_block)
+
+SMALL = grid_axes()[::5]          # 5x5 grid for the cheap sweeps
+
+
+# ------------------------------------------------------ flatten equivalence --
+
+def test_graph_zoo_covers_legacy_zoo():
+    assert set(GRAPH_ZOO) == set(ZOO)
+
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_flatten_reproduces_legacy_workloads(name):
+    """The flat workload tuples must be IDENTICAL (same specs, same order),
+    which makes every downstream metric bit-identical by construction."""
+    g = build_graph(name)
+    g.validate()
+    assert g.flatten() == get_workloads(name)
+    # the chain ablation preserves the workloads too
+    assert g.as_chain().flatten() == get_workloads(name)
+
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_flatten_metrics_bit_identical_on_grid(name):
+    """Acceptance: grid-sweep metrics of flatten() equal the legacy list's
+    bit-for-bit on the full 961-config grid."""
+    s_graph = grid_sweep(build_graph(name).flatten())
+    s_legacy = grid_sweep(get_workloads(name))
+    for k in ("cycles", "energy", "utilization", "m_ub", "m_inter_pe",
+              "m_aa", "ub_bw_bits"):
+        assert np.array_equal(getattr(s_graph, k), getattr(s_legacy, k)), k
+
+
+# ----------------------------------------------------------- liveness oracle --
+
+def _residual_toy():
+    """4-node residual graph with hand-computable liveness:
+
+        x(100) -> a(200) -> b(300) -> add(b, x)(100)
+                   \\________________/   (x bypasses a and b)
+    """
+    g = Graph("toy")
+    g.add(Node("x", "input", Tensor((100,), 8)))
+    g.add(Node("a", "gemm", Tensor((200,), 8),
+               FC(100, 200, name="a")), ("x",))
+    g.add(Node("b", "gemm", Tensor((300,), 8),
+               FC(200, 300, name="b")), ("a",))
+    g.add(Node("r", "add", Tensor((100,), 8)), ("b", "x"))
+    return g
+
+
+def test_liveness_oracle_hand_computed():
+    g = _residual_toy()
+    p = occupancy_profile(g, "dfs")
+    assert p.schedule == ["x", "a", "b", "r"]
+    # step 0: x. step 1: x+a. step 2: x+a+b (a dies feeding b).
+    # step 3: x+b+r (x stayed live across its whole bypass span).
+    want_bits = 8 * np.array([100, 300, 600, 500], float)
+    np.testing.assert_array_equal(p.occ_bits, want_bits)
+    assert p.peak_bits == 4800.0 and p.peak_step == 2
+    # the skip tensor's span covers the bypass: x lives step 0..3
+    assert p.spans["x"] == (0, 3)
+    # infinite (or None) UB never spills
+    assert spill_bits(p, None) == 0.0
+    assert spill_bits(p, np.inf) == 0.0
+    assert spill_bits(p, 4800.0) == 0.0
+    # capacity 500 bits short of the peak: one step overflows, round trip
+    assert spill_bits(p, 4300.0) == 2 * 500.0
+    assert dram_spill_energy(8.0) == DRAM_COST_PER_WORD
+
+
+def test_chain_ablation_drops_skip_span():
+    """Without the residual edge the bypass tensor retires immediately:
+    peak falls from 600 to 500 words."""
+    g = _residual_toy()
+    chain = g.as_chain()
+    p = occupancy_profile(chain, "dfs")
+    assert p.peak_bits == 8 * 500  # a+b at b's step; no x held
+    assert occupancy_profile(g, "dfs").peak_bits > p.peak_bits
+
+
+def test_analyze_graph_finite_ub():
+    g = _residual_toy()
+    inf = analyze_graph(g, 32, 32)
+    assert inf.spill_bits == 0.0 and inf.spill_energy == 0.0
+    np.testing.assert_array_equal(inf.energy_total,
+                                  np.asarray(inf.metrics.energy))
+    tight = analyze_graph(g, 32, 32, ub_kib=4300.0 / 8.0 / 1024.0)
+    assert tight.spill_bits == 1000.0
+    assert float(tight.energy_total) == pytest.approx(
+        float(inf.energy_total) + tight.spill_energy)
+    assert tight.peak_bits == 4800.0
+
+
+# -------------------------------------------------------------- branch order --
+
+def _forked():
+    """Two parallel branches from one fork; BFS holds both branch tensors
+    co-live, DFS retires one branch before starting the other."""
+    g = Graph("fork")
+    g.add(Node("x", "input", Tensor((10,), 8)))
+    g.add(Node("l1", "gemm", Tensor((1000,), 8), FC(10, 1000)), ("x",))
+    g.add(Node("l2", "gemm", Tensor((10,), 8), FC(1000, 10)), ("l1",))
+    g.add(Node("r1", "gemm", Tensor((1000,), 8), FC(10, 1000)), ("x",))
+    g.add(Node("r2", "gemm", Tensor((10,), 8), FC(1000, 10)), ("r1",))
+    g.add(Node("j", "add", Tensor((10,), 8)), ("l2", "r2"))
+    return g
+
+
+def test_bfs_holds_sibling_branches_live():
+    g = _forked()
+    dfs = occupancy_profile(g, "dfs")
+    bfs = occupancy_profile(g, "bfs")
+    # DFS: one 1000-wide tensor at a time. BFS: both co-live.
+    assert dfs.peak_bits == pytest.approx(8 * (10 + 1000 + 10), abs=81)
+    assert bfs.peak_bits >= 8 * 2000
+    assert bfs.peak_bits > dfs.peak_bits
+
+
+def test_toposort_orders_valid_and_deterministic():
+    g = build_graph("googlenet")
+    for order in ("dfs", "bfs"):
+        sched = toposort(g, order)
+        assert sorted(sched) == sorted(n.name for n in g.nodes)
+        pos = {nm: i for i, nm in enumerate(sched)}
+        for n in g.nodes:
+            for p in g.preds(n.name):
+                assert pos[p] < pos[n.name], (order, p, n.name)
+        assert toposort(g, order) == sched     # deterministic
+    with pytest.raises(ValueError):
+        toposort(g, "zigzag")
+
+
+# --------------------------------------------------------- capacity-aware DSE --
+
+def test_capacity_sweep_acceptance_residual_vs_chain():
+    """Acceptance: at equal layer widths (same layers, connectivity the
+    only difference) the residual network has strictly higher peak UB
+    occupancy than its chain topology; the pure-chain VGG-16 has none."""
+    res = build_graph("resnet152")
+    vgg = build_graph("vgg16")
+    cs_res = capacity_sweep(res, hs=SMALL, ws=SMALL)
+    cs_res_chain = capacity_sweep(res.as_chain(), hs=SMALL, ws=SMALL)
+    cs_vgg = capacity_sweep(vgg, hs=SMALL, ws=SMALL)
+    cs_vgg_chain = capacity_sweep(vgg.as_chain(), hs=SMALL, ws=SMALL)
+    assert cs_res.peak_bits > cs_res_chain.peak_bits       # skips cost UB
+    assert cs_vgg.peak_bits == cs_vgg_chain.peak_bits      # chains don't
+    ratio_res = cs_res.peak_bits / cs_res_chain.peak_bits
+    ratio_vgg = cs_vgg.peak_bits / cs_vgg_chain.peak_bits
+    assert ratio_res > ratio_vgg == 1.0
+
+
+@pytest.mark.parametrize("name", ["vgg16", "resnet152", "densenet201"])
+def test_capacity_sweep_spill_monotone_in_capacity(name):
+    """Acceptance: spill energy is monotonically non-increasing in ub_kib
+    and vanishes once the buffer holds the peak working set."""
+    cs = capacity_sweep(build_graph(name), hs=SMALL, ws=SMALL)
+    assert np.all(np.diff(cs.spill_energy) <= 0)
+    assert np.all(np.diff(cs.spill_bits) <= 0)
+    big = cs.peak_bits / 8.0 / 1024.0          # KiB that fits the peak
+    cs2 = capacity_sweep(build_graph(name), hs=SMALL, ws=SMALL,
+                         ub_kibs=(big, 2 * big))
+    assert cs2.spill_bits.tolist() == [0.0, 0.0]
+    # base grid is capacity-independent; totals differ only by the scalar
+    np.testing.assert_allclose(
+        cs.energy_total - cs.base.energy[None],
+        np.broadcast_to(cs.spill_energy[:, None, None],
+                        cs.energy_total.shape))
+
+
+def test_capacity_sweep_backends_agree():
+    cs_np = capacity_sweep(build_graph("resnet152"), hs=SMALL, ws=SMALL,
+                           backend="numpy")
+    cs_pl = capacity_sweep(build_graph("resnet152"), hs=SMALL, ws=SMALL,
+                           backend="pallas")
+    rel = (np.abs(cs_pl.energy_total - cs_np.energy_total)
+           / (np.abs(cs_np.energy_total) + 1.0))
+    assert rel.max() < 1e-3
+    assert cs_pl.peak_bits == cs_np.peak_bits
+    assert len(cs_np.ub_kibs) == len(UB_KIBS)
+    h, w, e = cs_np.best(0)
+    assert h in SMALL and w in SMALL and e > 0
+
+
+def test_dense_concat_outlives_chain():
+    """DenseNet's accumulated features keep block tensors live: peak
+    residency strictly above its own chain ablation."""
+    g = build_graph("densenet201")
+    assert (occupancy_profile(g, "dfs").peak_bits
+            > occupancy_profile(g.as_chain(), "dfs").peak_bits)
+
+
+# --------------------------------------------------------------- transformer --
+
+def test_transformer_block_residual_span():
+    from repro.configs.base import SHAPES, get_config
+    cfg = get_config("yi-9b")
+    g = transformer_block(cfg, SHAPES["decode_32k"])
+    g.validate()
+    assert len(g.flatten()) >= 8           # qkv, scores, av, o, mlp
+    p = occupancy_profile(g, "dfs")
+    # the block input's span must cover the whole attention bypass: it is
+    # consumed by the first residual add, which executes after wo
+    pos = {nm: i for i, nm in enumerate(p.schedule)}
+    (inp,) = [n.name for n in g.nodes if n.kind == "input"]
+    adds = [n.name for n in g.nodes if n.kind == "add"]
+    assert p.spans[inp][1] == pos[adds[0]] > pos[inp] + 3
+
+
+def test_graph_act_bits_scale_occupancy():
+    g8 = build_graph("resnet152")
+    g4 = build_graph("resnet152", act_bits=4)
+    assert (occupancy_profile(g4, "dfs").peak_bits
+            == occupancy_profile(g8, "dfs").peak_bits / 2)
