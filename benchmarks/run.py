@@ -8,6 +8,9 @@ CSV and writes machine-readable results to results/benchmarks/.
   fig5  robust configuration across the model mix        [paper Fig. 5]
   fig6  equal-PE-count aspect-ratio study                [paper Fig. 6]
   lm    the 10 assigned LM archs on the same DSE         [paper future work]
+  scenarios  serving-scenario DSE: the (arch x phase x batch x seq) matrix
+        in ONE fused batched Pallas dispatch vs the per-scenario loop,
+        robust serving config + tokens/sec scoring       [beyond paper]
   connectivity  graph-IR liveness: peak UB residency + finite-UB spill for
         chain vs residual vs dense-concat networks       [beyond paper]
   ablations  model-accounting options (act_reread, idle-PE, load hops)
@@ -15,8 +18,9 @@ CSV and writes machine-readable results to results/benchmarks/.
   precision  bitwidth DSE: (h, w, act_bits, weight_bits) design points
   kernels    Pallas kernel microbenches (interpret mode)
 
-``--quick`` runs only a reduced capacity sweep on both backends and writes
-results/benchmarks/BENCH_graph.json (the CI smoke/perf-trajectory probe).
+``--quick`` runs the reduced capacity sweep plus the serving-scenario
+sweep and writes results/benchmarks/BENCH_graph.json and
+BENCH_scenarios.json (the CI smoke/perf-trajectory probes).
 """
 from __future__ import annotations
 
@@ -155,6 +159,80 @@ def lm_architectures():
                   f";maxUtil=({s.hs[bu[0]]}x{s.ws[bu[1]]})"
                   f";util256={s.utilization[-1, -1]:.3f}")
     _save("lm_archs", out)
+
+
+def scenarios_bench(quick: bool = False):
+    """Serving-scenario DSE: the (arch x phase x batch x seq_len) matrix —
+    one fused batched Pallas dispatch over (scenario, h, w) vs the
+    per-scenario dispatch loop vs the numpy float64 loop, plus the robust
+    serving configuration and tokens/sec-at-clock scores. Writes
+    BENCH_scenarios.json (the CI perf-trajectory probe for the fusion)."""
+    from repro.core.dse import (grid_axes, robust_serving_config,
+                                scenario_sweep)
+    from repro.scenarios import (DEFAULT_CLOCK_HZ, named_workloads,
+                                 score_scenarios, serving_matrix)
+    scs = serving_matrix(batches=(1, 8), seq_lens=(512, 2048))
+    nw = named_workloads(scs)
+    # the batched config space: many small per-scenario sweeps is exactly
+    # the regime the fusion targets (dispatch overhead dominates); the
+    # full 961-grid study of a single model stays with grid_sweep.
+    # quick (CI) keeps the same space but times a single rep per backend.
+    reps = 1 if quick else 3
+    hs = grid_axes()[::4]                     # 8x8 = 64 configs
+    kw = dict(hs=hs, ws=hs)
+    s_fu, us_fu = _timeit(lambda: scenario_sweep(nw, block_c=64, **kw),
+                          n=reps)
+    s_lp, us_lp = _timeit(
+        lambda: scenario_sweep(nw, fused=False, block_c=64, **kw), n=reps)
+    s_np, us_np = _timeit(lambda: scenario_sweep(nw, backend="numpy", **kw),
+                          n=reps)
+    rel = 0.0
+    for k in ("cycles", "energy", "utilization", "m_ub", "m_inter_pe",
+              "m_aa", "ub_bw_bits"):
+        a = getattr(s_np, k)
+        b = getattr(s_fu, k)
+        rel = max(rel, float((np.abs(a - b) / (np.abs(a) + 1.0)).max()))
+    _emit("scenario_sweep_fused", us_fu,
+          f"{len(scs)}scenarios_x_{hs.size**2}cfgs"
+          f";max_rel_vs_numpy={rel:.2e}")
+    _emit("scenario_sweep_pallas_loop", us_lp,
+          f"fused_speedup={us_lp / us_fu:.2f}x")
+    _emit("scenario_sweep_numpy_loop", us_np,
+          f"fused_speedup={us_np / us_fu:.2f}x")
+
+    # robust serving config: uniform mix + a decode-heavy production mix
+    cfgs, F, mask = robust_serving_config(s_fu)
+    sel, Fm = cfgs[mask], F[mask]
+    robust = sel[np.argmin(Fm.sum(axis=1))]
+    decode_heavy = {n: (4.0 if "/decode/" in n else 1.0) for n in s_fu.names}
+    _, Fd, maskd = robust_serving_config(s_fu, weights=decode_heavy)
+    seld = cfgs[maskd]
+    robust_d = seld[np.argmin(Fd[maskd].sum(axis=1))]
+    _emit("scenario_robust_config", 0.0,
+          f"frontier={int(mask.sum())};uniform={robust.tolist()}"
+          f";decode_heavy={robust_d.tolist()}")
+
+    recs = score_scenarios(s_fu, scs, at=(int(robust[0]), int(robust[1])))
+    worst = min(recs, key=lambda r: r["tps_at_frac_of_best"])
+    _emit("scenario_tokens_per_sec", 0.0,
+          f"clock={DEFAULT_CLOCK_HZ/1e6:.0f}MHz"
+          f";worst_frac_of_best={worst['tps_at_frac_of_best']:.3f}"
+          f";worst={worst['scenario']}")
+    _save("BENCH_scenarios", {
+        "scenarios": len(scs), "configs": int(hs.size ** 2),
+        "grid": hs.tolist(),
+        "fused_us_per_call": us_fu,
+        "pallas_loop_us_per_call": us_lp,
+        "numpy_loop_us_per_call": us_np,
+        "speedup_fused_over_pallas_loop": us_lp / us_fu,
+        "speedup_fused_over_numpy_loop": us_np / us_fu,
+        "max_rel_fused_vs_numpy": rel,
+        "robust_uniform_hw": robust.tolist(),
+        "robust_decode_heavy_hw": robust_d.tolist(),
+        "frontier_size": int(mask.sum()),
+        "clock_hz": DEFAULT_CLOCK_HZ,
+        "scores": recs,
+    })
 
 
 def connectivity():
@@ -328,12 +406,14 @@ def kernels():
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--quick", action="store_true",
-                        help="reduced graph capacity-sweep smoke only "
-                             "(writes BENCH_graph.json)")
+                        help="reduced graph capacity-sweep + serving-"
+                             "scenario smoke only (writes BENCH_graph.json "
+                             "and BENCH_scenarios.json)")
     args = parser.parse_args()
     print("name,us_per_call,derived")
     if args.quick:
         graph_quick()
+        scenarios_bench(quick=True)
         return
     fig2_resnet_heatmap()
     fig3_pareto()
@@ -341,6 +421,7 @@ def main() -> None:
     fig5_robust()
     fig6_equal_pe()
     lm_architectures()
+    scenarios_bench()
     connectivity()
     ablations()
     future_work()

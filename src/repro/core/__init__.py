@@ -8,6 +8,8 @@ Public API:
         robust_config / equal_pe_sweep — paper §4-§5 + bitwidth DSE
     capacity_sweep — connectivity-aware (h, w, ub_kib) space over the
         graph IR (repro.graph), with finite-UB spill energy
+    scenario_sweep / robust_serving_config — the serving-scenario matrix
+        (repro.scenarios) in one fused batched Pallas dispatch
     get_workloads (CNN zoo) / extract_workloads (LM archs)
 """
 from repro.core.model_core import (Precision, list_dataflows,  # noqa
@@ -16,6 +18,7 @@ from repro.core.systolic import SystolicMetrics, analyze_gemm, analyze_network  
 from repro.core.emulator import emulate_gemm, emulate_tile_pass  # noqa
 from repro.core.dse import (grid_sweep, precision_sweep, pareto_grid,  # noqa
                             pareto_nsga2, robust_config, equal_pe_sweep,
-                            capacity_sweep)
+                            capacity_sweep, scenario_sweep,
+                            ScenarioSweepResult, robust_serving_config)
 from repro.core.cnn_zoo import ZOO, get_workloads  # noqa
 from repro.core.lm_workloads import extract_workloads  # noqa

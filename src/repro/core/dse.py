@@ -17,6 +17,13 @@
   per-config closed forms run on the numpy/pallas grid backends over
   `graph.flatten()`, and the graph's liveness profile (repro.graph) adds
   finite-UB spill energy per capacity point.
+* scenario_sweep: the serving-scenario dimension — every scenario's padded
+  layer table packed into one (S, L, 5) tensor and dispatched to the fused
+  batched Pallas kernel in a SINGLE call over (scenario, h, w), instead of
+  a Python loop of per-scenario sweeps (see repro.scenarios for the
+  config x phase x batch x seq_len matrix).
+* robust_serving_config: Fig. 5's min-max normalization generalized to a
+  (weighted) serving mix over a ScenarioSweepResult.
 """
 from __future__ import annotations
 
@@ -266,6 +273,158 @@ def equal_pe_sweep(model_workloads: Dict[str, Sequence[Workload]],
             "utilization": util,
         }
     return out
+
+
+# ---------------------------------------------------- serving-scenario DSE --
+
+# Padding row for batched layer tables: groups*repeats == 0 zeroes every
+# summed counter in the kernel; the maxed bandwidth terms are masked on the
+# same weight (see kernels/dse_eval.py).
+PAD_LAYER = (1.0, 1.0, 1.0, 0.0, 0.0)
+
+_SWEEP_KEYS = ("cycles", "energy", "utilization", "m_ub", "m_inter_pe",
+               "m_aa", "ub_bw_bits")
+
+
+def pad_layer_sets(workload_lists: Sequence[Sequence[Workload]]):
+    """Pack ragged per-scenario workload lists into one (S, Lmax, 5) float32
+    tensor, padding with `PAD_LAYER` rows."""
+    L = max(len(wls) for wls in workload_lists)
+    out = np.empty((len(workload_lists), L, 5), np.float32)
+    for i, wls in enumerate(workload_lists):
+        rows = [tuple(map(float, wl)) for wl in wls]
+        rows += [PAD_LAYER] * (L - len(rows))
+        out[i] = np.asarray(rows, np.float32)
+    return out
+
+
+@dataclasses.dataclass
+class ScenarioSweepResult:
+    """Per-scenario (h, w) grids stacked along a leading scenario axis."""
+    names: List[str]
+    hs: np.ndarray          # (G,)
+    ws: np.ndarray
+    H: np.ndarray           # (G, G)
+    W: np.ndarray
+    cycles: np.ndarray      # (S, G, G)
+    energy: np.ndarray
+    utilization: np.ndarray
+    m_ub: np.ndarray
+    m_inter_pe: np.ndarray
+    m_aa: np.ndarray
+    ub_bw_bits: np.ndarray
+
+    def index(self, name: str) -> int:
+        return self.names.index(name)
+
+    def result(self, name: str) -> SweepResult:
+        """One scenario's grids as a plain SweepResult."""
+        i = self.index(name)
+        return SweepResult(hs=self.hs, ws=self.ws, H=self.H, W=self.W,
+                           **{k: getattr(self, k)[i] for k in _SWEEP_KEYS})
+
+    def best_energy(self, name: str):
+        """(h, w, energy) of the min-energy design point of one scenario."""
+        e = self.energy[self.index(name)]
+        i, j = np.unravel_index(np.argmin(e), e.shape)
+        return int(self.hs[i]), int(self.ws[j]), float(e[i, j])
+
+
+def scenario_sweep(named_workloads: Dict[str, Sequence[Workload]], hs=None,
+                   ws=None, backend: str = "pallas", fused: bool = True,
+                   block_c: int = 128, **model_kw) -> ScenarioSweepResult:
+    """Sweep the whole scenario matrix over the (h, w) grid.
+
+    `backend="pallas"` with `fused=True` (the default) pads every
+    scenario's layer list into one batched (S, L, 5) tensor and makes a
+    SINGLE fused kernel dispatch over (scenario, h, w); `fused=False` is
+    the per-scenario dispatch loop kept as the speedup baseline.
+    `backend="numpy"` is the float64 reference (always a per-scenario
+    loop; exact, used by the equivalence tests)."""
+    hs = grid_axes() if hs is None else np.asarray(hs)
+    ws = grid_axes() if ws is None else np.asarray(ws)
+    H, W = np.meshgrid(hs, ws, indexing="ij")
+    names = list(named_workloads)
+    shape = (len(names),) + H.shape
+
+    if backend == "numpy":
+        grids = {k: np.empty(shape, np.float64) for k in _SWEEP_KEYS}
+        for i, name in enumerate(names):
+            s = _grid_sweep_numpy(named_workloads[name], hs, ws, H, W,
+                                  **model_kw)
+            for k in _SWEEP_KEYS:
+                grids[k][i] = getattr(s, k)
+    elif backend == "pallas" and not fused:
+        grids = {k: np.empty(shape, np.float64) for k in _SWEEP_KEYS}
+        cfgs = np.stack([H.reshape(-1), W.reshape(-1)], axis=1)
+        for i, name in enumerate(names):
+            col = _pallas_eval_configs(named_workloads[name], cfgs,
+                                       block_c=block_c, **model_kw)
+            col["ub_bw_bits"] = col.pop("ub_bandwidth_bits")
+            for k in _SWEEP_KEYS:
+                grids[k][i] = col[k].reshape(H.shape)
+    elif backend == "pallas":
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+        from repro.kernels.dse_eval import OUT_COLS
+
+        layer_sets = pad_layer_sets([named_workloads[n] for n in names])
+        cfgs = np.stack([H.reshape(-1), W.reshape(-1)], axis=1)
+        C = cfgs.shape[0]
+        pad = (-C) % block_c
+        if pad:
+            cfgs = np.concatenate([cfgs, np.repeat(cfgs[-1:], pad, 0)],
+                                  axis=0)
+        out = np.asarray(ops.sweep_batched(
+            jnp.asarray(cfgs, jnp.float32), jnp.asarray(layer_sets),
+            block_c=block_c, **model_kw))[:, :C]
+        cols = {k: out[:, :, j] for j, k in enumerate(OUT_COLS)}
+        cols["ub_bw_bits"] = cols.pop("ub_bandwidth_bits")
+        grids = {k: cols[k].reshape(shape).astype(np.float64)
+                 for k in _SWEEP_KEYS}
+    else:
+        raise ValueError(f"unknown backend {backend!r} (numpy|pallas)")
+
+    return ScenarioSweepResult(names=names, hs=hs, ws=ws, H=H, W=W, **grids)
+
+
+def robust_serving_config(sweep: ScenarioSweepResult,
+                          weights: Optional[Dict[str, float]] = None):
+    """Fig. 5 generalized to a serving mix: the (weighted) average of
+    min-max-normalized (energy, cycles) per SCENARIO — phase x batch x
+    seq_len cells, not just models — then the Pareto set over the grid.
+
+    `weights` maps scenario name -> traffic share; None means uniform.
+    When a dict is given it must be COMPLETE over the swept scenarios
+    (unknown names raise): a scenario's share may be 0.0 (no traffic),
+    but it must be said explicitly — silently dropping unnamed cells
+    would turn a typo into a different mix."""
+    if weights is not None:
+        unknown = set(weights) - set(sweep.names)
+        missing = set(sweep.names) - set(weights)
+        if unknown or missing:
+            raise ValueError(
+                "robust_serving_config: weights must cover the swept "
+                f"scenarios exactly (unknown: {sorted(unknown)[:3]}, "
+                f"missing: {sorted(missing)[:3]})")
+    wsum = 0.0
+    e_acc = np.zeros_like(sweep.H, np.float64)
+    c_acc = np.zeros_like(sweep.H, np.float64)
+    for i, name in enumerate(sweep.names):
+        wt = 1.0 if weights is None else float(weights[name])
+        if wt == 0.0:
+            continue
+        e_acc += wt * _normalize(sweep.energy[i])
+        c_acc += wt * _normalize(sweep.cycles[i])
+        wsum += wt
+    if wsum == 0.0:
+        raise ValueError("robust_serving_config: all scenario weights zero")
+    F = np.stack([(e_acc / wsum).reshape(-1), (c_acc / wsum).reshape(-1)],
+                 axis=1)
+    mask = pareto_mask(F)
+    configs = np.stack([sweep.H.reshape(-1), sweep.W.reshape(-1)], axis=1)
+    return configs, F, mask
 
 
 # ------------------------------------------------------ capacity-aware DSE --

@@ -161,9 +161,13 @@ def ws_components(xp, M, K, N, h, w, opt: ModelOptions):
 
     # Subsequent weight loads are ALWAYS hidden by double buffering: a load
     # takes h_t <= h cycles while the previous pass runs
-    # M + h_prev + w_prev - 1 >= h cycles. Only the first load is exposed.
+    # M + h_prev + w_prev - 1 >= h cycles. Only the first load is exposed,
+    # and it fills the FIRST K-tile's rows: h when K spans several row
+    # tiles, else the single ragged tile's rk (the cycle-level emulator
+    # pins this exactly — charging h for a K < h problem would stall on
+    # rows that hold no weights).
     pass_cycles = tsum(lambda ht, wt: M + ht + wt - 1)
-    first_load = xp.where(Tk * Tn > 1, h, rk)
+    first_load = xp.where(Tk > 1, h, rk)
     min_pass = M + xp.minimum(h, rk) + xp.minimum(w, rn) - 1
 
     zero = pass_cycles * 0.0

@@ -92,3 +92,19 @@ def lower(layers: Iterable) -> List[Workload]:
 
 def total_macs(workloads: Iterable[Workload]) -> int:
     return int(sum(m * k * n * g * r for (m, k, n, g, r) in workloads))
+
+
+def aggregate_workloads(workloads: Iterable[Workload]):
+    """Collapse a workload list to {(M, K, N, groups): total_repeats}.
+
+    This is the order- and `repeats`-factoring-insensitive view under which
+    a per-layer lowering (one GEMM node per layer, repeats=1 each) and the
+    flat aggregated tables (one tuple per GEMM shape, repeats=#layers) are
+    equivalent: every closed-form metric is linear in repeats, so equal
+    aggregates imply identical `analyze_network` results.
+    """
+    out = {}
+    for (m, k, n, g, r) in workloads:
+        key = (m, k, n, g)
+        out[key] = out.get(key, 0) + r
+    return out

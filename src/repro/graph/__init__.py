@@ -6,8 +6,10 @@ the flat GEMM lists in `core/cnn_zoo.py` erase it. This package makes it
 explicit:
 
     ir        DAG of layer nodes whose edges are activation tensors
-    builders  the full CNN zoo + a transformer block, with real connectivity
-              (``Graph.flatten()`` reproduces the legacy flat lists exactly)
+    builders  the full CNN zoo + transformer blocks + full-model LM serving
+              graphs (``lm_graph``) with KV-cache/recurrent-state residency
+              (``Graph.flatten()`` reproduces the legacy flat lists exactly;
+              ``lm_graph`` aggregates to ``extract_workloads``)
     schedule  topological orders (depth/breadth-first) + tensor liveness ->
               per-step and peak Unified-Buffer occupancy in bits
     occupancy finite-UB spill/refetch accounting on top of the Eq.1 model
@@ -15,7 +17,8 @@ explicit:
 Public API re-exported here for convenience.
 """
 from repro.graph.ir import Graph, Node, Tensor  # noqa
-from repro.graph.builders import GRAPH_ZOO, build_graph, transformer_block  # noqa
+from repro.graph.builders import (GRAPH_ZOO, build_graph, lm_graph,  # noqa
+                                  transformer_block)
 from repro.graph.schedule import (OccupancyProfile, occupancy_profile,  # noqa
                                   toposort)
 from repro.graph.occupancy import GraphMetrics, analyze_graph, spill_bits  # noqa

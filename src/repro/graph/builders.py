@@ -23,6 +23,22 @@ Two deliberate modeling choices, inherited from the legacy tables:
 `transformer_block` builds one decoder layer over the `configs.base`
 architectures with the residual edges the flat `lm_workloads` extraction
 drops — the block input stays live across the whole attention span.
+
+`lm_graph` stacks those blocks into FULL-model serving graphs for every
+family of the configs zoo (attention / MoE / hybrid mamba / ssm xLSTM /
+enc-dec audio), following the `lm_workloads` lowering conventions so the
+aggregated `flatten()` reproduces `extract_workloads(cfg, shape)` GEMM for
+GEMM (pinned by the flatten-equivalence test). What the flat list cannot
+express — and the graph makes first-class — is serving state:
+
+  * decode: every layer's KV cache (and SSM/recurrent state) enters as an
+    `input` tensor and is pinned through the whole pass by the terminal
+    `output` sink — caches are carried state, not transients, so decode
+    liveness/spill accounting sees their full residency;
+  * prefill: the K/V projection outputs ARE the cache being built; they are
+    pinned to the end of the pass the same way;
+  * audio: the encoder output feeds every decoder layer's cross-attention,
+    so it stays live across the whole decoder naturally via graph edges.
 """
 from __future__ import annotations
 
@@ -338,13 +354,8 @@ def efficientnet_b0(act_bits: float = DEFAULT_ACT_BITS) -> Graph:
 
 # ------------------------------------------------------------- transformers --
 
-def transformer_block(cfg: ArchConfig, shape: ShapeConfig,
-                      act_bits: float = DEFAULT_ACT_BITS) -> Graph:
-    """One decoder layer as a DAG, following the `lm_workloads` lowering
-    conventions (per-head score/value GEMMs via `groups`, sliding-window
-    KV truncation) but keeping the residual edges: the block input stays
-    live across the whole attention span, and the post-attention residual
-    across the MLP — the transformer's connectivity cost."""
+def _lm_dims(cfg: ArchConfig, shape: ShapeConfig):
+    """(dims, B, Sq, Skv, eff_kv, T) under the `lm_workloads` conventions."""
     d = resolve_dims(cfg, 1)
     B = shape.global_batch
     if shape.kind == "decode":
@@ -352,30 +363,266 @@ def transformer_block(cfg: ArchConfig, shape: ShapeConfig,
     else:
         Sq = Skv = shape.seq_len
         T = B * Sq
-    hd, qh, kvh = d.head_dim, cfg.num_heads, cfg.num_kv_heads
     win = cfg.sliding_window
     eff_kv = min(Skv, win) if win else Skv
-    dm, dff = cfg.d_model, cfg.d_ff
+    return d, B, Sq, Skv, eff_kv, T
 
-    b = _B(f"transformer_block[{shape.kind}]", act_bits)
-    x = b.input((T, dm))
-    q = b.gemm([x], Gemm(T, dm, qh * hd, name="wq"), (T, qh * hd))
-    k = b.gemm([x], Gemm(T, dm, kvh * hd, name="wk"), (T, kvh * hd))
-    v = b.gemm([x], Gemm(T, dm, kvh * hd, name="wv"), (T, kvh * hd))
-    s = b.gemm([q, k], Gemm(Sq, hd, eff_kv, groups=B * qh, name="scores"),
-               (B * qh, Sq, eff_kv))
-    av = b.gemm([s, v], Gemm(Sq, eff_kv, hd, groups=B * qh, name="attnv"),
-                (T, qh * hd))
-    o = b.gemm([av], Gemm(T, qh * hd, dm, name="wo"), (T, dm))
-    r1 = b.add(o, x)                        # residual: x live across attn
+
+def _attn_mixer(b: _B, x: str, cfg: ArchConfig, *, hd: int, B: int, Sq: int,
+                eff_kv: int, T: int, rep: int = 1, kv=None,
+                kv_out=None) -> str:
+    """Self-attention with residual: QKV projections, per-(batch x head)
+    score/value GEMMs (via `groups`), output projection, residual add.
+    `kv` (decode) is the layer's cache tensor, wired into the score/value
+    GEMMs; `kv_out` (prefill) collects the K/V projection nodes — they ARE
+    the cache being built and get pinned by the graph sink."""
+    dm, qh, kvh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    q = b.gemm([x], Gemm(T, dm, qh * hd, repeats=rep, name="wq"),
+               (T, qh * hd))
+    k = b.gemm([x], Gemm(T, dm, kvh * hd, repeats=rep, name="wk"),
+               (T, kvh * hd))
+    v = b.gemm([x], Gemm(T, dm, kvh * hd, repeats=rep, name="wv"),
+               (T, kvh * hd))
+    if kv_out is not None:
+        kv_out += [k, v]
+    s = b.gemm([q, k] if kv is None else [q, k, kv],
+               Gemm(Sq, hd, eff_kv, groups=B * qh, repeats=rep,
+                    name="scores"), (B * qh, Sq, eff_kv))
+    av = b.gemm([s, v] if kv is None else [s, v, kv],
+                Gemm(Sq, eff_kv, hd, groups=B * qh, repeats=rep,
+                     name="attnv"), (T, qh * hd))
+    o = b.gemm([av], Gemm(T, dm, dm, repeats=rep, name="wo"), (T, dm))
+    return b.add(o, x)                      # residual: x live across attn
+
+
+def _cross_attn(b: _B, x: str, enc: str, cfg: ArchConfig, *, hd: int, B: int,
+                Sq: int, Se: int, T: int, rep: int = 1) -> str:
+    """Enc-dec cross attention (audio): q from decoder tokens, kv over the
+    encoder output — which therefore stays live across ALL decoder layers.
+    Projections follow the flat lowering: one (T, d, d) GEMM each for the
+    query and output sides (encoder K/V are amortized, as in the flat
+    extraction)."""
+    dm, qh = cfg.d_model, cfg.num_heads
+    cq = b.gemm([x], Gemm(T, dm, dm, repeats=rep, name="xq"), (T, dm))
+    s = b.gemm([cq, enc], Gemm(Sq, hd, Se, groups=B * qh, repeats=rep,
+                               name="xscores"), (B * qh, Sq, Se))
+    av = b.gemm([s, enc], Gemm(Sq, Se, hd, groups=B * qh, repeats=rep,
+                               name="xattnv"), (T, qh * hd))
+    co = b.gemm([av], Gemm(T, dm, dm, repeats=rep, name="xo"), (T, dm))
+    return b.add(co, x)
+
+
+def _mlp_block(b: _B, x: str, cfg: ArchConfig, T: int, rep: int = 1) -> str:
+    """Dense MLP with residual; gated (silu) MLPs carry up & gate branches."""
+    dm, dff = cfg.d_model, cfg.d_ff
+    if dff == 0:
+        return x
     if cfg.mlp_activation == "silu":        # gated MLP: up & gate branches
-        up = b.gemm([r1], Gemm(T, dm, dff, name="wup"), (T, dff))
-        gate = b.gemm([r1], Gemm(T, dm, dff, name="wgate"), (T, dff))
+        up = b.gemm([x], Gemm(T, dm, dff, repeats=rep, name="wup"), (T, dff))
+        gate = b.gemm([x], Gemm(T, dm, dff, repeats=rep, name="wgate"),
+                      (T, dff))
         hmid = b.add(up, gate)              # elementwise gate merge
     else:
-        hmid = b.gemm([r1], Gemm(T, dm, dff, name="wup"), (T, dff))
-    down = b.gemm([hmid], Gemm(T, dff, dm, name="wdown"), (T, dm))
-    b.add(down, r1)                         # residual: r1 live across MLP
+        hmid = b.gemm([x], Gemm(T, dm, dff, repeats=rep, name="wup"),
+                      (T, dff))
+    down = b.gemm([hmid], Gemm(T, dff, dm, repeats=rep, name="wdown"),
+                  (T, dm))
+    return b.add(down, x)                   # residual: x live across MLP
+
+
+def _moe_block(b: _B, x: str, cfg: ArchConfig, T: int, rep: int = 1) -> str:
+    """Routed MoE MLP: router GEMM + per-active-expert grouped GEMMs with
+    per-expert M scaled to the expected routed token count. The down
+    projection's output tensor is the post-combine (T, d) activation (the
+    top-k weighted scatter back to tokens), so the residual join is
+    shape-consistent."""
+    dm, dff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    te = max(1, T * cfg.experts_per_token // E)
+    r = b.gemm([x], Gemm(T, dm, E, repeats=rep, name="router"), (T, E))
+    up = b.gemm([x, r], Gemm(te, dm, dff, groups=E, repeats=rep,
+                             name="eup"), (te * E, dff))
+    gate = b.gemm([x, r], Gemm(te, dm, dff, groups=E, repeats=rep,
+                               name="egate"), (te * E, dff))
+    hmid = b.add(up, gate)
+    down = b.gemm([hmid], Gemm(te, dff, dm, groups=E, repeats=rep,
+                               name="edown"), (T, dm))
+    return b.add(down, x)
+
+
+def _mamba_block(b: _B, x: str, cfg: ArchConfig, T: int, rep: int = 1,
+                 state=None) -> str:
+    """Mamba mixer projections (the scan itself carries no GEMM); `state`
+    (decode) is the layer's recurrent SSM/conv state, consumed at the scan
+    position (out_proj)."""
+    dm = cfg.d_model
+    din = cfg.mamba_expand * dm
+    dr = max(1, (dm + 15) // 16)
+    ds = cfg.mamba_d_state
+    ip = b.gemm([x], Gemm(T, dm, 2 * din, repeats=rep, name="in_proj"),
+                (T, 2 * din))
+    xp = b.gemm([ip], Gemm(T, din, dr + 2 * ds, repeats=rep, name="x_proj"),
+                (T, dr + 2 * ds))
+    dt = b.gemm([xp], Gemm(T, dr, din, repeats=rep, name="dt_proj"),
+                (T, din))
+    op = b.gemm([dt] if state is None else [dt, state],
+                Gemm(T, din, dm, repeats=rep, name="out_proj"), (T, dm))
+    return b.add(op, x)
+
+
+def _mlstm_block(b: _B, x: str, cfg: ArchConfig, T: int, rep: int = 1,
+                 state=None) -> str:
+    d = cfg.d_model
+    din = 2 * d
+    up = b.gemm([x], Gemm(T, d, 2 * din, repeats=rep, name="m_up"),
+                (T, 2 * din))
+    qkvg = b.gemm([up] if state is None else [up, state],
+                  Gemm(T, din, 3 * din + 2 * cfg.num_heads, repeats=rep,
+                       name="m_qkvg"), (T, 3 * din + 2 * cfg.num_heads))
+    down = b.gemm([qkvg], Gemm(T, din, d, repeats=rep, name="m_down"),
+                  (T, d))
+    return b.add(down, x)
+
+
+def _slstm_block(b: _B, x: str, cfg: ArchConfig, T: int, rep: int = 1,
+                 state=None) -> str:
+    d = cfg.d_model
+    a = b.gemm([x] if state is None else [x, state],
+               Gemm(T, d, 4 * d, repeats=rep, name="s_in"), (T, 4 * d))
+    o = b.gemm([a], Gemm(T, d, d, repeats=rep, name="s_out"), (T, d))
+    return b.add(o, x)
+
+
+def transformer_block(cfg: ArchConfig, shape: ShapeConfig,
+                      act_bits: float = DEFAULT_ACT_BITS) -> Graph:
+    """One decoder layer as a DAG, following the `lm_workloads` lowering
+    conventions (per-head score/value GEMMs via `groups`, sliding-window
+    KV truncation) but keeping the residual edges: the block input stays
+    live across the whole attention span, and the post-attention residual
+    across the MLP — the transformer's connectivity cost."""
+    d, B, Sq, Skv, eff_kv, T = _lm_dims(cfg, shape)
+    b = _B(f"transformer_block[{shape.kind}]", act_bits)
+    x = b.input((T, cfg.d_model))
+    r1 = _attn_mixer(b, x, cfg, hd=d.head_dim, B=B, Sq=Sq, eff_kv=eff_kv,
+                     T=T)
+    _mlp_block(b, r1, cfg, T)
+    return b.g
+
+
+# ------------------------------------------------------- full-model serving --
+
+def _layer_plan(cfg: ArchConfig):
+    """Per-layer (mixer, mlp) kinds, mirroring the flat lowering's layer
+    counting exactly: `is_attn_layer`/`is_moe_layer` for attention/MoE
+    placement, mamba on the non-attention layers of hybrids, and the ssm
+    family alternating sLSTM/mLSTM with n_mlstm = num_layers // 2."""
+    plan = []
+    for i in range(cfg.num_layers):
+        if cfg.family == "ssm":
+            plan.append(("mlstm" if i % 2 else "slstm", None))
+            continue
+        if cfg.is_attn_layer(i):
+            mixer = "attn"
+        elif cfg.family == "hybrid":
+            mixer = "mamba"
+        else:
+            mixer = None
+        if cfg.is_moe_layer(i):
+            mlp = "moe"
+        elif cfg.d_ff:
+            mlp = "mlp"
+        else:
+            mlp = None
+        plan.append((mixer, mlp))
+    return plan
+
+
+def _state_shape(cfg: ArchConfig, mixer: str, B: int, eff_kv: int, hd: int):
+    """Decode-time per-layer serving-state tensor shape. KV caches are the
+    real thing (2 x B x eff_kv x kv_heads x head_dim, sliding-window
+    capped); recurrent states are the standard per-architecture fixed-size
+    carries (mamba SSM+conv state, mLSTM matrix memory, sLSTM cell/gate
+    registers)."""
+    if mixer == "attn":
+        return (2, B, eff_kv, cfg.num_kv_heads * hd)
+    din = cfg.mamba_expand * cfg.d_model
+    if mixer == "mamba":
+        return (B, din, cfg.mamba_d_state + cfg.mamba_d_conv)
+    if mixer == "mlstm":
+        dh = max(1, 2 * cfg.d_model // max(cfg.num_heads, 1))
+        return (B, cfg.num_heads, dh, dh)
+    return (B, 4, cfg.d_model)              # slstm
+
+
+def lm_graph(cfg: ArchConfig, shape: ShapeConfig,
+             act_bits: float = DEFAULT_ACT_BITS) -> Graph:
+    """Full-model serving graph: `transformer_block`-style layers stacked
+    per `_layer_plan` across every family of the configs zoo, with the
+    residual edges AND the serving state the flat lowering cannot express.
+
+    Aggregated `flatten()` reproduces `extract_workloads(cfg, shape)` GEMM
+    for GEMM (same (M, K, N, groups) keys, same total repeats — every
+    closed-form metric is linear in repeats, so analyze_network agrees
+    exactly; pinned by the flatten-equivalence test in test_scenarios).
+
+    Serving state is held live for the whole pass by the terminal `output`
+    sink: in decode, each layer's KV cache / recurrent state enters as an
+    input tensor up front (all caches co-resident, as on a real serving
+    box); in prefill, the K/V projections being written ARE the cache and
+    are pinned the same way. Training pins nothing (no cache carried)."""
+    d, B, Sq, Skv, eff_kv, T = _lm_dims(cfg, shape)
+    rep = 3 if shape.kind == "train" else 1
+    hd = d.head_dim
+    plan = _layer_plan(cfg)
+    b = _B(f"{cfg.name}[{shape.kind}]", act_bits)
+
+    x = b.input((T, cfg.d_model))
+    state = {}
+    if shape.kind == "decode":
+        for i, (mixer, _) in enumerate(plan):
+            if mixer is not None:
+                state[i] = b.input(_state_shape(cfg, mixer, B, eff_kv, hd))
+    pinned = list(state.values())
+    kv_out = pinned if shape.kind == "prefill" else None
+
+    enc = None
+    if cfg.family == "audio":               # bidirectional encoder stack
+        Te = B * cfg.encoder_seq
+        # the flat lowering routes the encoder through _attn_workloads,
+        # which applies the sliding-window cap to ITS kv span too
+        enc_kv = min(cfg.encoder_seq, cfg.sliding_window) \
+            if cfg.sliding_window else cfg.encoder_seq
+        enc = b.input((Te, cfg.d_model))
+        for _ in range(cfg.encoder_layers):
+            enc = _attn_mixer(b, enc, cfg, hd=hd, B=B, Sq=cfg.encoder_seq,
+                              eff_kv=enc_kv, T=Te, rep=rep)
+            enc = _mlp_block(b, enc, cfg, Te, rep=rep)
+
+    cur = x
+    for i, (mixer, mlp) in enumerate(plan):
+        if mixer == "attn":
+            cur = _attn_mixer(b, cur, cfg, hd=hd, B=B, Sq=Sq, eff_kv=eff_kv,
+                              T=T, rep=rep, kv=state.get(i), kv_out=kv_out)
+        elif mixer == "mamba":
+            cur = _mamba_block(b, cur, cfg, T, rep=rep, state=state.get(i))
+        elif mixer == "mlstm":
+            cur = _mlstm_block(b, cur, cfg, T, rep=rep, state=state.get(i))
+        elif mixer == "slstm":
+            cur = _slstm_block(b, cur, cfg, T, rep=rep, state=state.get(i))
+        if cfg.family == "audio":
+            cur = _cross_attn(b, cur, enc, cfg, hd=hd, B=B, Sq=Sq,
+                              Se=cfg.encoder_seq, T=T, rep=rep)
+        if mlp == "moe":
+            cur = _moe_block(b, cur, cfg, T, rep=rep)
+        elif mlp == "mlp":
+            cur = _mlp_block(b, cur, cfg, T, rep=rep)
+
+    # unembedding (decode/prefill emit one position per sequence)
+    t_out = B if shape.kind in ("decode", "prefill") else T
+    logits = b.gemm([cur], Gemm(t_out, cfg.d_model, cfg.vocab_size,
+                                repeats=rep, name="unembed"),
+                    (t_out, cfg.vocab_size))
+    b.g.add(Node("sink", "output", Tensor((0,), b.bits)),
+            tuple([logits] + pinned))
     return b.g
 
 

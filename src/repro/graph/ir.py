@@ -24,6 +24,11 @@ Node kinds:
               materialize — consumers of the concat keep the underlying
               source tensors live instead (DenseNet-style buffers are
               contiguous allocations, not copies)
+  ``output``  graph sink: a non-materializing terminal consumer that pins
+              its inputs live through the end of the schedule. Full-model
+              serving graphs use it to keep KV-cache tensors resident for
+              the whole pass (the cache is the state carried to the next
+              decode step, not a transient)
 
 ``Graph.flatten()`` returns the GEMM workload tuples in node-insertion
 order, which builders keep identical to the legacy `cnn_zoo` tables — so
@@ -38,8 +43,8 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.core.workloads import Conv, FC, Workload
 
-VIEW_KINDS = frozenset({"concat"})
-KINDS = frozenset({"input", "gemm", "pool", "add", "concat"})
+VIEW_KINDS = frozenset({"concat", "output"})
+KINDS = frozenset({"input", "gemm", "pool", "add", "concat", "output"})
 
 
 @dataclasses.dataclass(frozen=True)

@@ -17,6 +17,14 @@ Inputs:
 Outputs:
   (C, 8) float32 — OUT_COLS per design point (movement counters summed over
   layers, ub_bw_bits maxed, utilization normalized by the PE count).
+
+`dse_eval_batched` extends the same kernel body to BATCHED layer sets: a
+(S, L, 5) tensor of S padded per-scenario layer tables evaluated against
+the shared config list in ONE fused dispatch over the (scenario, config
+block) grid — the serving-scenario sweep (core/dse.scenario_sweep) runs the
+whole scenario matrix without a Python loop of per-scenario sweeps. Padding
+rows are (1, 1, 1, 0, 0): groups*repeats == 0 zeroes every summed counter,
+and the per-cycle bandwidth/port maxima are masked on that same weight.
 """
 from __future__ import annotations
 
@@ -48,10 +56,16 @@ def _eval_block(h, w, layers, *, dataflow, precision, act_reread,
         count_weight_load_hops=count_weight_load_hops,
         idle_pe_energy=idle_pe_energy, n_arrays=n_arrays)
     # terms independent of (h, w) — e.g. macs, UB word counts — come back
-    # (1, L); broadcast to the full (block_c, L) before reducing over layers
+    # (1, L); broadcast to the full (block_c, L) before reducing over layers.
+    # Padding rows carry groups*repeats == 0, which already zeroes the
+    # summed counters; the maxed per-cycle terms (bandwidth, ports) must be
+    # masked explicitly or a (1, 1, 1) pad row would dominate them.
     full = (h.shape[0], layers.shape[0])
+    valid = g > 0.0
     _sum = lambda x: jnp.sum(jnp.broadcast_to(x, full), axis=1)
-    _max = lambda x: jnp.max(jnp.broadcast_to(x, full), axis=1)
+    _max = lambda x: jnp.max(
+        jnp.where(jnp.broadcast_to(valid, full),
+                  jnp.broadcast_to(x, full), 0.0), axis=1)
     cyc = _sum(d["cycles"])
     mc = _sum(d["macs"])
     pe = h[:, 0] * w[:, 0] * pe_multiplier(dataflow, n_arrays)
@@ -103,3 +117,48 @@ def dse_eval(configs, layers, *, block_c: int = 128,
         out_shape=jax.ShapeDtypeStruct((C, len(OUT_COLS)), jnp.float32),
         interpret=interpret,
     )(configs.astype(jnp.float32), layers.astype(jnp.float32))
+
+
+def _kernel_batched(cfg_ref, layers_ref, out_ref, **opts):
+    h = cfg_ref[:, 0]
+    w = cfg_ref[:, 1]
+    out_ref[...] = _eval_block(h, w, layers_ref[0], **opts)[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_c", "interpret", "dataflow", "precision",
+                     "act_reread", "count_weight_load_hops",
+                     "idle_pe_energy", "n_arrays"))
+def dse_eval_batched(configs, layer_sets, *, block_c: int = 128,
+                     interpret: bool = False, dataflow: str = "ws",
+                     precision: Precision = None, act_reread: bool = False,
+                     count_weight_load_hops: bool = False,
+                     idle_pe_energy: float = 0.0, n_arrays: int = 1):
+    """Fused sweep over S scenarios x C configs in a single dispatch.
+
+    configs: (C, 2) float32, C % block_c == 0 — shared (h, w) design points
+    layer_sets: (S, L, 5) float32 — one padded layer table per scenario
+      (pad rows are (1, 1, 1, 0, 0); see module docstring)
+    Returns (S, C, 8) float32 — OUT_COLS per (scenario, design point).
+    """
+    C = configs.shape[0]
+    S, L, _ = layer_sets.shape
+    assert C % block_c == 0, (C, block_c)
+    kernel = functools.partial(
+        _kernel_batched, dataflow=dataflow, precision=precision,
+        act_reread=act_reread,
+        count_weight_load_hops=count_weight_load_hops,
+        idle_pe_energy=idle_pe_energy, n_arrays=n_arrays)
+    return pl.pallas_call(
+        kernel,
+        grid=(S, C // block_c),
+        in_specs=[
+            pl.BlockSpec((block_c, 2), lambda s, i: (i, 0)),
+            pl.BlockSpec((1, L, 5), lambda s, i: (s, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, len(OUT_COLS)),
+                               lambda s, i: (s, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, C, len(OUT_COLS)), jnp.float32),
+        interpret=interpret,
+    )(configs.astype(jnp.float32), layer_sets.astype(jnp.float32))

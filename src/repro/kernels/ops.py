@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.dse_eval import dse_eval
+from repro.kernels.dse_eval import dse_eval, dse_eval_batched
 from repro.kernels.swa_attention import swa_attention
 from repro.kernels.ws_matmul import ws_matmul
 
@@ -38,3 +38,12 @@ def sweep(configs, layers, *, block_c=128, interpret=None, **model_kw):
     interpret = _default_interpret() if interpret is None else interpret
     return dse_eval(configs, layers, block_c=block_c, interpret=interpret,
                     **model_kw)
+
+
+def sweep_batched(configs, layer_sets, *, block_c=128, interpret=None,
+                  **model_kw):
+    """Fused (scenario, config) sweep kernel over batched layer sets —
+    S scenarios x C configs in one dispatch (see kernels/dse_eval.py)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return dse_eval_batched(configs, layer_sets, block_c=block_c,
+                            interpret=interpret, **model_kw)

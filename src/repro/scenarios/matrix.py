@@ -1,0 +1,92 @@
+"""Serving-scenario matrix: (architecture x phase x batch x seq_len).
+
+The paper's robustness experiment (Fig. 5) fixes the workload mix to a
+single-image CNN zoo; SCALE-Sim shows array-shape conclusions flip with the
+workload mix. For LM serving the mix is a MATRIX: the same architecture
+presents completely different GEMM shapes in prefill (compute-bound, M =
+B*S), decode (skinny M = B, grouped per-head GEMMs over the KV span) and
+training (3x backward volume) — and both batch and sequence length scale M
+and the attention span independently. A `Scenario` names one cell of that
+matrix; `serving_matrix` enumerates it over the configs zoo.
+
+Every scenario lowers two ways, sharing one source of truth:
+
+  * ``workloads()`` — the flat GEMM list (`lm_workloads.extract_workloads`)
+    consumed by the fused batched sweep (`core.dse.scenario_sweep`);
+  * ``graph()`` — the full-model serving graph (`graph.builders.lm_graph`)
+    with KV-cache/recurrent-state residency for liveness/spill analysis
+    (its aggregated flatten() reproduces ``workloads()`` exactly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.configs.base import ShapeConfig, get_config, list_archs
+from repro.core.lm_workloads import extract_workloads
+from repro.core.workloads import Workload
+
+PHASES = ("prefill", "decode", "train")
+
+# Default serving cell: a modest continuous-batching slice. Small enough
+# that the full 10-arch x {prefill, decode} matrix sweeps in seconds on the
+# fused kernel, large enough that decode is genuinely memory-shaped (the
+# KV span dwarfs the token batch).
+DEFAULT_BATCH = 8
+DEFAULT_SEQ = 2048
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One cell of the serving matrix."""
+    arch: str
+    phase: str              # prefill | decode | train
+    batch: int = DEFAULT_BATCH
+    seq_len: int = DEFAULT_SEQ
+
+    def __post_init__(self):
+        if self.phase not in PHASES:
+            raise ValueError(f"unknown phase {self.phase!r} (have {PHASES})")
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}/{self.phase}/b{self.batch}/s{self.seq_len}"
+
+    @property
+    def shape(self) -> ShapeConfig:
+        return ShapeConfig(self.name, self.seq_len, self.batch, self.phase)
+
+    def workloads(self) -> List[Workload]:
+        """Flat GEMM lowering of this cell (the sweep input)."""
+        return extract_workloads(get_config(self.arch), self.shape)
+
+    def graph(self, act_bits: float = 8.0):
+        """Full-model serving graph with KV/state residency."""
+        from repro.graph.builders import lm_graph
+        return lm_graph(get_config(self.arch), self.shape,
+                        act_bits=act_bits)
+
+    @property
+    def tokens_per_pass(self) -> int:
+        """Tokens one array pass advances: decode emits one token per
+        sequence; prefill/train consume the whole token batch."""
+        return self.batch if self.phase == "decode" \
+            else self.batch * self.seq_len
+
+
+def serving_matrix(archs: Optional[Sequence[str]] = None,
+                   phases: Sequence[str] = ("prefill", "decode"),
+                   batches: Sequence[int] = (DEFAULT_BATCH,),
+                   seq_lens: Sequence[int] = (DEFAULT_SEQ,)
+                   ) -> List[Scenario]:
+    """Enumerate the scenario matrix (config zoo x phase x batch x seq)."""
+    archs = list_archs() if archs is None else archs
+    return [Scenario(a, p, b, s)
+            for a in archs for p in phases for b in batches
+            for s in seq_lens]
+
+
+def named_workloads(scenarios: Sequence[Scenario]
+                    ) -> Dict[str, List[Workload]]:
+    """{scenario name: flat workload list} — the scenario_sweep input."""
+    return {sc.name: sc.workloads() for sc in scenarios}

@@ -1,0 +1,73 @@
+"""Serving-level scoring of sweep results: tokens/sec at a clock.
+
+The paper scores configurations in abstract cycles and Eq. 1 energy; a
+serving fleet is provisioned in tokens per second. At a clock `f` a
+scenario whose pass takes `cycles` cycles and advances `tokens_per_pass`
+tokens sustains
+
+    tokens/sec = tokens_per_pass * f / cycles
+
+(the steady-state rate of back-to-back passes: decode emits B tokens per
+pass, prefill/train retire B*S). This keeps the ranking information of
+cycles but weights it by how much service a pass actually delivers, which
+is what makes prefill and decode cells comparable in one mix.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.dse import ScenarioSweepResult
+from repro.scenarios.matrix import Scenario
+
+DEFAULT_CLOCK_HZ = 940e6        # TPUv1-class clock (the paper's machine)
+
+
+def tokens_per_sec(scenario: Scenario, cycles,
+                   clock_hz: float = DEFAULT_CLOCK_HZ):
+    """Steady-state tokens/sec of one scenario at `clock_hz`; `cycles` may
+    be a scalar or a full (G, G) grid."""
+    return scenario.tokens_per_pass * clock_hz / np.maximum(
+        np.asarray(cycles, np.float64), 1.0)
+
+
+def score_scenarios(sweep: ScenarioSweepResult,
+                    scenarios: Sequence[Scenario],
+                    clock_hz: float = DEFAULT_CLOCK_HZ,
+                    at: Optional[tuple] = None) -> List[Dict]:
+    """Per-scenario serving scores over a sweep.
+
+    Returns one record per scenario with its min-energy design point, the
+    tokens/sec there, and — when `at=(h, w)` names a deployment point on
+    the grid — the tokens/sec the shared configuration sustains, plus the
+    throughput it gives up vs the scenario's own cycle-optimal point."""
+    by_name = {sc.name: sc for sc in scenarios}
+    recs = []
+    for name in sweep.names:
+        sc = by_name[name]
+        i = sweep.index(name)
+        cyc = sweep.cycles[i]
+        tps = tokens_per_sec(sc, cyc, clock_hz)
+        ei, ej = np.unravel_index(np.argmin(sweep.energy[i]), cyc.shape)
+        ci, cj = np.unravel_index(np.argmin(cyc), cyc.shape)
+        rec = {
+            "scenario": name, "arch": sc.arch, "phase": sc.phase,
+            "batch": sc.batch, "seq_len": sc.seq_len,
+            "tokens_per_pass": sc.tokens_per_pass,
+            "best_energy_h": int(sweep.hs[ei]),
+            "best_energy_w": int(sweep.ws[ej]),
+            "min_energy": float(sweep.energy[i][ei, ej]),
+            "tps_at_best_energy": float(tps[ei, ej]),
+            "best_tps_h": int(sweep.hs[ci]), "best_tps_w": int(sweep.ws[cj]),
+            "best_tps": float(tps[ci, cj]),
+        }
+        if at is not None:
+            ai = int(np.argmin(np.abs(sweep.hs - at[0])))
+            aj = int(np.argmin(np.abs(sweep.ws - at[1])))
+            rec["at_h"] = int(sweep.hs[ai])
+            rec["at_w"] = int(sweep.ws[aj])
+            rec["tps_at"] = float(tps[ai, aj])
+            rec["tps_at_frac_of_best"] = float(tps[ai, aj] / tps[ci, cj])
+        recs.append(rec)
+    return recs

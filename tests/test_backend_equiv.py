@@ -1,0 +1,67 @@
+"""Backend-equivalence: every DSE sweep entry point must agree between
+`backend="numpy"` (float64 closed forms) and `backend="pallas"` (the fused
+sweep kernel, f32 in interpret mode off-TPU) to <= 1e-6 normalized error —
+they are the SAME closed forms (core/model_core.py), so any drift is a
+backend bug, not model disagreement."""
+import numpy as np
+import pytest
+
+from repro.core import capacity_sweep, equal_pe_sweep, get_workloads
+from repro.core.dse import grid_axes
+from repro.graph import build_graph
+
+SMALL = grid_axes()[::5]
+TOL = 1e-6
+
+METRICS = ("cycles", "energy", "utilization", "m_ub", "m_inter_pe",
+           "m_aa", "ub_bw_bits")
+
+
+def _max_rel(a, b):
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    return float((np.abs(a - b) / (np.abs(a) + 1.0)).max())
+
+
+@pytest.mark.parametrize("name", ["alexnet", "resnet152",
+                                  "mobilenetv3_large"])
+def test_capacity_sweep_backends_agree_to_1e6(name):
+    """(h, w, ub_kib) space: the closed-form base grid AND the spill-
+    augmented totals agree across backends; the liveness/spill terms are
+    backend-independent by construction (computed once on the graph)."""
+    cs_np = capacity_sweep(build_graph(name), hs=SMALL, ws=SMALL,
+                           backend="numpy")
+    cs_pl = capacity_sweep(build_graph(name), hs=SMALL, ws=SMALL,
+                           backend="pallas")
+    for k in METRICS:
+        err = _max_rel(getattr(cs_np.base, k), getattr(cs_pl.base, k))
+        assert err <= TOL, (name, k, err)
+    assert _max_rel(cs_np.energy_total, cs_pl.energy_total) <= TOL
+    np.testing.assert_array_equal(cs_np.spill_bits, cs_pl.spill_bits)
+    assert cs_np.peak_bits == cs_pl.peak_bits
+
+
+@pytest.mark.parametrize("total_pes", [1024, 4096])
+def test_equal_pe_sweep_backends_agree_to_1e6(total_pes):
+    """Fig. 6 aspect-ratio sweep at constant PE count: numpy vs the fused
+    kernel path, including the extreme-ratio ends of the sweep."""
+    mw = {n: get_workloads(n) for n in ("alexnet", "resnet152")}
+    a = equal_pe_sweep(mw, total_pes=total_pes)
+    b = equal_pe_sweep(mw, total_pes=total_pes, backend="pallas")
+    for name in mw:
+        np.testing.assert_array_equal(a[name]["h"], b[name]["h"])
+        np.testing.assert_array_equal(a[name]["w"], b[name]["w"])
+        for k in ("energy", "cycles", "utilization"):
+            err = _max_rel(a[name][k], b[name][k])
+            assert err <= TOL, (name, k, err)
+
+
+@pytest.mark.parametrize("model_kw", [{}, {"act_reread": True},
+                                      {"idle_pe_energy": 0.1}])
+def test_equal_pe_sweep_backends_agree_with_model_options(model_kw):
+    """Model options must thread through both equal-PE backends alike."""
+    mw = {"alexnet": get_workloads("alexnet")}
+    a = equal_pe_sweep(mw, total_pes=1024, **model_kw)
+    b = equal_pe_sweep(mw, total_pes=1024, backend="pallas", **model_kw)
+    for k in ("energy", "cycles", "utilization"):
+        assert _max_rel(a["alexnet"][k], b["alexnet"][k]) <= TOL, k

@@ -1,0 +1,53 @@
+"""Golden regression: the exact `extract_workloads` lowering for all 10
+configs x {prefill, decode, train}, pinned against a checked-in fixture.
+
+The serving-scenario sweep, the full-model graph builders and the LM
+benchmarks all consume this lowering; a silent change to any (M, K, N,
+groups, repeats) tuple would shift every downstream metric while tests
+that only compare the two lowerings to EACH OTHER kept passing. If a
+change here is intentional, regenerate the fixture (see its docstring
+entry below) and say why in the commit.
+
+Regenerate with:
+    PYTHONPATH=src python -c "
+import json
+from repro.configs.base import SHAPES, get_config, list_archs
+from repro.core import extract_workloads
+out = {f'{a}|{s}': [list(map(int, w))
+                    for w in extract_workloads(get_config(a), SHAPES[s])]
+       for a in list_archs()
+       for s in ('prefill_32k', 'decode_32k', 'train_4k')}
+json.dump(out, open('tests/fixtures/lm_workloads_golden.json', 'w'),
+          indent=1, sort_keys=True)"
+"""
+import json
+import os
+
+import pytest
+
+from repro.configs.base import SHAPES, get_config, list_archs
+from repro.core import extract_workloads
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "lm_workloads_golden.json")
+SHAPE_NAMES = ("prefill_32k", "decode_32k", "train_4k")
+
+with open(FIXTURE) as f:
+    GOLDEN = json.load(f)
+
+
+def test_fixture_covers_full_matrix():
+    assert set(GOLDEN) == {f"{a}|{s}" for a in list_archs()
+                           for s in SHAPE_NAMES}
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("shape_name", SHAPE_NAMES)
+def test_extract_workloads_matches_golden(arch, shape_name):
+    got = [list(map(int, w))
+           for w in extract_workloads(get_config(arch), SHAPES[shape_name])]
+    want = GOLDEN[f"{arch}|{shape_name}"]
+    assert got == want, (
+        f"{arch}/{shape_name}: lowering changed vs the pinned fixture "
+        "(if intentional, regenerate tests/fixtures/lm_workloads_golden"
+        ".json — see module docstring)")

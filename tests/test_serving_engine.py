@@ -1,0 +1,141 @@
+"""First unit tests for the continuous-batching serving engine.
+
+A deterministic fake bundle stands in for a real model (the engine only
+touches `init_cache` / `prefill` / `decode_step`): the "model" predicts
+token (x + 1) % V and its cache records written tokens per slot, so slot
+splicing, refill after EOS/max_new and queue drain are all observable."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.engine import Request, ServingEngine, _splice_slot
+
+V = 17
+
+
+@dataclasses.dataclass(frozen=True)
+class _CounterBundle:
+    """next_token = (token + 1) % V; cache stores the tokens seen."""
+
+    def init_cache(self, slots, cache_len, dtype=jnp.bfloat16):
+        return {"toks": jnp.zeros((slots, cache_len), jnp.int32),
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, batch, cache_len=None):
+        toks = batch["tokens"]                        # (1, S)
+        S = toks.shape[1]
+        cache = {"toks": jnp.zeros((1, cache_len), jnp.int32)
+                 .at[:, :S].set(toks),
+                 "pos": jnp.asarray(S, jnp.int32)}
+        last = jax.nn.one_hot((toks[:, -1] + 1) % V, V)
+        return last, cache
+
+    def decode_step(self, params, cache, tokens):
+        # record the incoming token at the shared position, advance it
+        pos = cache["pos"]
+        toks = jax.lax.dynamic_update_slice_in_dim(
+            cache["toks"], tokens, pos, axis=1)
+        logits = jax.nn.one_hot((tokens + 1) % V, V)  # (slots, 1, V)
+        return logits, {"toks": toks, "pos": pos + 1}
+
+
+def _engine(slots=2, cache_len=32, eos_id=-1):
+    return ServingEngine(_CounterBundle(), params={}, slots=slots,
+                         cache_len=cache_len, eos_id=eos_id)
+
+
+def _req(rid, start, n, max_new=4):
+    return Request(rid=rid, prompt=np.arange(start, start + n,
+                                             dtype=np.int32),
+                   max_new=max_new)
+
+
+# ------------------------------------------------------------ _splice_slot --
+
+def test_splice_slot_writes_one_row_and_merges_pos():
+    big = {"toks": jnp.zeros((4, 8), jnp.int32),
+           "pos": jnp.asarray(3, jnp.int32),
+           "rope": jnp.arange(8.0)}                   # shared table
+    one = {"toks": jnp.full((1, 8), 7, jnp.int32),
+           "pos": jnp.asarray(5, jnp.int32),
+           "rope": jnp.arange(8.0)}
+    out = _splice_slot(big, one, 2)
+    np.testing.assert_array_equal(np.asarray(out["toks"][2]), [7] * 8)
+    for s in (0, 1, 3):                               # other rows untouched
+        np.testing.assert_array_equal(np.asarray(out["toks"][s]), [0] * 8)
+    assert int(out["pos"]) == 5                       # scalar merged by max
+    np.testing.assert_array_equal(out["rope"], big["rope"])
+    # splicing a lower-pos cache keeps the batch clock
+    out2 = _splice_slot(out, {"toks": one["toks"],
+                              "pos": jnp.asarray(1, jnp.int32),
+                              "rope": one["rope"]}, 0)
+    assert int(out2["pos"]) == 5
+
+
+# ------------------------------------------------------------- lifecycle ----
+
+def test_outputs_and_cache_positions():
+    eng = _engine(slots=1, cache_len=16)
+    r = _req(0, start=3, n=4, max_new=3)
+    eng.submit(r)
+    eng.run_to_completion()
+    assert eng.active == [None] and eng.queue == []
+    # prefill emits 7 (the first decode INPUT, never collected); decode
+    # appends the successors
+    assert r.out == [8, 9, 10]
+    # cache recorded prompt then the decoded inputs at the batch clock
+    toks = np.asarray(eng.cache["toks"][0])
+    np.testing.assert_array_equal(toks[:7], [3, 4, 5, 6, 7, 8, 9])
+
+
+def test_slot_refill_after_max_new_and_queue_drain():
+    eng = _engine(slots=2)
+    reqs = [_req(i, start=10 * i, n=3, max_new=2) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    assert len(eng.queue) == 5
+    eng.run_to_completion()
+    assert eng.queue == [] and eng.active == [None, None]
+    for r in reqs:                                    # every request served
+        last = (10 * r.rid + 2)                       # prompt end
+        assert r.out == [(last + 2) % V, (last + 3) % V]
+
+
+def test_slot_refill_after_eos():
+    # prompt ends at 4 -> prefill 5, decode appends 6 == eos: stops after
+    # ONE decoded token despite max_new=6, freeing the slot for the queue
+    eng = _engine(slots=1, eos_id=6)
+    a = _req(0, start=2, n=3, max_new=6)
+    b = _req(1, start=9, n=2, max_new=2)
+    eng.submit(a)
+    eng.submit(b)
+    eng.run_to_completion()
+    assert a.out == [6]                               # early EOS stop
+    assert b.out == [12, 13]                          # refilled slot served
+    assert eng.active == [None] and eng.queue == []
+
+
+def test_step_reports_remaining_work():
+    eng = _engine(slots=1)
+    eng.submit(_req(0, start=0, n=2, max_new=2))
+    eng.submit(_req(1, start=5, n=2, max_new=1))
+    remaining = []
+    while True:
+        n = eng.step()
+        remaining.append(n)
+        if n == 0 and not eng.queue:
+            break
+    # monotone drain to zero; idle step returns 0
+    assert remaining[-1] == 0
+    assert all(x >= y for x, y in zip(remaining, remaining[1:]))
+    assert eng.step() == 0
+
+
+def test_run_to_completion_raises_when_stuck():
+    eng = _engine(slots=1)
+    eng.submit(_req(0, start=0, n=2, max_new=10 ** 9))
+    with pytest.raises(RuntimeError):
+        eng.run_to_completion(max_ticks=3)
