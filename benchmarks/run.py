@@ -11,6 +11,9 @@ CSV and writes machine-readable results to results/benchmarks/.
   scenarios  serving-scenario DSE: the (arch x phase x batch x seq) matrix
         in ONE fused batched Pallas dispatch vs the per-scenario loop,
         robust serving config + tokens/sec scoring       [beyond paper]
+  traffic  traffic-driven serving simulation: fused cost-table build vs the
+        per-lattice-point dispatch loop, a 1M-request Poisson replay, and
+        the SLO capacity sweep + robust traffic config   [beyond paper]
   connectivity  graph-IR liveness: peak UB residency + finite-UB spill for
         chain vs residual vs dense-concat networks       [beyond paper]
   ablations  model-accounting options (act_reread, idle-PE, load hops)
@@ -18,9 +21,10 @@ CSV and writes machine-readable results to results/benchmarks/.
   precision  bitwidth DSE: (h, w, act_bits, weight_bits) design points
   kernels    Pallas kernel microbenches (interpret mode)
 
-``--quick`` runs the reduced capacity sweep plus the serving-scenario
-sweep and writes results/benchmarks/BENCH_graph.json and
-BENCH_scenarios.json (the CI smoke/perf-trajectory probes).
+``--quick`` runs the reduced capacity sweep, the serving-scenario sweep
+and the traffic stage, writing results/benchmarks/BENCH_graph.json,
+BENCH_scenarios.json and BENCH_traffic.json (the CI smoke/perf-trajectory
+probes).
 """
 from __future__ import annotations
 
@@ -235,6 +239,92 @@ def scenarios_bench(quick: bool = False):
     })
 
 
+def traffic_bench(quick: bool = False):
+    """Traffic-driven serving simulation probes, written to
+    BENCH_traffic.json:
+
+      * the FULL 10-arch x default-(h, w) cost-table lattice from one
+        fused dse_eval_batched dispatch vs the per-lattice-point dispatch
+        loop (the fusion's perf-trajectory number);
+      * a 1,000,000-request Poisson replay through the discrete-event
+        simulator — cost-table lookups only, zero model evaluations —
+        reporting requests simulated per wall-second (acceptance: 1M in
+        under 60 s on one CPU host);
+      * the SLO capacity sweep (max QPS under p99 TTFT/TPOT per config)
+        and the mix-weighted robust traffic config.
+    """
+    from repro.core.dse import robust_traffic_config, slo_capacity_sweep
+    from repro.traffic import (SLO, SimConfig, TrafficModel,
+                               build_cost_tables, simulate)
+
+    # 1. cost-table build: the full 10-arch x default grid, fused vs loop
+    ts, us_fu = _timeit(lambda: build_cost_tables(backend="pallas"), n=1)
+    _, us_lp = _timeit(lambda: build_cost_tables(backend="pallas-loop"),
+                       n=1)
+    _emit("traffic_cost_tables_fused", us_fu,
+          f"{ts.n_scenarios}lattice_pts_x_{ts.n_configs}cfgs"
+          f"->{len(ts)}tables;1_dispatch")
+    _emit("traffic_cost_tables_loop", us_lp,
+          f"{ts.n_scenarios}_dispatches;fused_speedup={us_lp / us_fu:.2f}x")
+
+    # 2. the 1M-request replay (cheapest arch: wall time is event-bound,
+    # but a fast table keeps the simulated span sane)
+    n_replay = 1_000_000
+    tab = ts.table("xlstm-125m", 128, 128)
+    tm = TrafficModel(rate_qps=200.0, prompt_median=256, output_median=48)
+    trace = tm.sample(n_replay, seed=0)
+    res = simulate(tab, trace, SimConfig(slots=64))
+    _emit("traffic_replay_1m_requests", res.wall_seconds * 1e6,
+          f"{res.requests_per_wall_sec:.0f}req_per_wall_sec"
+          f";steps={res.decode_steps};tokens={res.tokens_out}")
+
+    # 3. SLO capacity sweep + robust traffic config on a reduced space
+    archs = ["h2o-danube-3-4b", "xlstm-125m"]
+    hw = ((64, 64), (128, 128), (256, 256), (64, 256))
+    slo = SLO(ttft_s=2.0, tpot_s=0.15)
+    mix = {
+        "h2o-danube-3-4b": TrafficModel(rate_qps=1.0, prompt_median=256,
+                                        output_median=64),
+        "xlstm-125m": TrafficModel(rate_qps=1.0, prompt_median=128,
+                                   output_median=32, arrival="mmpp"),
+    }
+    n_req = 300 if quick else 1200
+    sweep, us_slo = _timeit(
+        lambda: slo_capacity_sweep(mix, slo, archs=archs, hw=hw,
+                                   sim=SimConfig(slots=16),
+                                   n_requests=n_req, tables=ts), n=1)
+    weights = {"h2o-danube-3-4b": 3.0, "xlstm-125m": 1.0}
+    hw_out, F, mask, winner = robust_traffic_config(sweep, weights=weights)
+    best = {a: sweep.best(a) for a in archs}
+    _emit("traffic_slo_capacity_sweep", us_slo,
+          ";".join(f"{a}_max_qps={q:.2f}@{h}x{w}"
+                   for a, (h, w, q) in best.items()))
+    _emit("traffic_robust_config", 0.0,
+          f"winner={int(hw_out[winner, 0])}x{int(hw_out[winner, 1])}"
+          f";frontier={int(mask.sum())}")
+    _save("BENCH_traffic", {
+        "lattice_points": ts.n_scenarios, "configs": ts.n_configs,
+        "tables": len(ts),
+        "cost_table_fused_us": us_fu, "cost_table_loop_us": us_lp,
+        "cost_table_fused_speedup": us_lp / us_fu,
+        "replay_requests": n_replay,
+        "replay_wall_seconds": res.wall_seconds,
+        "replay_requests_per_wall_sec": res.requests_per_wall_sec,
+        "replay_decode_steps": res.decode_steps,
+        "replay_tokens_out": res.tokens_out,
+        "slo": {"ttft_s": slo.ttft_s, "tpot_s": slo.tpot_s,
+                "pct": slo.pct},
+        "slo_sweep_us": us_slo, "slo_sweep_n_requests": n_req,
+        "archs": archs, "hw": [list(p) for p in hw],
+        "max_qps": sweep.max_qps.tolist(),
+        "energy_per_token": sweep.energy_per_token.tolist(),
+        "robust_weights": weights,
+        "robust_winner_hw": [int(hw_out[winner, 0]),
+                             int(hw_out[winner, 1])],
+        "robust_frontier": int(mask.sum()),
+    })
+
+
 def connectivity():
     """Graph-IR study: how connectivity (skip / dense-concat edges) changes
     peak UB residency and finite-capacity spill energy, chain baseline
@@ -407,13 +497,15 @@ def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--quick", action="store_true",
                         help="reduced graph capacity-sweep + serving-"
-                             "scenario smoke only (writes BENCH_graph.json "
-                             "and BENCH_scenarios.json)")
+                             "scenario + traffic smoke only (writes "
+                             "BENCH_graph.json, BENCH_scenarios.json and "
+                             "BENCH_traffic.json)")
     args = parser.parse_args()
     print("name,us_per_call,derived")
     if args.quick:
         graph_quick()
         scenarios_bench(quick=True)
+        traffic_bench(quick=True)
         return
     fig2_resnet_heatmap()
     fig3_pareto()
@@ -422,6 +514,7 @@ def main() -> None:
     fig6_equal_pe()
     lm_architectures()
     scenarios_bench()
+    traffic_bench()
     connectivity()
     ablations()
     future_work()

@@ -1,0 +1,81 @@
+"""Capacity planning walkthrough: which array shape survives real traffic?
+
+The scenario DSE (examples/scenario_dse.py) ranks design points on static
+cells; a fleet is provisioned against a *process* — arrivals, queueing,
+continuous batching — and an SLO. This walkthrough:
+
+  1. builds per-step cost tables for an arch x (h, w) grid in ONE fused
+     batched Pallas dispatch,
+  2. replays a seeded Poisson trace through the discrete-event simulator
+     at one design point (TTFT/TPOT percentiles, goodput),
+  3. bisects the max QPS each (h, w) sustains under a p99 TTFT/TPOT SLO
+     (the max-QPS-under-SLO frontier),
+  4. picks the robust traffic configuration across a heterogeneous
+     arrival mix (Fig. 5's normalization, traffic-weighted).
+
+    PYTHONPATH=src python examples/capacity_planning.py
+"""
+import numpy as np
+
+from repro.core.dse import robust_traffic_config, slo_capacity_sweep
+from repro.traffic import (SLO, SimConfig, TrafficModel, build_cost_tables,
+                           simulate, summarize)
+
+ARCHS = ("h2o-danube-3-4b", "yi-9b", "xlstm-125m")
+HW = ((64, 64), (128, 128), (256, 256), (64, 256), (256, 64))
+
+
+def main():
+    # 1. cost tables: every (arch, h, w) lattice from one fused dispatch
+    tables = build_cost_tables(archs=ARCHS, hw=HW)
+    print(f"cost tables: {tables.n_scenarios} lattice points x "
+          f"{tables.n_configs} configs -> {len(tables)} tables in one "
+          f"fused dispatch ({tables.build_seconds:.2f}s)")
+
+    # 2. one design point under one traffic model
+    traffic = TrafficModel(rate_qps=1.0, prompt_median=256,
+                           output_median=64)
+    sim = SimConfig(slots=16)
+    res = simulate(tables.table("h2o-danube-3-4b", 128, 128),
+                   traffic.sample(20_000, seed=0), sim)
+    slo = SLO(ttft_s=2.0, tpot_s=0.15)
+    s = summarize(res, slo)
+    print(f"\nh2o-danube @128x128, 1 req/s Poisson, 20k requests "
+          f"({res.wall_seconds:.2f}s wall):")
+    print(f"  TTFT p50/p99 {s['ttft_p50_s']:.3f}/{s['ttft_p99_s']:.3f} s, "
+          f"TPOT p50/p99 {s['tpot_p50_s']:.4f}/{s['tpot_p99_s']:.4f} s")
+    print(f"  goodput {s['goodput_qps']:.2f} req/s "
+          f"({100 * s['goodput_frac']:.1f}% in SLO), "
+          f"{s['tokens_per_sec']:.0f} tok/s")
+
+    # 3. the max-QPS-under-SLO frontier: heterogeneous mix — the small
+    # models see chatty short traffic, yi-9b longer documents
+    mix = {
+        "h2o-danube-3-4b": traffic,
+        "xlstm-125m": TrafficModel(rate_qps=1.0, prompt_median=128,
+                                   output_median=32),
+        "yi-9b": TrafficModel(rate_qps=1.0, prompt_median=1024,
+                              output_median=128, arrival="mmpp"),
+    }
+    sweep = slo_capacity_sweep(mix, slo, archs=ARCHS, hw=HW, sim=sim,
+                               n_requests=800, tables=tables)
+    print(f"\nmax sustainable QPS under p99 TTFT<={slo.ttft_s}s / "
+          f"TPOT<={slo.tpot_s}s:")
+    hdr = " ".join(f"{h}x{w}".rjust(9) for h, w in HW)
+    print(f"  {'arch':18s} {hdr}")
+    for a, arch in enumerate(sweep.archs):
+        row = " ".join(f"{q:9.2f}" for q in sweep.max_qps[a])
+        print(f"  {arch:18s} {row}")
+
+    # 4. robust traffic config: danube-heavy production mix
+    weights = {"h2o-danube-3-4b": 3.0, "xlstm-125m": 1.0, "yi-9b": 1.0}
+    hw, F, mask, winner = robust_traffic_config(sweep, weights=weights)
+    print(f"\nrobust traffic config (mix-weighted Fig. 5 over "
+          f"energy/token x 1/max-QPS):")
+    print(f"  frontier: {[(int(h), int(w)) for h, w in hw[mask]]}")
+    print(f"  winner:   {int(hw[winner, 0])}x{int(hw[winner, 1])} "
+          f"(normalized score {F[winner].sum():.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,8 @@ Public API:
         graph IR (repro.graph), with finite-UB spill energy
     scenario_sweep / robust_serving_config — the serving-scenario matrix
         (repro.scenarios) in one fused batched Pallas dispatch
+    slo_capacity_sweep / robust_traffic_config — SLO-aware capacity DSE
+        on the traffic simulator (repro.traffic)
     get_workloads (CNN zoo) / extract_workloads (LM archs)
 """
 from repro.core.model_core import (Precision, list_dataflows,  # noqa
@@ -19,6 +21,8 @@ from repro.core.emulator import emulate_gemm, emulate_tile_pass  # noqa
 from repro.core.dse import (grid_sweep, precision_sweep, pareto_grid,  # noqa
                             pareto_nsga2, robust_config, equal_pe_sweep,
                             capacity_sweep, scenario_sweep,
-                            ScenarioSweepResult, robust_serving_config)
+                            ScenarioSweepResult, robust_serving_config,
+                            SLOSweepResult, slo_capacity_sweep,
+                            robust_traffic_config)
 from repro.core.cnn_zoo import ZOO, get_workloads  # noqa
 from repro.core.lm_workloads import extract_workloads  # noqa

@@ -24,6 +24,12 @@
   config x phase x batch x seq_len matrix).
 * robust_serving_config: Fig. 5's min-max normalization generalized to a
   (weighted) serving mix over a ScenarioSweepResult.
+* slo_capacity_sweep: the traffic dimension — max sustainable QPS under a
+  (p99 TTFT, p99 TPOT) SLO per (arch, h, w), bisected on the
+  discrete-event serving simulator (repro.traffic) whose cost tables come
+  from one fused batched Pallas dispatch.
+* robust_traffic_config: Fig. 5 weighted by a heterogeneous traffic mix
+  over (energy/token, 1/max_qps), with the normalized winner.
 """
 from __future__ import annotations
 
@@ -93,13 +99,9 @@ def _pallas_eval_configs(workloads, cfgs, block_c=128, **model_kw):
     import jax.numpy as jnp
 
     from repro.kernels import ops
-    from repro.kernels.dse_eval import OUT_COLS
+    from repro.kernels.dse_eval import OUT_COLS, pad_configs
 
-    cfgs = np.asarray(cfgs, np.float64)
-    C = cfgs.shape[0]
-    pad = (-C) % block_c
-    if pad:
-        cfgs = np.concatenate([cfgs, np.repeat(cfgs[-1:], pad, 0)], axis=0)
+    cfgs, C = pad_configs(cfgs, block_c)
     layers = np.asarray(
         [(m, k, n, g, r) for (m, k, n, g, r) in workloads], np.float32)
     out = np.asarray(ops.sweep(jnp.asarray(cfgs, jnp.float32),
@@ -367,15 +369,11 @@ def scenario_sweep(named_workloads: Dict[str, Sequence[Workload]], hs=None,
         import jax.numpy as jnp
 
         from repro.kernels import ops
-        from repro.kernels.dse_eval import OUT_COLS
+        from repro.kernels.dse_eval import OUT_COLS, pad_configs
 
         layer_sets = pad_layer_sets([named_workloads[n] for n in names])
-        cfgs = np.stack([H.reshape(-1), W.reshape(-1)], axis=1)
-        C = cfgs.shape[0]
-        pad = (-C) % block_c
-        if pad:
-            cfgs = np.concatenate([cfgs, np.repeat(cfgs[-1:], pad, 0)],
-                                  axis=0)
+        cfgs, C = pad_configs(
+            np.stack([H.reshape(-1), W.reshape(-1)], axis=1), block_c)
         out = np.asarray(ops.sweep_batched(
             jnp.asarray(cfgs, jnp.float32), jnp.asarray(layer_sets),
             block_c=block_c, **model_kw))[:, :C]
@@ -481,3 +479,122 @@ def capacity_sweep(graph, ub_kibs: Sequence[float] = UB_KIBS, hs=None,
         base=base, order=order, peak_bits=prof.peak_bits, ub_kibs=ubs,
         spill_bits=sp, spill_energy=se,
         energy_total=base.energy[None, :, :] + se[:, None, None])
+
+
+# ------------------------------------------------------ SLO-aware traffic DSE --
+
+@dataclasses.dataclass
+class SLOSweepResult:
+    """Max sustainable QPS under an SLO per (arch, h, w) design point.
+
+    `max_qps[a, c]` is the bisected capacity of config c serving arch a's
+    traffic; `energy_per_token[a, c]` is the Eq. 1-relative energy rate at
+    that operating point (the pair the robust-traffic normalization
+    consumes). `summaries[a][c]` keeps the full percentile/goodput record
+    of the winning probe."""
+    archs: List[str]
+    hw: np.ndarray                  # (C, 2) int
+    slo: "object"
+    max_qps: np.ndarray             # (A, C)
+    energy_per_token: np.ndarray    # (A, C)
+    goodput_qps: np.ndarray         # (A, C)
+    summaries: List[List[dict]]
+
+    def best(self, arch: str):
+        """(h, w, max_qps) of the highest-capacity config for one arch."""
+        a = self.archs.index(arch)
+        c = int(np.argmax(self.max_qps[a]))
+        return (int(self.hw[c, 0]), int(self.hw[c, 1]),
+                float(self.max_qps[a, c]))
+
+
+def slo_capacity_sweep(traffic, slo, archs: Optional[Sequence[str]] = None,
+                       hw=None, sim=None, n_requests: int = 1200,
+                       seed: int = 0, backend: str = "pallas",
+                       tables=None, **model_kw) -> SLOSweepResult:
+    """The SLO-aware capacity design space: which (h, w) sustains how much
+    traffic for each architecture.
+
+    `traffic` is one TrafficModel or a per-arch dict (heterogeneous arrival
+    mixes); `slo` a traffic.SLO; `sim` a traffic.SimConfig. All cost
+    tables are built in ONE fused batched Pallas dispatch (or passed in
+    via `tables`), then each (arch, h, w) point is bisected for its max
+    sustainable QPS on the discrete-event simulator — the Systimator-style
+    "meets the deadline at rate X" answer rather than a scalar ranking.
+    """
+    from repro.configs.base import list_archs
+    from repro.traffic.cost_table import DEFAULT_HW, build_cost_tables
+    from repro.traffic.sim import SimConfig
+    from repro.traffic.slo import max_sustainable_qps
+
+    archs = list(list_archs()) if archs is None else list(archs)
+    hw = list(DEFAULT_HW) if hw is None else [tuple(map(int, p)) for p in hw]
+    sim = SimConfig() if sim is None else sim
+    if tables is None:
+        tables = build_cost_tables(archs, hw, backend=backend, **model_kw)
+    per_arch = traffic if isinstance(traffic, dict) else \
+        {a: traffic for a in archs}
+    missing = set(archs) - set(per_arch)
+    if missing:
+        raise ValueError(f"slo_capacity_sweep: no traffic model for "
+                         f"{sorted(missing)[:3]}")
+
+    A, C = len(archs), len(hw)
+    qps = np.zeros((A, C))
+    ept = np.zeros((A, C))
+    good = np.zeros((A, C))
+    summaries: List[List[dict]] = []
+    for a, arch in enumerate(archs):
+        row = []
+        for c, (h, w) in enumerate(hw):
+            q, summ = max_sustainable_qps(
+                tables.table(arch, h, w), per_arch[arch], slo, sim=sim,
+                n_requests=n_requests, seed=seed)
+            qps[a, c] = q
+            ept[a, c] = summ["energy_per_token"]
+            good[a, c] = summ.get("goodput_qps", 0.0)
+            row.append(summ)
+        summaries.append(row)
+    return SLOSweepResult(archs=archs, hw=np.asarray(hw, np.int64),
+                          slo=slo, max_qps=qps, energy_per_token=ept,
+                          goodput_qps=good, summaries=summaries)
+
+
+def robust_traffic_config(sweep: SLOSweepResult,
+                          weights: Optional[Dict[str, float]] = None):
+    """Fig. 5's robustness normalization, traffic edition: min-max
+    normalize (energy_per_token, 1/max_qps) per ARCH over the config list,
+    average with the traffic mix weights, Pareto — then the normalized
+    winner (argmin of the weighted sum on the frontier).
+
+    Like `robust_serving_config`, an explicit `weights` dict must cover
+    the swept archs exactly (a 0.0 share is allowed but must be said).
+    Returns (hw, F, mask, winner_idx)."""
+    if weights is not None:
+        unknown = set(weights) - set(sweep.archs)
+        missing = set(sweep.archs) - set(weights)
+        if unknown or missing:
+            raise ValueError(
+                "robust_traffic_config: weights must cover the swept "
+                f"archs exactly (unknown: {sorted(unknown)[:3]}, "
+                f"missing: {sorted(missing)[:3]})")
+    wsum = 0.0
+    e_acc = np.zeros(sweep.hw.shape[0], np.float64)
+    q_acc = np.zeros(sweep.hw.shape[0], np.float64)
+    for a, arch in enumerate(sweep.archs):
+        wt = 1.0 if weights is None else float(weights[arch])
+        if wt == 0.0:
+            continue
+        # capacity is a benefit: invert (guarding dead configs) so both
+        # objectives are costs, then normalize like Fig. 5
+        inv_qps = 1.0 / np.maximum(sweep.max_qps[a], 1e-12)
+        e_acc += wt * _normalize(sweep.energy_per_token[a])
+        q_acc += wt * _normalize(inv_qps)
+        wsum += wt
+    if wsum == 0.0:
+        raise ValueError("robust_traffic_config: all mix weights zero")
+    F = np.stack([e_acc / wsum, q_acc / wsum], axis=1)
+    mask = pareto_mask(F)
+    frontier = np.flatnonzero(mask)
+    winner = int(frontier[np.argmin(F[mask].sum(axis=1))])
+    return sweep.hw, F, mask, winner

@@ -38,6 +38,32 @@ def spill_bits(profile: OccupancyProfile, ub_bits: Optional[float]) -> float:
     return float(2.0 * over.sum())
 
 
+# Sustained DRAM bandwidth in bits per array cycle, used to convert spill
+# TRAFFIC into spill LATENCY. A TPUv1-class part moves ~30 GB/s of DDR3 at a
+# ~700 MHz core clock — ~45 bytes/cycle; 256 bits/cycle (32 B) is the same
+# order with headroom for the faster clock the scoring layer assumes.
+DRAM_BITS_PER_CYCLE = 256.0
+
+
+def spill_latency_cycles(occ_bits, ub_bits: Optional[float],
+                         bits_per_cycle: float = DRAM_BITS_PER_CYCLE):
+    """Per-step stall cycles for residency above a finite UB.
+
+    `spill_bits` charges the ENERGY of the overflow round trip; a serving
+    simulator also pays its TIME: the overflow portion of the co-resident
+    state (for LM decode, the KV cache beyond capacity) round-trips to
+    DRAM every step it is touched — same 2x write+refetch convention as
+    `spill_bits` — adding `2 * overflow / bits_per_cycle` cycles to that
+    step. Vectorized over `occ_bits` (scalar or array); 0 when the buffer
+    is infinite. Monotone non-increasing in capacity for the same reason
+    the overflow integral is.
+    """
+    if ub_bits is None or np.isinf(ub_bits):
+        return np.zeros_like(np.asarray(occ_bits, np.float64))
+    over = np.maximum(np.asarray(occ_bits, np.float64) - float(ub_bits), 0.0)
+    return 2.0 * over / float(bits_per_cycle)
+
+
 @dataclasses.dataclass
 class GraphMetrics:
     """Closed-form network metrics + liveness/spill terms."""

@@ -22,9 +22,13 @@ Outputs:
 (S, L, 5) tensor of S padded per-scenario layer tables evaluated against
 the shared config list in ONE fused dispatch over the (scenario, config
 block) grid — the serving-scenario sweep (core/dse.scenario_sweep) runs the
-whole scenario matrix without a Python loop of per-scenario sweeps. Padding
-rows are (1, 1, 1, 0, 0): groups*repeats == 0 zeroes every summed counter,
-and the per-cycle bandwidth/port maxima are masked on that same weight.
+whole scenario matrix without a Python loop of per-scenario sweeps, and the
+traffic cost-table build (traffic/cost_table.py) lowers its full
+(arch x slot x kv-span / prompt) lattice the same way, one kernel call for
+every simulator lookup table. Padding rows are (1, 1, 1, 0, 0):
+groups*repeats == 0 zeroes every summed counter, and the per-cycle
+bandwidth/port maxima are masked on that same weight. `pad_configs` is the
+shared config-list padding helper for both kernels.
 """
 from __future__ import annotations
 
@@ -39,6 +43,23 @@ from repro.core.model_core import (Precision, analyze_gemm_core,
 
 OUT_COLS = ("cycles", "energy", "macs", "utilization", "m_ub", "m_inter_pe",
             "m_aa", "ub_bandwidth_bits")
+
+
+def pad_configs(configs, block_c: int):
+    """Pad a (C, 2) config list up to a multiple of the kernel block by
+    repeating the last design point. Returns (padded, C): callers slice
+    the kernel output back to the first C rows. Shared by every consumer
+    of the sweep kernels (grid/scenario sweeps in core/dse.py and the
+    traffic cost-table build) so the padding contract lives in one place.
+    """
+    import numpy as np
+    configs = np.asarray(configs, np.float64)
+    C = configs.shape[0]
+    pad = (-C) % block_c
+    if pad:
+        configs = np.concatenate(
+            [configs, np.repeat(configs[-1:], pad, 0)], axis=0)
+    return configs, C
 
 
 def _eval_block(h, w, layers, *, dataflow, precision, act_reread,

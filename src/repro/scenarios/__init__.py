@@ -3,7 +3,8 @@
     matrix  Scenario cells + serving_matrix enumeration over the configs
             zoo; each cell lowers to flat workloads (for the fused batched
             sweep) and to a full-model graph (for liveness/spill)
-    score   tokens/sec-at-clock scoring of ScenarioSweepResults
+    score   tokens/sec-at-clock + joules/token scoring of
+            ScenarioSweepResults
 
 The sweep itself lives in `core.dse.scenario_sweep` (one fused batched
 Pallas dispatch over (scenario, h, w)); `robust_serving_config` there
@@ -12,5 +13,7 @@ generalizes the paper's Fig. 5 robustness normalization to a serving mix.
 from repro.scenarios.matrix import (DEFAULT_BATCH, DEFAULT_SEQ, PHASES,  # noqa
                                     Scenario, named_workloads,
                                     serving_matrix)
-from repro.scenarios.score import (DEFAULT_CLOCK_HZ, score_scenarios,  # noqa
+from repro.scenarios.score import (DEFAULT_CLOCK_HZ,  # noqa
+                                   DEFAULT_JOULES_PER_UNIT,
+                                   joules_per_token, score_scenarios,
                                    tokens_per_sec)

@@ -1,16 +1,21 @@
-"""Serving-level scoring of sweep results: tokens/sec at a clock.
+"""Serving-level scoring of sweep results: tokens/sec + joules/token.
 
 The paper scores configurations in abstract cycles and Eq. 1 energy; a
-serving fleet is provisioned in tokens per second. At a clock `f` a
-scenario whose pass takes `cycles` cycles and advances `tokens_per_pass`
-tokens sustains
+serving fleet is provisioned in tokens per second and billed in joules
+per token. At a clock `f` a scenario whose pass takes `cycles` cycles and
+advances `tokens_per_pass` tokens sustains
 
-    tokens/sec = tokens_per_pass * f / cycles
+    tokens/sec   = tokens_per_pass * f / cycles
+    joules/token = energy * J_per_unit / tokens_per_pass
 
 (the steady-state rate of back-to-back passes: decode emits B tokens per
-pass, prefill/train retire B*S). This keeps the ranking information of
-cycles but weights it by how much service a pass actually delivers, which
-is what makes prefill and decode cells comparable in one mix.
+pass, prefill/train retire B*S). Both keep the ranking information of
+cycles/energy but weight them by how much service a pass actually
+delivers, which is what makes prefill and decode cells comparable in one
+mix. The bit-normalized Eq. 1 energy is abstract; `DEFAULT_JOULES_PER_UNIT`
+prices one unit (one 8-bit register-file access worth of movement) at a
+45nm-class 0.5 pJ so the numbers land in a physically plausible range —
+rankings are scale-invariant either way.
 """
 from __future__ import annotations
 
@@ -22,6 +27,7 @@ from repro.core.dse import ScenarioSweepResult
 from repro.scenarios.matrix import Scenario
 
 DEFAULT_CLOCK_HZ = 940e6        # TPUv1-class clock (the paper's machine)
+DEFAULT_JOULES_PER_UNIT = 0.5e-12   # one Eq. 1 unit ~ one 8-bit RF access
 
 
 def tokens_per_sec(scenario: Scenario, cycles,
@@ -32,16 +38,28 @@ def tokens_per_sec(scenario: Scenario, cycles,
         np.asarray(cycles, np.float64), 1.0)
 
 
+def joules_per_token(scenario: Scenario, energy,
+                     joules_per_unit: float = DEFAULT_JOULES_PER_UNIT):
+    """Energy delivered per serviced token: the bit-normalized Eq. 1
+    energy of one pass priced at `joules_per_unit`, divided by the tokens
+    the pass advances. The energy analogue of `tokens_per_sec`; `energy`
+    may be a scalar or a full (G, G) grid."""
+    return np.asarray(energy, np.float64) * joules_per_unit \
+        / scenario.tokens_per_pass
+
+
 def score_scenarios(sweep: ScenarioSweepResult,
                     scenarios: Sequence[Scenario],
                     clock_hz: float = DEFAULT_CLOCK_HZ,
-                    at: Optional[tuple] = None) -> List[Dict]:
+                    at: Optional[tuple] = None,
+                    joules_per_unit: float = DEFAULT_JOULES_PER_UNIT
+                    ) -> List[Dict]:
     """Per-scenario serving scores over a sweep.
 
     Returns one record per scenario with its min-energy design point, the
-    tokens/sec there, and — when `at=(h, w)` names a deployment point on
-    the grid — the tokens/sec the shared configuration sustains, plus the
-    throughput it gives up vs the scenario's own cycle-optimal point."""
+    tokens/sec and joules/token there, and — when `at=(h, w)` names a
+    deployment point on the grid — the same service rates at the shared
+    configuration, plus what it gives up vs the scenario's own optima."""
     by_name = {sc.name: sc for sc in scenarios}
     recs = []
     for name in sweep.names:
@@ -49,6 +67,7 @@ def score_scenarios(sweep: ScenarioSweepResult,
         i = sweep.index(name)
         cyc = sweep.cycles[i]
         tps = tokens_per_sec(sc, cyc, clock_hz)
+        jpt = joules_per_token(sc, sweep.energy[i], joules_per_unit)
         ei, ej = np.unravel_index(np.argmin(sweep.energy[i]), cyc.shape)
         ci, cj = np.unravel_index(np.argmin(cyc), cyc.shape)
         rec = {
@@ -59,8 +78,12 @@ def score_scenarios(sweep: ScenarioSweepResult,
             "best_energy_w": int(sweep.ws[ej]),
             "min_energy": float(sweep.energy[i][ei, ej]),
             "tps_at_best_energy": float(tps[ei, ej]),
+            # min-energy and min-joules/token coincide per scenario (the
+            # denominator is a constant), so this is the jpt floor too
+            "best_jpt": float(jpt[ei, ej]),
             "best_tps_h": int(sweep.hs[ci]), "best_tps_w": int(sweep.ws[cj]),
             "best_tps": float(tps[ci, cj]),
+            "jpt_at_best_tps": float(jpt[ci, cj]),
         }
         if at is not None:
             ai = int(np.argmin(np.abs(sweep.hs - at[0])))
@@ -69,5 +92,7 @@ def score_scenarios(sweep: ScenarioSweepResult,
             rec["at_w"] = int(sweep.ws[aj])
             rec["tps_at"] = float(tps[ai, aj])
             rec["tps_at_frac_of_best"] = float(tps[ai, aj] / tps[ci, cj])
+            rec["jpt_at"] = float(jpt[ai, aj])
+            rec["jpt_at_frac_of_best"] = float(jpt[ai, aj] / jpt[ei, ej])
         recs.append(rec)
     return recs

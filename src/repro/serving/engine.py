@@ -45,13 +45,47 @@ class ServingEngine:
         req.out = []
         self.queue.append(req)
 
+    def _bucket_prompt(self, prompt: np.ndarray,
+                       max_new: int) -> np.ndarray:
+        """Pad a prompt up to its power-of-two length bucket by repeating
+        the final token.
+
+        `_prefill_one` is jitted, so every DISTINCT prompt length used to
+        trigger a fresh trace + compile; bucketing bounds the trace count
+        at log2(cache_len) for any request mix. Two caveats, both
+        deliberate trades for the bounded trace count:
+
+        * padding never eats decode headroom — if the bucket plus the
+          request's `max_new` would overflow the cache ring (decode
+          writes at `pos % cache_len`, so a full ring wraps onto the
+          prompt), the prompt is left unpadded (one extra trace for a
+          rare near-capacity prompt beats corrupting its context);
+        * the pad positions hold real, attendable K/V entries (the
+          bundle API takes no attention mask), so for a causal model the
+          decode softmax includes the duplicated final token — exact for
+          last-token-driven bundles, an approximation for real models,
+          consistent in spirit with the engine's batch-synchronous `pos`
+          clock that already rounds positions up across slots."""
+        n = len(prompt)
+        b = 1
+        while b < n:
+            b <<= 1
+        if b + max_new > self.cache_len:
+            b = n
+        if b == n:
+            return np.asarray(prompt)
+        return np.concatenate(
+            [prompt, np.full(b - n, prompt[-1], dtype=prompt.dtype)])
+
     def _admit(self) -> None:
         for slot in range(self.slots):
             if self.active[slot] is not None or not self.queue:
                 continue
             req = self.queue.pop(0)
+            prompt = self._bucket_prompt(np.asarray(req.prompt),
+                                         req.max_new)
             last, cache1 = self._prefill_one(
-                self.params, {"tokens": jnp.asarray(req.prompt)[None]})
+                self.params, {"tokens": jnp.asarray(prompt)[None]})
             self.cache = _splice_slot(self.cache, cache1, slot)
             tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
             self.next_tokens = self.next_tokens.at[slot, 0].set(tok[0])

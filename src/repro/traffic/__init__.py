@@ -1,0 +1,27 @@
+"""Traffic-driven serving simulation: the time dimension of the DSE.
+
+    workload    arrival processes (Poisson / MMPP bursty / trace replay)
+                + prompt/output length mixes -> seeded RequestTraces
+    cost_table  per-step (active-slots x KV-span) decode and prompt-length
+                prefill cost lattices for an arch x (h, w) grid, built in
+                ONE fused dse_eval_batched Pallas dispatch
+    sim         discrete-event continuous-batching replay (prefill-first
+                or chunked-prefill) in O(events), table lookups only;
+                finite-UB KV residency pays DRAM spill latency + energy
+    slo         percentile/goodput accounting and max-QPS-under-SLO
+                bisection per design point
+
+The capacity DSE lives in `core.dse.slo_capacity_sweep` (max sustainable
+QPS per (arch, h, w) under an SLO) and `core.dse.robust_traffic_config`
+(Fig. 5's robustness normalization weighted by a heterogeneous traffic
+mix).
+"""
+from repro.traffic.cost_table import (CostTable, CostTableSet,  # noqa
+                                      DEFAULT_HW, build_cost_tables,
+                                      kv_bits_per_token)
+from repro.traffic.sim import SimConfig, SimResult, simulate  # noqa
+from repro.traffic.slo import (SLO, max_sustainable_qps, meets_slo,  # noqa
+                               saturation_qps, summarize)
+from repro.traffic.workload import (RequestTrace, TrafficModel,  # noqa
+                                    bucket_lengths, lognormal_lengths,
+                                    mmpp_arrivals, poisson_arrivals)

@@ -1,0 +1,300 @@
+"""Discrete-event continuous-batching serving simulator.
+
+Replays a `RequestTrace` against ONE (arch, h, w) design point using only
+`CostTable` lattice lookups — the analytic model never runs inside the
+loop, which is what makes million-request replays take seconds.
+
+Engine model (matches serving/engine.py's slot scheduler): a fixed number
+of decode `slots`; decode is batch-synchronous (one step advances every
+active slot by one token); finished slots are refilled FIFO from the
+arrival queue. Two admission policies:
+
+  * ``prefill_first`` — an admitted request's whole prompt prefills
+    immediately and exclusively (decode stalls), minimizing its TTFT at
+    the cost of head-of-line TPOT jitter for running requests;
+  * ``chunked`` — the prompt prefills in `chunk`-token slices interleaved
+    with decode steps (Sarathi/vLLM-style chunked prefill): each step pays
+    one decode step plus one prompt chunk, trading TTFT for smooth TPOT.
+
+Time advances event-to-event, not step-to-step: between admissions and
+completions every decode step is identical except that each KV span grows
+by one token, and the lattice interpolation is piecewise-linear in the
+span — so a whole run of `k` steps is charged in O(1) at the midpoint
+span (exact within a lattice cell). The loop is therefore O(events), and
+events are O(requests), independent of token counts.
+
+KV residency is charged against a finite Unified Buffer exactly like the
+graph subsystem does it: occupancy above capacity streams from DRAM every
+step, adding `graph.occupancy.spill_latency_cycles` of stall and
+`core.model_core.dram_spill_energy` of Eq. 1-relative energy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from heapq import heappop, heappush
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.model_core import DRAM_COST_PER_WORD, REF_BITS
+from repro.graph.occupancy import DRAM_BITS_PER_CYCLE
+from repro.scenarios.score import DEFAULT_CLOCK_HZ
+from repro.traffic.cost_table import CostTable
+from repro.traffic.workload import RequestTrace
+
+POLICIES = ("prefill_first", "chunked")
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Engine/plant parameters of one simulation."""
+    slots: int = 32
+    policy: str = "prefill_first"
+    chunk: int = 256                     # chunked-prefill slice (tokens)
+    clock_hz: float = DEFAULT_CLOCK_HZ
+    ub_kib: Optional[float] = None       # None => infinite buffer, no spill
+    dram_bits_per_cycle: float = DRAM_BITS_PER_CYCLE
+    timeline_samples: int = 2048         # max retained utilization samples
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"unknown policy {self.policy!r} (have {POLICIES})")
+        if self.slots < 1 or self.chunk < 1:
+            raise ValueError("slots and chunk must be >= 1")
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Per-request latency samples + aggregate accounting of one replay."""
+    n: int
+    arch: str
+    h: int
+    w: int
+    policy: str
+    slots: int
+    ttft_s: np.ndarray          # (n,) arrival -> first token
+    tpot_s: np.ndarray          # (n,) mean seconds per decoded token
+    sim_seconds: float          # simulated wall-clock span
+    wall_seconds: float         # host time spent replaying
+    offered_qps: float
+    tokens_out: int             # decoded tokens (sum of output_len)
+    decode_steps: int
+    decode_seconds: float       # decode compute + DRAM stall while decoding
+    prefill_seconds: float      # prefill compute + DRAM stall while
+                                # prefilling (whole-prompt or chunks)
+    spill_seconds: float        # total DRAM stall (prefill + decode phases)
+    max_step_seconds: float     # worst gap between consecutive tokens of a
+                                # RUNNING request (incl. prefill stalls) —
+                                # the inter-token jitter chunking bounds
+    energy_eq1: float           # Eq. 1-relative, incl. DRAM spill energy
+    timeline: np.ndarray        # (T, 3): [t_s, active_slots, utilization]
+
+    @property
+    def energy_per_token(self) -> float:
+        return self.energy_eq1 / max(self.tokens_out, 1)
+
+    @property
+    def requests_per_wall_sec(self) -> float:
+        return self.n / max(self.wall_seconds, 1e-12)
+
+
+def simulate(table: CostTable, trace: RequestTrace,
+             cfg: SimConfig = SimConfig()) -> SimResult:
+    """Replay `trace` on the design point of `table` under `cfg`.
+
+    Deterministic: a (table, trace, cfg) triple always returns the same
+    result (no RNG — all randomness lives in the trace).
+    """
+    t_wall = time.perf_counter()
+    n = len(trace)
+    arr = trace.arrival_s.tolist()
+    plen = trace.prompt_len.tolist()
+    olen = trace.output_len.tolist()
+    ttft = np.full(n, np.nan)
+    tpot = np.full(n, np.nan)
+
+    # hot-loop locals (attribute lookups hoisted out of the loop)
+    dstep = table.decode_step
+    denergy = table.decode_step_energy
+    dmacs = table.decode_step_macs
+    prefill = table.prefill
+    kvb = table.kv_bits_per_token
+    pe = table.pe
+    clock = cfg.clock_hz
+    slots = cfg.slots
+    chunked = cfg.policy == "chunked"
+    chunk = cfg.chunk
+    ub_bits = None if cfg.ub_kib is None else float(cfg.ub_kib) * 8192.0
+    dram_bpc = cfg.dram_bits_per_cycle
+    spill_e_per_bit = DRAM_COST_PER_WORD / REF_BITS
+
+    t = 0.0
+    nstep = 0                   # decode-step counter
+    active = 0                  # decode-active slots
+    kv_tok = 0.0                # resident tokens across occupied slots
+    nxt = 0                     # next arrival index (FIFO admission order)
+    heap: List = []             # (finish_step, rid)
+    # chunked: [rid, chunks_left, c_cyc, c_en, c_kv, kv_added_so_far]
+    backlog = deque()
+    kv_pre = 0.0                # kv_tok share from in-progress prefills
+    decode_secs = prefill_secs = spill_secs = energy = 0.0
+    max_step = 0.0
+    tokens_out = 0
+    timeline: List = []
+    tl_cap = max(int(cfg.timeline_samples), 2)
+    tl_stride = 1
+    tl_count = 0
+
+    # scalar mirror of graph.occupancy.spill_latency_cycles (the helper is
+    # numpy-vectorized; this loop must stay allocation-free): round-trip
+    # DRAM traffic for residency above capacity, 2x like spill_bits
+    def spill_cycles(occ_tok):
+        if ub_bits is None:
+            return 0.0
+        over = occ_tok * kvb - ub_bits
+        return 2.0 * over / dram_bpc if over > 0.0 else 0.0
+
+    def record(t_now, act, util):
+        nonlocal tl_stride, tl_count
+        tl_count += 1
+        if tl_count % tl_stride:
+            return
+        timeline.append((t_now, act, util))
+        if len(timeline) >= 2 * tl_cap:
+            del timeline[::2]            # halve resolution, keep the span
+            tl_stride *= 2
+
+    while True:
+        # ---- admissions (FIFO over arrivals; one slot per request) ----
+        occupied = active + len(backlog)
+        while occupied < slots and nxt < n and arr[nxt] <= t:
+            rid = nxt
+            nxt += 1
+            occupied += 1
+            pc, pen = prefill(plen[rid])
+            if chunked:
+                k_ch = -(-plen[rid] // chunk)     # ceil
+                backlog.append([rid, k_ch, pc / k_ch, pen / k_ch,
+                                plen[rid] / k_ch, 0.0])
+            else:
+                # exclusive prefill: decode stalls for its whole duration
+                sp = spill_cycles(kv_tok + plen[rid])
+                dt = (pc + sp) / clock
+                t += dt
+                prefill_secs += dt
+                spill_secs += sp / clock
+                if active and dt > max_step:   # stalls every running slot
+                    max_step = dt
+                energy += pen + sp * dram_bpc * spill_e_per_bit
+                ttft[rid] = t - arr[rid]
+                kv_tok += plen[rid]
+                active += 1
+                heappush(heap, (nstep + olen[rid], rid))
+
+        if active == 0 and not backlog:
+            if nxt < n:
+                t = max(t, arr[nxt])      # idle: jump to the next arrival
+                continue
+            break                         # drained
+
+        if backlog:
+            # ---- chunked: single step = one decode step + one chunk ----
+            entry = backlog[0]
+            pre_cyc = entry[2]
+            dec_cyc = 0.0
+            en = entry[3]
+            util_macs = 0.0
+            if active:
+                # decode lattice lookup sees only the DECODING slots' KV
+                # (kv_pre is the half-prefilled prompts' residency: it
+                # occupies the buffer but no running slot attends it)
+                kv_dec = (kv_tok - kv_pre) / active
+                dec_cyc = dstep(active, kv_dec)
+                en += denergy(active, kv_dec)
+                util_macs = dmacs(active, kv_dec)
+            sp = spill_cycles(kv_tok + entry[4])
+            dt = (pre_cyc + dec_cyc + sp) / clock
+            t += dt
+            prefill_secs += pre_cyc / clock
+            spill_secs += sp / clock
+            if active:
+                decode_secs += (dec_cyc + sp) / clock
+            else:
+                prefill_secs += sp / clock
+            energy += en + sp * dram_bpc * spill_e_per_bit
+            kv_tok += entry[4]
+            kv_pre += entry[4]
+            entry[5] += entry[4]
+            if active:
+                if dt > max_step:
+                    max_step = dt
+                nstep += 1
+                kv_tok += active
+                record(t, active,
+                       util_macs / max((pre_cyc + dec_cyc) * pe, 1.0))
+                while heap and heap[0][0] <= nstep:
+                    _, rid = heappop(heap)
+                    active -= 1
+                    kv_tok -= plen[rid] + olen[rid]
+                    tokens_out += olen[rid]
+                    tpot[rid] = (t - arr[rid] - ttft[rid]) / olen[rid]
+            entry[1] -= 1
+            if entry[1] == 0:
+                backlog.popleft()
+                rid = entry[0]
+                ttft[rid] = t - arr[rid]
+                # pro-rata chunking can leave float residue on kv_tok;
+                # snap the finished prompt to its exact token count and
+                # move it from prefill residency to decode residency
+                kv_tok += plen[rid] - entry[5]
+                kv_pre -= entry[5]
+                # first decode step is the NEXT step: finish after olen more
+                active += 1
+                heappush(heap, (nstep + olen[rid], rid))
+        else:
+            # ---- bulk decode: identical steps until the next event ----
+            k = heap[0][0] - nstep
+            if active < slots and nxt < n:
+                # a free slot exists: break at the next arrival to admit
+                gap = arr[nxt] - t
+                dur1 = (dstep(active, kv_tok / active)
+                        + spill_cycles(kv_tok)) / clock
+                k_arr = int(gap / dur1) + 1
+                if k_arr < k:
+                    k = k_arr
+            # midpoint span: each step grows every span (hence the mean)
+            # by exactly one token, and the lattice is piecewise-linear
+            kv_mid = kv_tok / active + (k - 1) * 0.5
+            cyc = dstep(active, kv_mid)
+            sp = spill_cycles(kv_tok + k * active * 0.5)
+            dt = k * (cyc + sp) / clock
+            t += dt
+            decode_secs += dt
+            sps = k * sp / clock
+            spill_secs += sps
+            energy += k * (denergy(active, kv_mid)
+                           + sp * dram_bpc * spill_e_per_bit)
+            nstep += k
+            kv_tok += k * active
+            if dt / k > max_step:
+                max_step = dt / k
+            record(t, active, dmacs(active, kv_mid) / max(cyc * pe, 1.0))
+            while heap and heap[0][0] <= nstep:
+                _, rid = heappop(heap)
+                active -= 1
+                kv_tok -= plen[rid] + olen[rid]
+                tokens_out += olen[rid]
+                tpot[rid] = (t - arr[rid] - ttft[rid]) / olen[rid]
+
+    return SimResult(
+        n=n, arch=table.arch, h=table.h, w=table.w, policy=cfg.policy,
+        slots=slots, ttft_s=ttft, tpot_s=tpot, sim_seconds=t,
+        wall_seconds=time.perf_counter() - t_wall,
+        offered_qps=trace.offered_qps, tokens_out=tokens_out,
+        decode_steps=nstep, decode_seconds=decode_secs,
+        prefill_seconds=prefill_secs, spill_seconds=spill_secs,
+        max_step_seconds=max_step, energy_eq1=energy,
+        timeline=np.asarray(timeline, np.float64).reshape(-1, 3))

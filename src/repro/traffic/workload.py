@@ -1,0 +1,206 @@
+"""Serving-traffic workload models: arrival processes + length mixes.
+
+The scenario matrix (repro.scenarios) freezes the serving mix into static
+(phase, batch, seq) cells; production serving is a *process* — requests
+arrive over time, queue, and leave at different lengths. This module
+generates the request traces the discrete-event simulator (traffic/sim.py)
+replays:
+
+  * arrival processes — ``poisson`` (memoryless steady load), ``mmpp``
+    (2-state Markov-modulated Poisson: bursty load with exponential
+    sojourns between a low-rate and a high-rate regime, the classic
+    burstiness model), and exact ``trace`` replay of recorded arrival
+    times;
+  * length distributions — ``lognormal`` prompt/output lengths (the
+    standard fit for production LM traffic) and ``buckets`` (an empirical
+    histogram over discrete lengths).
+
+Everything draws from an explicit ``np.random.Generator`` seeded by the
+caller, so a (model, n, seed) triple always produces the same trace —
+golden fixtures and the SLO bisection both depend on that determinism.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+ARRIVALS = ("poisson", "mmpp", "trace")
+LENGTHS = ("lognormal", "buckets", "const")
+
+
+# ------------------------------------------------------- arrival processes --
+
+def poisson_arrivals(rate_qps: float, n: int,
+                     rng: np.random.Generator) -> np.ndarray:
+    """(n,) sorted arrival times of a Poisson process at `rate_qps`."""
+    if rate_qps <= 0.0:
+        raise ValueError(f"rate_qps must be positive, got {rate_qps}")
+    return np.cumsum(rng.exponential(1.0 / rate_qps, n))
+
+
+def mmpp_arrivals(rate_lo: float, rate_hi: float, n: int,
+                  rng: np.random.Generator, mean_sojourn_s: float = 10.0
+                  ) -> np.ndarray:
+    """(n,) arrival times of a 2-state Markov-modulated Poisson process.
+
+    The modulating chain alternates between a low-rate and a high-rate
+    state with exponential sojourns of mean `mean_sojourn_s`; within a
+    sojourn arrivals are Poisson at the state's rate (uniform order
+    statistics over the sojourn). Index-of-dispersion > 1 — burstier than
+    any single Poisson at the same mean rate.
+    """
+    if not (0.0 < rate_lo <= rate_hi):
+        raise ValueError(f"need 0 < rate_lo <= rate_hi, got "
+                         f"({rate_lo}, {rate_hi})")
+    out = []
+    t, hi, total = 0.0, False, 0
+    while total < n:
+        dwell = rng.exponential(mean_sojourn_s)
+        rate = rate_hi if hi else rate_lo
+        k = int(rng.poisson(rate * dwell))
+        need = n - total
+        if k > need:
+            # the trace ends inside this sojourn: draw only the `need`
+            # arrivals still wanted, over a window shrunk so the state's
+            # LOCAL rate is preserved (k arrivals per dwell ~ need
+            # arrivals per dwell*need/k) — never materialize the billions
+            # of samples an extreme-rate probe would otherwise imply.
+            out.append(t + np.sort(rng.uniform(0.0, dwell * need / k,
+                                               need)))
+            total = n
+        elif k:
+            out.append(t + np.sort(rng.uniform(0.0, dwell, k)))
+            total += k
+        t += dwell
+        hi = not hi
+    return np.concatenate(out)[:n]
+
+
+# ------------------------------------------------------ length distributions --
+
+def lognormal_lengths(median: float, sigma: float, lo: int, hi: int, n: int,
+                      rng: np.random.Generator) -> np.ndarray:
+    """(n,) int32 lengths ~ round(LogNormal(ln median, sigma)), clipped to
+    [lo, hi] (lo >= 1: zero-length prompts/outputs are not a request)."""
+    if lo < 1 or hi < lo:
+        raise ValueError(f"need 1 <= lo <= hi, got ({lo}, {hi})")
+    x = rng.lognormal(np.log(median), sigma, n)
+    return np.clip(np.rint(x), lo, hi).astype(np.int32)
+
+
+def bucket_lengths(buckets: Sequence[int], probs: Sequence[float], n: int,
+                   rng: np.random.Generator) -> np.ndarray:
+    """(n,) int32 lengths drawn from an empirical histogram."""
+    buckets = np.asarray(buckets, np.int32)
+    probs = np.asarray(probs, np.float64)
+    if buckets.ndim != 1 or probs.shape != buckets.shape:
+        raise ValueError("buckets and probs must be equal-length 1-d")
+    if (probs < 0).any() or probs.sum() <= 0:
+        raise ValueError("probs must be non-negative with positive sum")
+    return rng.choice(buckets, size=n, p=probs / probs.sum())
+
+
+# ------------------------------------------------------------ trace object --
+
+@dataclasses.dataclass
+class RequestTrace:
+    """A concrete replayable request stream (the simulator input)."""
+    arrival_s: np.ndarray       # (n,) float64, sorted
+    prompt_len: np.ndarray      # (n,) int32, >= 1
+    output_len: np.ndarray      # (n,) int32, >= 1 decode steps per request
+
+    def __post_init__(self):
+        n = len(self.arrival_s)
+        if len(self.prompt_len) != n or len(self.output_len) != n:
+            raise ValueError("trace arrays must share one length")
+        if n and (np.diff(self.arrival_s) < 0).any():
+            raise ValueError("arrival_s must be sorted")
+        if n and (int(self.prompt_len.min()) < 1
+                  or int(self.output_len.min()) < 1):
+            raise ValueError("prompt_len/output_len must be >= 1")
+
+    def __len__(self) -> int:
+        return len(self.arrival_s)
+
+    @property
+    def offered_qps(self) -> float:
+        """Mean offered request rate of the trace."""
+        span = float(self.arrival_s[-1] - self.arrival_s[0])
+        return len(self) / span if span > 0 else float("inf")
+
+    @property
+    def total_tokens(self) -> int:
+        return int(self.prompt_len.sum() + self.output_len.sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficModel:
+    """A named, seedable traffic generator: arrival process x length mix.
+
+    ``sample(n, seed)`` is a pure function of (self, n, seed). ``rate_qps``
+    scales the arrival process (for mmpp it is the MEAN rate; the lo/hi
+    regime rates keep their ratio), which is what the SLO capacity
+    bisection (traffic/slo.py) sweeps.
+    """
+    arrival: str = "poisson"            # poisson | mmpp | trace
+    rate_qps: float = 1.0
+    burst_ratio: float = 4.0            # mmpp: rate_hi / rate_lo
+    mean_sojourn_s: float = 10.0        # mmpp regime dwell
+    trace_arrival_s: Optional[Tuple[float, ...]] = None   # arrival="trace"
+    # prompt lengths
+    prompt_dist: str = "lognormal"      # lognormal | buckets | const
+    prompt_median: float = 512.0
+    prompt_sigma: float = 0.8
+    prompt_range: Tuple[int, int] = (16, 4096)
+    prompt_buckets: Optional[Tuple[int, ...]] = None
+    prompt_probs: Optional[Tuple[float, ...]] = None
+    # output lengths (decode steps per request)
+    output_dist: str = "lognormal"
+    output_median: float = 128.0
+    output_sigma: float = 0.7
+    output_range: Tuple[int, int] = (1, 2048)
+    output_buckets: Optional[Tuple[int, ...]] = None
+    output_probs: Optional[Tuple[float, ...]] = None
+
+    def with_rate(self, rate_qps: float) -> "TrafficModel":
+        return dataclasses.replace(self, rate_qps=float(rate_qps))
+
+    def _lengths(self, which: str, n: int, rng) -> np.ndarray:
+        dist = getattr(self, f"{which}_dist")
+        if dist == "lognormal":
+            lo, hi = getattr(self, f"{which}_range")
+            return lognormal_lengths(getattr(self, f"{which}_median"),
+                                     getattr(self, f"{which}_sigma"),
+                                     lo, hi, n, rng)
+        if dist == "buckets":
+            return bucket_lengths(getattr(self, f"{which}_buckets"),
+                                  getattr(self, f"{which}_probs"), n, rng)
+        if dist == "const":
+            k = int(getattr(self, f"{which}_median"))
+            return np.full(n, k, np.int32)
+        raise ValueError(f"unknown {which}_dist {dist!r} (have {LENGTHS})")
+
+    def sample(self, n: int, seed: int = 0) -> RequestTrace:
+        rng = np.random.default_rng(seed)
+        if self.arrival == "poisson":
+            arr = poisson_arrivals(self.rate_qps, n, rng)
+        elif self.arrival == "mmpp":
+            # lo/hi around the mean rate: mean = (lo + hi) / 2 with equal
+            # sojourns, so lo = 2 mean / (1 + ratio)
+            lo = 2.0 * self.rate_qps / (1.0 + self.burst_ratio)
+            arr = mmpp_arrivals(lo, lo * self.burst_ratio, n, rng,
+                                mean_sojourn_s=self.mean_sojourn_s)
+        elif self.arrival == "trace":
+            if self.trace_arrival_s is None:
+                raise ValueError("arrival='trace' needs trace_arrival_s")
+            arr = np.asarray(self.trace_arrival_s, np.float64)[:n]
+            if len(arr) < n:
+                raise ValueError(f"trace has {len(arr)} arrivals < n={n}")
+        else:
+            raise ValueError(
+                f"unknown arrival {self.arrival!r} (have {ARRIVALS})")
+        return RequestTrace(arrival_s=np.asarray(arr, np.float64),
+                            prompt_len=self._lengths("prompt", n, rng),
+                            output_len=self._lengths("output", n, rng))

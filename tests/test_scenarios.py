@@ -12,8 +12,9 @@ from repro.core.dse import (grid_axes, robust_serving_config,
 from repro.core.workloads import aggregate_workloads, total_macs
 from repro.graph import lm_graph
 from repro.graph.schedule import occupancy_profile
-from repro.scenarios import (Scenario, named_workloads, score_scenarios,
-                             serving_matrix, tokens_per_sec)
+from repro.scenarios import (Scenario, joules_per_token, named_workloads,
+                             score_scenarios, serving_matrix,
+                             tokens_per_sec)
 
 SMALL = grid_axes()[::5]              # 5x5 grid for the cheap sweeps
 
@@ -264,3 +265,32 @@ def test_score_scenarios_records():
         # tps at the best-cycles point is tokens_per_pass * f / min cycles
         want = sc.tokens_per_pass * 1e9 / s.cycles[i].min()
         assert r["best_tps"] == pytest.approx(want)
+
+
+def test_joules_per_token_scoring():
+    """The energy analogue of tokens/sec: bit-normalized Eq. 1 energy
+    priced per serviced token, linear in the unit price, grid-shaped, and
+    threaded through score_scenarios next to the throughput fields."""
+    dec = Scenario("yi-9b", "decode", batch=4, seq_len=1024)
+    pre = Scenario("yi-9b", "prefill", batch=4, seq_len=1024)
+    # decode advances B tokens per pass, prefill B*S: same pass energy =>
+    # prefill's per-token energy is S times cheaper
+    assert joules_per_token(dec, 1e12, joules_per_unit=1e-12) == 4 ** -1 * 1.0
+    assert joules_per_token(pre, 1e12, joules_per_unit=1e-12) == \
+        pytest.approx(1.0 / (4 * 1024))
+    grid = joules_per_token(dec, np.full((3, 3), 2e12))
+    assert grid.shape == (3, 3)
+    assert joules_per_token(dec, 1.0, joules_per_unit=2e-12) == \
+        2 * joules_per_token(dec, 1.0, joules_per_unit=1e-12)
+
+    scs, nw = _matrix()
+    s = scenario_sweep(nw, hs=SMALL, ws=SMALL, backend="numpy")
+    recs = score_scenarios(s, scs, at=(128, 128))
+    for r in recs:
+        sc = next(x for x in scs if x.name == r["scenario"])
+        i = s.index(r["scenario"])
+        # best_jpt sits at the min-energy point (shared denominator)
+        want = float(joules_per_token(sc, s.energy[i].min()))
+        assert r["best_jpt"] == pytest.approx(want)
+        assert r["jpt_at"] >= r["best_jpt"] > 0
+        assert r["jpt_at_frac_of_best"] >= 1.0 - 1e-12

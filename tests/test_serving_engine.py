@@ -139,3 +139,61 @@ def test_run_to_completion_raises_when_stuck():
     eng.submit(_req(0, start=0, n=2, max_new=10 ** 9))
     with pytest.raises(RuntimeError):
         eng.run_to_completion(max_ticks=3)
+
+
+# -------------------------------------------------- prompt length buckets ---
+
+class _TracingBundle(_CounterBundle):
+    """Counts jit TRACES of prefill: the Python body only runs while jax
+    traces a new prompt shape, so `traced` records one entry per compile."""
+
+    def __init__(self):
+        self.traced = []
+
+    def prefill(self, params, batch, cache_len=None):
+        self.traced.append(int(batch["tokens"].shape[1]))
+        return super().prefill(params, batch, cache_len=cache_len)
+
+
+def test_admit_buckets_prompts_to_constant_trace_count():
+    """Varied prompt lengths must NOT mean one jit trace per length:
+    lengths 3..8 cover only the {4, 8} power-of-two buckets, so exactly
+    two prefill traces happen no matter how many requests run."""
+    bundle = _TracingBundle()
+    eng = ServingEngine(bundle, params={}, slots=2, cache_len=32)
+    for rid, ln in enumerate((3, 4, 5, 6, 7, 8, 5, 3, 7)):
+        eng.submit(_req(rid, start=rid, n=ln, max_new=2))
+    eng.run_to_completion()
+    assert sorted(set(bundle.traced)) == [4, 8]
+    assert len(bundle.traced) == 2, (
+        f"expected one trace per bucket, got traces for {bundle.traced}")
+
+
+def test_bucketed_prompt_keeps_last_token_semantics():
+    """Bucket padding repeats the final token, so the first sampled token
+    (successor of the true last prompt token) is unchanged."""
+    eng = _engine(slots=1, cache_len=16)
+    r = _req(0, start=3, n=5, max_new=2)     # 5 -> bucket 8
+    eng.submit(r)
+    eng.run_to_completion()
+    # prompt ends at 7 -> prefill emits 8 (decode input), decode appends
+    assert r.out == [9, 10]
+    # cache: prompt, then the repeated pad token up to the bucket
+    toks = np.asarray(eng.cache["toks"][0])
+    np.testing.assert_array_equal(toks[:8], [3, 4, 5, 6, 7, 7, 7, 7])
+
+
+def test_bucket_prompt_preserves_decode_headroom():
+    """Padding must never fill the ring past cache_len - max_new: decode
+    writes at pos % cache_len, so a bucket that large would wrap onto the
+    prompt. Such prompts go through unpadded (pre-bucketing behavior)."""
+    eng = _engine(slots=1, cache_len=32)
+    padded = eng._bucket_prompt(np.arange(9, dtype=np.int32), max_new=4)
+    assert len(padded) == 16                 # 16 + 4 fits in 32
+    np.testing.assert_array_equal(padded[9:], [8] * 7)
+    # bucket 16 + max_new 20 > 32: unpadded, exact length kept
+    tight = eng._bucket_prompt(np.arange(9, dtype=np.int32), max_new=20)
+    assert len(tight) == 9
+    # bucket 32 would leave zero decode slots: unpadded too
+    near = eng._bucket_prompt(np.arange(17, dtype=np.int32), max_new=2)
+    assert len(near) == 17

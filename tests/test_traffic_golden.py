@@ -1,0 +1,88 @@
+"""Golden regression: a fixed seeded simulation pinned to its summary
+stats, so simulator refactors cannot silently drift latency accounting.
+
+The scenario: h2o-danube-3-4b on a 128x128 array (numpy-built cost table
+— float64, backend-deterministic), a seeded lognormal Poisson trace, both
+admission policies, and a finite-UB variant. Any intentional change to
+the event loop, the interpolation, or the spill accounting must
+regenerate the fixture AND say why in the commit.
+
+Regenerate with (from the repo root):
+    PYTHONPATH=src:tests python -c "
+import json, test_traffic_golden as g
+json.dump(g.golden_records(), open(g.FIXTURE, 'w'),
+          indent=1, sort_keys=True)"
+"""
+import functools
+import json
+import os
+
+import pytest
+
+from repro.traffic import (SLO, SimConfig, TrafficModel, build_cost_tables,
+                           simulate, summarize)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "traffic_sim_golden.json")
+
+ARCH = "h2o-danube-3-4b"
+N_REQUESTS = 2500
+SEED = 1234
+PINNED = ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
+          "tokens_per_sec", "energy_per_token", "goodput_qps",
+          "goodput_frac", "spill_frac_of_decode", "sim_seconds",
+          "completed", "tokens_out")
+
+CASES = {
+    "prefill_first": SimConfig(slots=16),
+    "chunked": SimConfig(slots=16, policy="chunked", chunk=128),
+    "prefill_first_tight_ub": SimConfig(slots=16, ub_kib=24 * 1024.0),
+}
+
+
+def _trace():
+    # ~60% of the design point's saturation rate: loaded enough that
+    # queueing and batching effects show, stable enough that the stats
+    # mean something
+    return TrafficModel(rate_qps=1.5, prompt_median=256,
+                        prompt_range=(16, 2048), output_median=48,
+                        output_range=(1, 512)).sample(N_REQUESTS, SEED)
+
+
+@functools.lru_cache(maxsize=None)
+def _table():
+    return build_cost_tables(
+        archs=[ARCH], hw=((128, 128),), backend="numpy"
+    ).table(ARCH, 128, 128)
+
+
+def golden_records():
+    tab = _table()
+    tr = _trace()
+    slo = SLO(ttft_s=5.0, tpot_s=0.2)
+    out = {}
+    for name, cfg in CASES.items():
+        summ = summarize(simulate(tab, tr, cfg), slo)
+        out[name] = {k: summ[k] for k in PINNED}
+    return out
+
+
+with open(FIXTURE) as f:
+    GOLDEN = json.load(f)
+
+
+def test_fixture_covers_all_cases():
+    assert set(GOLDEN) == set(CASES)
+    for rec in GOLDEN.values():
+        assert set(rec) == set(PINNED)
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_seeded_simulation_matches_golden(case):
+    got = golden_records()[case]
+    want = GOLDEN[case]
+    for k in PINNED:
+        assert got[k] == pytest.approx(want[k], rel=1e-9, abs=1e-12), (
+            f"{case}/{k}: simulator output drifted vs the pinned fixture "
+            "(if intentional, regenerate tests/fixtures/traffic_sim_golden"
+            ".json — see module docstring)")
