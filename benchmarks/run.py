@@ -14,6 +14,10 @@ CSV and writes machine-readable results to results/benchmarks/.
   traffic  traffic-driven serving simulation: fused cost-table build vs the
         per-lattice-point dispatch loop, a 1M-request Poisson replay, and
         the SLO capacity sweep + robust traffic config   [beyond paper]
+  fleet  fleet-scale serving: per-block stage tables from ONE fused
+        dse_eval_batched dispatch vs the per-stage loop, a 1M-request
+        multi-server fleet replay, and the fleet-composition capacity
+        sweep + robust fleet config                      [beyond paper]
   connectivity  graph-IR liveness: peak UB residency + finite-UB spill for
         chain vs residual vs dense-concat networks       [beyond paper]
   ablations  model-accounting options (act_reread, idle-PE, load hops)
@@ -21,9 +25,10 @@ CSV and writes machine-readable results to results/benchmarks/.
   precision  bitwidth DSE: (h, w, act_bits, weight_bits) design points
   kernels    Pallas kernel microbenches (interpret mode)
 
-``--quick`` runs the reduced capacity sweep, the serving-scenario sweep
-and the traffic stage, writing results/benchmarks/BENCH_graph.json,
-BENCH_scenarios.json and BENCH_traffic.json (the CI smoke/perf-trajectory
+``--quick`` runs the reduced capacity sweep, the serving-scenario sweep,
+the traffic stage and the fleet stage, writing
+results/benchmarks/BENCH_graph.json, BENCH_scenarios.json,
+BENCH_traffic.json and BENCH_fleet.json (the CI smoke/perf-trajectory
 probes).
 """
 from __future__ import annotations
@@ -325,6 +330,109 @@ def traffic_bench(quick: bool = False):
     })
 
 
+def fleet_bench(quick: bool = False):
+    """Fleet-scale serving probes, written to BENCH_fleet.json:
+
+      * per-block stage tables for 2 archs x (h, w) x tp from ONE fused
+        dse_eval_batched dispatch vs the one-dispatch-per-stage loop (the
+        fleet fusion's perf-trajectory number);
+      * a 1,000,000-request fleet replay: 8 two-stage pipelined servers
+        behind round-robin routing — routing is O(n) and each server runs
+        the O(events) bulk-advance on its sub-trace (acceptance: under
+        30 s wall on one CPU host);
+      * the fleet-composition capacity sweep (partition -> stage tables ->
+        multi-server sim -> SLO bisection) over an iso-PE budget and the
+        mix-weighted robust fleet config.
+    """
+    from repro.core.dse import (FleetSpec, PoolSpec, fleet_capacity_sweep,
+                                robust_fleet_config)
+    from repro.fleet import (DEFAULT_LINK, FleetSimConfig, FleetTables,
+                             build_stage_tables, partition_server_table,
+                             simulate_fleet)
+    from repro.traffic import SLO, SimConfig, TrafficModel
+
+    # 1. stage tables: one fused dispatch vs the per-stage dispatch loop
+    archs = ["yi-9b", "mixtral-8x22b"]
+    hw = ((64, 64), (128, 128))
+    lat = dict(slot_lattice=(1, 8, 32), kv_lattice=(256, 2048),
+               prompt_lattice=(256, 2048)) if quick else {}
+    ts, us_fu = _timeit(lambda: build_stage_tables(
+        archs, hw=hw, tps=(1, 2), backend="pallas", **lat), n=1)
+    _, us_lp = _timeit(lambda: build_stage_tables(
+        archs, hw=hw, tps=(1, 2), backend="pallas-loop", **lat), n=1)
+    _emit("fleet_stage_tables_fused", us_fu,
+          f"{ts.n_scenarios}stage_pts_x_{ts.n_configs}cfgs"
+          f"->{len(ts)}tables;1_dispatch")
+    _emit("fleet_stage_tables_loop", us_lp,
+          f"{ts.n_scenarios}_dispatches;fused_speedup={us_lp / us_fu:.2f}x")
+
+    # 2. the 1M-request fleet replay: 8 pipelined xlstm servers
+    n_replay = 1_000_000
+    st_x = build_stage_tables(["xlstm-125m"], hw=((128, 128),),
+                              backend="numpy")
+    srv = partition_server_table(st_x.table("xlstm-125m", 128, 128),
+                                 n_stages=2, link=DEFAULT_LINK).table
+    tm = TrafficModel(rate_qps=200.0, prompt_median=256, output_median=48)
+    trace = tm.sample(n_replay, seed=0)
+    res = simulate_fleet(FleetTables(mixed=[srv] * 8), trace,
+                         FleetSimConfig(server=SimConfig(slots=64)))
+    _emit("fleet_replay_1m_requests", res.wall_seconds * 1e6,
+          f"{res.requests_per_wall_sec:.0f}req_per_wall_sec"
+          f";servers={res.n_servers};tokens={res.tokens_out}")
+
+    # 3. composition sweep under an iso-PE budget + robust fleet config
+    budget = 4 * 128 * 128
+    fleets = [
+        FleetSpec("16x[64x64]", (PoolSpec(64, 64, 16),)),
+        FleetSpec("4x[128x128]", (PoolSpec(128, 128, 4),)),
+        FleetSpec("8x[tp2 64x64]", (PoolSpec(64, 64, 8, tp=2),)),
+        FleetSpec("disagg 1x128 + 3x128",
+                  (PoolSpec(128, 128, 1, role="prefill"),
+                   PoolSpec(128, 128, 3, role="decode"))),
+    ]
+    mix = {"yi-9b": TrafficModel(rate_qps=1.0, prompt_median=256,
+                                 output_median=64),
+           "mixtral-8x22b": TrafficModel(rate_qps=1.0, prompt_median=512,
+                                         output_median=128,
+                                         arrival="mmpp")}
+    slo = SLO(ttft_s=8.0, tpot_s=3.0)
+    n_req = 300 if quick else 1000
+    sweep, us_sw = _timeit(lambda: fleet_capacity_sweep(
+        mix, slo, fleets, archs=archs,
+        sim=FleetSimConfig(server=SimConfig(slots=16)),
+        n_requests=n_req, stage_tables=ts, pe_budget=budget), n=1)
+    weights = {"yi-9b": 3.0, "mixtral-8x22b": 1.0}
+    fl, F, mask, winner = robust_fleet_config(sweep, weights=weights)
+    best = {a: sweep.best(a) for a in archs}
+    _emit("fleet_capacity_sweep", us_sw,
+          ";".join(f"{a}_max_qps={q:.2f}@{f.name}"
+                   for a, (f, q) in best.items()))
+    _emit("fleet_robust_config", 0.0,
+          f"winner={fl[winner].name};frontier={int(mask.sum())}")
+    _save("BENCH_fleet", {
+        "stage_points": ts.n_scenarios, "configs": ts.n_configs,
+        "tables": len(ts),
+        "stage_tables_fused_us": us_fu, "stage_tables_loop_us": us_lp,
+        "stage_tables_fused_speedup": us_lp / us_fu,
+        "replay_requests": n_replay,
+        "replay_servers": res.n_servers,
+        "replay_wall_seconds": res.wall_seconds,
+        "replay_requests_per_wall_sec": res.requests_per_wall_sec,
+        "replay_tokens_out": res.tokens_out,
+        "slo": {"ttft_s": slo.ttft_s, "tpot_s": slo.tpot_s,
+                "pct": slo.pct},
+        "sweep_us": us_sw, "sweep_n_requests": n_req,
+        "pe_budget": budget,
+        "fleets": [f.name for f in fleets],
+        "archs": archs,
+        "max_qps": sweep.max_qps.tolist(),
+        "energy_per_token": sweep.energy_per_token.tolist(),
+        "robust_weights": weights,
+        "robust_winner": fl[winner].name,
+        "robust_frontier": int(mask.sum()),
+    })
+
+
 def connectivity():
     """Graph-IR study: how connectivity (skip / dense-concat edges) changes
     peak UB residency and finite-capacity spill energy, chain baseline
@@ -497,15 +605,17 @@ def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--quick", action="store_true",
                         help="reduced graph capacity-sweep + serving-"
-                             "scenario + traffic smoke only (writes "
-                             "BENCH_graph.json, BENCH_scenarios.json and "
-                             "BENCH_traffic.json)")
+                             "scenario + traffic + fleet smoke only "
+                             "(writes BENCH_graph.json, "
+                             "BENCH_scenarios.json, BENCH_traffic.json "
+                             "and BENCH_fleet.json)")
     args = parser.parse_args()
     print("name,us_per_call,derived")
     if args.quick:
         graph_quick()
         scenarios_bench(quick=True)
         traffic_bench(quick=True)
+        fleet_bench(quick=True)
         return
     fig2_resnet_heatmap()
     fig3_pareto()
@@ -515,6 +625,7 @@ def main() -> None:
     lm_architectures()
     scenarios_bench()
     traffic_bench()
+    fleet_bench()
     connectivity()
     ablations()
     future_work()

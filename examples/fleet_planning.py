@@ -1,0 +1,108 @@
+"""Fleet planning walkthrough: spend a fixed PE budget on WHICH arrays?
+
+The capacity-planning example (examples/capacity_planning.py) sizes ONE
+array shape against traffic; a production fleet has more degrees of
+freedom: how many servers, each made of how many arrays (pipeline stages x
+tensor-parallel ranks), of what shape, monolithic or prefill/decode-
+disaggregated — all under one iso-PE budget, with the inter-array link as
+a first-class cost. This walkthrough:
+
+  1. enumerates fleet compositions under a 262k-PE budget (16 TPU-class
+     128x128 arrays' worth), from single-array replica farms to 4-way
+     tensor-parallel servers and a disaggregated prefill/decode split,
+  2. builds per-block stage tables for BOTH architectures and every
+     (shape, tp) need in ONE fused batched Pallas dispatch, partitions
+     each server (DP pipeline split + TP head/column split, link-priced),
+  3. bisects each composition's max sustainable QPS under a p99 TTFT/TPOT
+     SLO on the multi-server discrete-event simulator, for a weighted
+     yi-9b + mixtral-8x22b traffic mix (paired traces — common random
+     numbers — so compositions are compared, not noise),
+  4. picks the robust fleet (Fig. 5's normalization over energy/token x
+     1/max-QPS, traffic-weighted) and prints the disaggregated-vs-
+     monolithic comparison.
+
+    PYTHONPATH=src python examples/fleet_planning.py
+"""
+import numpy as np
+
+from repro.core.dse import (FleetSpec, PoolSpec, fleet_capacity_sweep,
+                            robust_fleet_config)
+from repro.fleet import DEFAULT_LINK, FleetSimConfig
+from repro.traffic import SLO, SimConfig, TrafficModel
+
+BUDGET = 16 * 128 * 128            # 16 TPU-class arrays' worth of PEs
+
+# every composition spends the SAME budget — the Fig. 5 question at fleet
+# scale: replicas of small servers vs fewer, bigger partitioned servers
+FLEETS = [
+    FleetSpec("16x[128x128]", (PoolSpec(128, 128, 16),)),
+    FleetSpec("4x[256x256]", (PoolSpec(256, 256, 4),)),
+    FleetSpec("4x[tp4 128x128]", (PoolSpec(128, 128, 4, tp=4),)),
+    FleetSpec("8x[2-stage 128x128]", (PoolSpec(128, 128, 8, stages=2),)),
+    FleetSpec("disagg 1x256 + 12x128",
+              (PoolSpec(256, 256, 1, role="prefill"),
+               PoolSpec(128, 128, 12, role="decode")),
+              routing="jsq"),
+]
+
+MIX = {
+    "yi-9b": TrafficModel(rate_qps=1.0, prompt_median=512,
+                          output_median=128),
+    "mixtral-8x22b": TrafficModel(rate_qps=1.0, prompt_median=1024,
+                                  output_median=256, arrival="mmpp"),
+}
+WEIGHTS = {"yi-9b": 2.0, "mixtral-8x22b": 1.0}
+# TPOT admits mixtral only on multi-array servers (tp): a single 128x128
+# array decodes it at ~2.6 s/token — the mix FORCES partitioning
+SLO_TARGET = SLO(ttft_s=8.0, tpot_s=0.7)
+
+
+def main():
+    for f in FLEETS:
+        assert f.total_pes <= BUDGET, f.name
+        print(f"{f.name:26s} {f.total_pes / BUDGET * 100:5.1f}% of budget, "
+              f"{sum(p.n_servers for p in f.pools)} servers")
+
+    print(f"\nsweeping {len(FLEETS)} compositions x {len(MIX)} archs under "
+          f"p99 TTFT<={SLO_TARGET.ttft_s}s / TPOT<={SLO_TARGET.tpot_s}s ...")
+    sweep = fleet_capacity_sweep(
+        MIX, SLO_TARGET, FLEETS, archs=list(MIX),
+        sim=FleetSimConfig(server=SimConfig(slots=16)), link=DEFAULT_LINK,
+        n_requests=1500, pe_budget=BUDGET)
+
+    print(f"\nmax sustainable QPS (and energy/token, Eq. 1 units):")
+    hdr = " ".join(f"{f.name}".rjust(22) for f in FLEETS)
+    print(f"  {'arch':14s} {hdr}")
+    for a, arch in enumerate(sweep.archs):
+        row = " ".join(
+            f"{q:9.2f}/{e:.2e}" if q > 0 else f"{'—misses SLO—':>22s}"
+            for q, e in zip(sweep.max_qps[a], sweep.energy_per_token[a]))
+        print(f"  {arch:14s} {row}")
+
+    # what the partitioner decided for the pipelined composition
+    plan = sweep.plans[0][3][0]
+    print(f"\n2-stage pipeline plan for yi-9b ({plan.h}x{plan.w}): "
+          f"blocks {plan.stage_blocks}, bubble {plan.bubble:.2f} "
+          f"at M={plan.n_micro}")
+
+    # disaggregated vs the best monolithic, per arch
+    print("\ndisaggregated vs monolithic:")
+    for a, arch in enumerate(sweep.archs):
+        mono = max((sweep.max_qps[a, i], FLEETS[i].name)
+                   for i in range(len(FLEETS)) if not FLEETS[i].disaggregated)
+        dis = [(sweep.max_qps[a, i], FLEETS[i].name)
+               for i in range(len(FLEETS)) if FLEETS[i].disaggregated][0]
+        ratio = dis[0] / mono[0] if mono[0] > 0 else float("nan")
+        print(f"  {arch:14s} best monolithic {mono[1]} = {mono[0]:.2f} qps; "
+              f"disaggregated {dis[1]} = {dis[0]:.2f} qps "
+              f"({ratio:.2f}x)")
+
+    fleets, F, mask, winner = robust_fleet_config(sweep, weights=WEIGHTS)
+    print(f"\nrobust fleet across the weighted mix {WEIGHTS}:")
+    print(f"  frontier: {[fleets[i].name for i in np.flatnonzero(mask)]}")
+    print(f"  winner:   {fleets[winner].name} "
+          f"(normalized score {F[winner].sum():.3f})")
+
+
+if __name__ == "__main__":
+    main()

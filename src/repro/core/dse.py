@@ -30,6 +30,14 @@
   from one fused batched Pallas dispatch.
 * robust_traffic_config: Fig. 5 weighted by a heterogeneous traffic mix
   over (energy/token, 1/max_qps), with the normalized winner.
+* fleet_capacity_sweep: the fleet-composition dimension — enumerate pools
+  of (possibly differently shaped) arrays holding pipeline/tensor-
+  partitioned model instances under an iso-PE budget, score each
+  composition's max QPS under the SLO on the multi-server simulator
+  (repro.fleet): partition -> fused stage tables -> fleet replay -> SLO
+  bisection, per architecture of a traffic mix.
+* robust_fleet_config: Fig. 5's normalization over fleet compositions,
+  weighted by the traffic mix, with the normalized winner.
 """
 from __future__ import annotations
 
@@ -560,6 +568,44 @@ def slo_capacity_sweep(traffic, slo, archs: Optional[Sequence[str]] = None,
                           goodput_qps=good, summaries=summaries)
 
 
+def _robust_mix_frontier(archs, max_qps, energy_per_token,
+                         weights: Optional[Dict[str, float]], label: str):
+    """Shared Fig. 5 machinery of the robust_*_config variants: per arch,
+    min-max normalize (energy/token, 1/max_qps) over the candidate axis
+    — capacity is a benefit, so it is inverted (guarding dead candidates)
+    to make both objectives costs — average with the mix weights, Pareto,
+    and pick the normalized winner. Explicit `weights` must cover `archs`
+    exactly (a 0.0 share is allowed but must be said).
+    Returns (F, mask, winner_idx)."""
+    if weights is not None:
+        unknown = set(weights) - set(archs)
+        missing = set(archs) - set(weights)
+        if unknown or missing:
+            raise ValueError(
+                f"{label}: weights must cover the swept archs exactly "
+                f"(unknown: {sorted(unknown)[:3]}, "
+                f"missing: {sorted(missing)[:3]})")
+    n = max_qps.shape[1]
+    e_acc = np.zeros(n, np.float64)
+    q_acc = np.zeros(n, np.float64)
+    wsum = 0.0
+    for a, arch in enumerate(archs):
+        wt = 1.0 if weights is None else float(weights[arch])
+        if wt == 0.0:
+            continue
+        inv_qps = 1.0 / np.maximum(max_qps[a], 1e-12)
+        e_acc += wt * _normalize(energy_per_token[a])
+        q_acc += wt * _normalize(inv_qps)
+        wsum += wt
+    if wsum == 0.0:
+        raise ValueError(f"{label}: all mix weights zero")
+    F = np.stack([e_acc / wsum, q_acc / wsum], axis=1)
+    mask = pareto_mask(F)
+    frontier = np.flatnonzero(mask)
+    winner = int(frontier[np.argmin(F[mask].sum(axis=1))])
+    return F, mask, winner
+
+
 def robust_traffic_config(sweep: SLOSweepResult,
                           weights: Optional[Dict[str, float]] = None):
     """Fig. 5's robustness normalization, traffic edition: min-max
@@ -570,31 +616,216 @@ def robust_traffic_config(sweep: SLOSweepResult,
     Like `robust_serving_config`, an explicit `weights` dict must cover
     the swept archs exactly (a 0.0 share is allowed but must be said).
     Returns (hw, F, mask, winner_idx)."""
-    if weights is not None:
-        unknown = set(weights) - set(sweep.archs)
-        missing = set(sweep.archs) - set(weights)
-        if unknown or missing:
-            raise ValueError(
-                "robust_traffic_config: weights must cover the swept "
-                f"archs exactly (unknown: {sorted(unknown)[:3]}, "
-                f"missing: {sorted(missing)[:3]})")
-    wsum = 0.0
-    e_acc = np.zeros(sweep.hw.shape[0], np.float64)
-    q_acc = np.zeros(sweep.hw.shape[0], np.float64)
-    for a, arch in enumerate(sweep.archs):
-        wt = 1.0 if weights is None else float(weights[arch])
-        if wt == 0.0:
-            continue
-        # capacity is a benefit: invert (guarding dead configs) so both
-        # objectives are costs, then normalize like Fig. 5
-        inv_qps = 1.0 / np.maximum(sweep.max_qps[a], 1e-12)
-        e_acc += wt * _normalize(sweep.energy_per_token[a])
-        q_acc += wt * _normalize(inv_qps)
-        wsum += wt
-    if wsum == 0.0:
-        raise ValueError("robust_traffic_config: all mix weights zero")
-    F = np.stack([e_acc / wsum, q_acc / wsum], axis=1)
-    mask = pareto_mask(F)
-    frontier = np.flatnonzero(mask)
-    winner = int(frontier[np.argmin(F[mask].sum(axis=1))])
+    F, mask, winner = _robust_mix_frontier(
+        sweep.archs, sweep.max_qps, sweep.energy_per_token, weights,
+        "robust_traffic_config")
     return sweep.hw, F, mask, winner
+
+
+# ---------------------------------------------------- fleet-composition DSE --
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """One homogeneous pool of fleet servers: `n_servers` replicas, each a
+    model instance partitioned over `stages x tp` arrays of shape h x w.
+    `role` is "mixed" (the server runs both phases) or "prefill"/"decode"
+    (disaggregated serving on differently-shaped arrays)."""
+    h: int
+    w: int
+    n_servers: int
+    stages: int = 1
+    tp: int = 1
+    role: str = "mixed"
+
+    def __post_init__(self):
+        if self.role not in ("mixed", "prefill", "decode"):
+            raise ValueError(f"unknown pool role {self.role!r}")
+        if min(self.n_servers, self.stages, self.tp) < 1:
+            raise ValueError("n_servers, stages and tp must be >= 1")
+
+    @property
+    def arrays_per_server(self) -> int:
+        return self.stages * self.tp
+
+    @property
+    def pes(self) -> int:
+        return self.n_servers * self.arrays_per_server * self.h * self.w
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """A fleet composition: pools + routing + pipeline microbatching."""
+    name: str
+    pools: Tuple[PoolSpec, ...]
+    routing: str = "round_robin"
+    n_microbatches: int = 4
+
+    @property
+    def total_pes(self) -> int:
+        return sum(p.pes for p in self.pools)
+
+    @property
+    def disaggregated(self) -> bool:
+        return any(p.role == "prefill" for p in self.pools)
+
+
+def enumerate_fleet_specs(pe_budget: int,
+                          shapes: Sequence = ((64, 64), (128, 128),
+                                              (256, 256)),
+                          stages: Sequence[int] = (1, 2, 4),
+                          tps: Sequence[int] = (1,),
+                          min_fill: float = 0.9,
+                          routing: str = "round_robin",
+                          n_microbatches: int = 4) -> List[FleetSpec]:
+    """Monolithic fleet compositions under an iso-PE budget: for every
+    (shape, stages, tp) the largest replica count that fits, kept when it
+    uses at least `min_fill` of the budget (a composition that strands
+    PEs is not an iso-PE comparison). Disaggregated compositions are
+    deployment choices, not grid points — build them explicitly with
+    `PoolSpec(role="prefill"/"decode")`."""
+    out: List[FleetSpec] = []
+    for (h, w) in shapes:
+        for s in stages:
+            for tp in tps:
+                per = int(h) * int(w) * s * tp
+                n = pe_budget // per
+                if n < 1 or n * per < min_fill * pe_budget:
+                    continue
+                out.append(FleetSpec(
+                    name=f"{n}x[{s}st{('x%dtp' % tp) if tp > 1 else ''}"
+                         f"_{h}x{w}]",
+                    pools=(PoolSpec(int(h), int(w), n, stages=s, tp=tp),),
+                    routing=routing, n_microbatches=n_microbatches))
+    return out
+
+
+def resolve_fleet(stage_tables, arch: str, fleet: FleetSpec, link=None):
+    """Materialize a FleetSpec into runnable per-server cost tables
+    (`fleet.sim.FleetTables`) + the pipeline plans behind them."""
+    from repro.fleet.interconnect import DEFAULT_LINK
+    from repro.fleet.partition import partition_server_table
+    from repro.fleet.sim import FleetTables
+    link = DEFAULT_LINK if link is None else link
+    pools: Dict[str, list] = {"mixed": [], "prefill": [], "decode": []}
+    plans, cache = [], {}
+    for pool in fleet.pools:
+        key = (pool.h, pool.w, pool.tp, pool.stages)
+        if key not in cache:
+            cache[key] = partition_server_table(
+                stage_tables.table(arch, pool.h, pool.w, pool.tp),
+                n_stages=pool.stages, n_micro=fleet.n_microbatches,
+                link=link)
+        pools[pool.role] += [cache[key].table] * pool.n_servers
+        plans.append(cache[key].plan)
+    return FleetTables(mixed=pools["mixed"], prefill=pools["prefill"],
+                       decode=pools["decode"]), plans
+
+
+@dataclasses.dataclass
+class FleetSweepResult:
+    """Max sustainable QPS under an SLO per (arch, fleet composition)."""
+    archs: List[str]
+    fleets: List[FleetSpec]
+    slo: "object"
+    max_qps: np.ndarray             # (A, F)
+    energy_per_token: np.ndarray    # (A, F)
+    goodput_qps: np.ndarray         # (A, F)
+    summaries: List[List[dict]]
+    plans: List[List[list]]         # [arch][fleet] -> pipeline plans
+
+    def best(self, arch: str):
+        """(FleetSpec, max_qps) of the highest-capacity composition."""
+        a = self.archs.index(arch)
+        f = int(np.argmax(self.max_qps[a]))
+        return self.fleets[f], float(self.max_qps[a, f])
+
+
+def fleet_capacity_sweep(traffic, slo, fleets: Sequence[FleetSpec],
+                         archs: Optional[Sequence[str]] = None,
+                         sim=None, link=None, n_requests: int = 800,
+                         seed: int = 0, backend: str = "pallas",
+                         stage_tables=None, lattices: Optional[dict] = None,
+                         pe_budget: Optional[int] = None,
+                         **model_kw) -> FleetSweepResult:
+    """The fleet-composition design space, end to end: every fleet's
+    servers are partitioned (DP pipeline splits + tensor splits) over
+    stage tables built in ONE fused batched dispatch across all archs,
+    shapes and tp degrees, then each (arch, fleet) point is bisected for
+    its max sustainable QPS on the multi-server discrete-event simulator.
+
+    `traffic` is one TrafficModel or a per-arch dict (heterogeneous
+    mixes; probes draw component-paired traces so compositions compare on
+    common random numbers); `sim` a fleet.FleetSimConfig whose routing is
+    overridden per FleetSpec; `link` the inter-array LinkModel (pipeline
+    boundaries, TP collectives and disaggregated KV shipping);
+    `pe_budget`, when given, rejects compositions over budget (iso-PE
+    discipline enforced, not assumed)."""
+    from repro.configs.base import list_archs
+    from repro.fleet.interconnect import DEFAULT_LINK
+    from repro.fleet.partition import build_stage_tables
+    from repro.fleet.sim import (FleetSimConfig, fleet_max_sustainable_qps)
+
+    archs = list(list_archs()) if archs is None else list(archs)
+    fleets = list(fleets)
+    if not fleets:
+        raise ValueError("fleet_capacity_sweep: no fleet compositions")
+    if pe_budget is not None:
+        over = [f.name for f in fleets if f.total_pes > pe_budget]
+        if over:
+            raise ValueError(f"fleet_capacity_sweep: over PE budget "
+                             f"{pe_budget}: {over[:3]}")
+    sim = FleetSimConfig() if sim is None else sim
+    link = DEFAULT_LINK if link is None else link
+    per_arch = traffic if isinstance(traffic, dict) else \
+        {a: traffic for a in archs}
+    missing = set(archs) - set(per_arch)
+    if missing:
+        raise ValueError(f"fleet_capacity_sweep: no traffic model for "
+                         f"{sorted(missing)[:3]}")
+
+    if stage_tables is None:
+        hw = sorted({(p.h, p.w) for f in fleets for p in f.pools})
+        tps = sorted({p.tp for f in fleets for p in f.pools})
+        stage_tables = build_stage_tables(archs, hw=hw, tps=tps,
+                                          backend=backend,
+                                          **(lattices or {}), **model_kw)
+
+    A, F = len(archs), len(fleets)
+    qps = np.zeros((A, F))
+    ept = np.zeros((A, F))
+    good = np.zeros((A, F))
+    summaries: List[List[dict]] = []
+    plans: List[List[list]] = []
+    for a, arch in enumerate(archs):
+        row, prow = [], []
+        for f, fleet in enumerate(fleets):
+            ft, pl = resolve_fleet(stage_tables, arch, fleet, link)
+            cfg = dataclasses.replace(sim, routing=fleet.routing)
+            q, summ = fleet_max_sustainable_qps(
+                ft, per_arch[arch], slo, cfg=cfg,
+                n_requests=n_requests, seed=seed)
+            qps[a, f] = q
+            ept[a, f] = summ["energy_per_token"]
+            good[a, f] = summ.get("goodput_qps", 0.0)
+            row.append(summ)
+            prow.append(pl)
+        summaries.append(row)
+        plans.append(prow)
+    return FleetSweepResult(archs=archs, fleets=fleets, slo=slo,
+                            max_qps=qps, energy_per_token=ept,
+                            goodput_qps=good, summaries=summaries,
+                            plans=plans)
+
+
+def robust_fleet_config(sweep: FleetSweepResult,
+                        weights: Optional[Dict[str, float]] = None):
+    """Fig. 5's robustness normalization over fleet compositions: min-max
+    normalize (energy_per_token, 1/max_qps) per ARCH across the
+    composition list, average with the traffic-mix weights, Pareto, then
+    the normalized winner. Like the other robust_* variants an explicit
+    `weights` dict must cover the swept archs exactly.
+    Returns (fleets, F, mask, winner_idx)."""
+    F, mask, winner = _robust_mix_frontier(
+        sweep.archs, sweep.max_qps, sweep.energy_per_token, weights,
+        "robust_fleet_config")
+    return sweep.fleets, F, mask, winner

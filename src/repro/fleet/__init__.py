@@ -1,0 +1,38 @@
+"""Fleet-scale serving: partition full-model graphs across heterogeneous
+array pools with interconnect-aware capacity planning.
+
+    interconnect  link model (bits/cycle, hop latency, Eq. 1-relative
+                  energy per word) pricing activation transfers at
+                  partition boundaries; FREE_LINK is the paper's
+                  `multi_array` idealization (the differential anchor)
+    partition     per-block stage tables from ONE fused dse_eval_batched
+                  dispatch over (block kind, tp, lattice) x (h, w); DP
+                  layer-contiguous pipeline splits; tensor-parallel
+                  head/column splits with collective wire terms; the
+                  exact GPipe fill-drain recurrence; synthesized
+                  server-level CostTables
+    sim           multi-server fleet replay: round-robin / join-shortest-
+                  queue routing, prefill/decode disaggregation with KV
+                  shipping over the link, O(events) per server
+
+The fleet composition DSE lives in `core.dse.fleet_capacity_sweep`
+(max QPS under an SLO per fleet composition under an iso-PE budget) and
+`core.dse.robust_fleet_config` (Fig. 5's normalization over a traffic
+mix).
+"""
+from repro.fleet.interconnect import (DEFAULT_LINK, FREE_LINK,  # noqa
+                                      LinkModel, allgather_bits,
+                                      cut_transfer, ring_allreduce_bits)
+from repro.fleet.partition import (PartitionedServer, PipelinePlan,  # noqa
+                                   StageTables, StageTableSet,
+                                   arch_block_workloads, block_plan,
+                                   block_workloads, brute_force_split,
+                                   bubble_fraction, build_stage_tables,
+                                   dp_pipeline_split,
+                                   partition_server_table,
+                                   pipeline_pass_cycles,
+                                   tp_parallel_metrics, tp_split_workloads)
+from repro.fleet.sim import (ROUTING, FleetResult, FleetSimConfig,  # noqa
+                             FleetTables, fleet_max_sustainable_qps,
+                             fleet_saturation_qps, route_requests,
+                             simulate_fleet)

@@ -1,0 +1,107 @@
+"""Inter-array link model: the first-class cost of leaving one array.
+
+The paper's `multi_array` dataflow (core/model_core.py) models P
+independent arrays with a FREE interconnect — the scale-out regime
+SCALE-Sim explicitly leaves to external modeling. A fleet that pipelines
+or tensor-partitions a model across arrays pays for every activation that
+crosses a partition boundary, in three currencies:
+
+  * serialization time  — `bits / bits_per_cycle` (link width),
+  * hop latency         — `hop_cycles` per traversal (serdes + switch),
+  * energy              — Eq. 1-relative, priced per 8-bit reference word
+                          exactly like the DRAM spill term
+                          (`core.model_core.DRAM_COST_PER_WORD`), so link
+                          traffic lands in the same unit system as every
+                          other movement counter.
+
+`FREE_LINK` (infinite width, zero latency, zero energy) is the model's
+differential anchor: a fleet of P identical arrays over a free link must
+reproduce the paper's `multi_array` closed form exactly (pinned by
+tests/test_fleet.py).
+
+What crosses a boundary comes from `graph.ir.Graph.cut_bits` (any graph
+edge can be priced) or, for the LM stage tables, from the residual-stream
+width (`fleet.partition` cross-checks the two). Collective closed forms
+(`ring_allreduce_bits`, `allgather_bits`) price the tensor-parallel terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.model_core import DRAM_COST_PER_WORD, REF_BITS
+
+# Link width in bits per array cycle. An ICI/NVLink-class board link moves
+# ~50 GB/s against the ~1 GHz array clock of the scoring layer — ~400
+# bits/cycle; 512 keeps the same order with headroom. (DRAM, for
+# comparison, is modeled at 256 bits/cycle in graph/occupancy.py: the
+# board link is faster than the DRAM channel, the network would be
+# slower.)
+LINK_BITS_PER_CYCLE = 512.0
+
+# Per-hop latency in array cycles (serdes + switch traversal, ~0.5 us at
+# the default clock).
+LINK_HOP_CYCLES = 500.0
+
+# Eq. 1-relative cost of moving one REF_BITS word across the link. Eq. 1
+# prices a UB access at 6 and graph/occupancy charges DRAM at
+# DRAM_COST_PER_WORD = 100; an off-package serdes lands above DRAM
+# (Eyeriss-style hierarchy: every level out costs an order more than
+# staying put), so the default is 2x DRAM.
+LINK_COST_PER_WORD = 2.0 * DRAM_COST_PER_WORD
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """One inter-array link class (frozen => hashable => jit-static)."""
+    bits_per_cycle: float = LINK_BITS_PER_CYCLE
+    hop_cycles: float = LINK_HOP_CYCLES
+    cost_per_word: float = LINK_COST_PER_WORD   # Eq. 1-relative / REF_BITS
+
+    def transfer_cycles(self, bits: float, hops: int = 1) -> float:
+        """Cycles to move `bits` across `hops` store-and-forward hops."""
+        if bits <= 0.0:
+            return 0.0
+        ser = 0.0 if math.isinf(self.bits_per_cycle) \
+            else bits / self.bits_per_cycle
+        return hops * self.hop_cycles + ser
+
+    def transfer_energy(self, bits: float) -> float:
+        """Eq. 1-relative energy of moving `bits` once (bit-normalized
+        like every other term: bits / REF_BITS reference words)."""
+        return self.cost_per_word * bits / REF_BITS
+
+
+#: The paper's idealization: P arrays, no interconnect cost at all.
+FREE_LINK = LinkModel(bits_per_cycle=math.inf, hop_cycles=0.0,
+                      cost_per_word=0.0)
+
+#: Board-level link between arrays of one server (pipeline/TP boundaries,
+#: prefill -> decode KV shipping in a disaggregated fleet).
+DEFAULT_LINK = LinkModel()
+
+
+def ring_allreduce_bits(payload_bits: float, n: int) -> float:
+    """Per-rank wire traffic of a ring all-reduce over `n` ranks:
+    2 * (n-1)/n * payload (reduce-scatter + all-gather). 0 for n == 1."""
+    if n <= 1:
+        return 0.0
+    return 2.0 * (n - 1) / n * payload_bits
+
+
+def allgather_bits(payload_bits: float, n: int) -> float:
+    """Per-rank wire traffic of an all-gather of an n-way sharded tensor
+    whose FULL size is `payload_bits`: each rank receives the (n-1)/n it
+    does not hold."""
+    if n <= 1:
+        return 0.0
+    return (n - 1) / n * payload_bits
+
+
+def cut_transfer(link: LinkModel, graph, left, hops: int = 1):
+    """(cycles, energy) of shipping one partition cut of a `graph.ir.Graph`
+    across `link`: prices `Graph.cut_bits(left)` — the materialized root
+    tensors produced in `left` and consumed outside it, each multicast
+    once, output-sink pins excluded."""
+    bits = graph.cut_bits(left)
+    return link.transfer_cycles(bits, hops=hops), link.transfer_energy(bits)

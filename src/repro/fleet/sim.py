@@ -1,0 +1,350 @@
+"""Multi-server fleet replay: routing + per-server O(events) simulation.
+
+`traffic.sim.simulate` replays one request stream against ONE server; a
+fleet is many servers (possibly differently shaped, possibly partitioned —
+any `CostTable`-shaped object works, including the synthesized tables of
+`fleet.partition`) behind a router. Routing happens once, up front, in
+O(n): once each request is pinned to a server, the servers are
+independent, so the replay is the existing event-to-event bulk-advance
+run per server on its sub-trace — a 1M-request fleet replay stays in
+seconds, the acceptance bar of the fleet subsystem.
+
+Routing policies:
+
+  * ``round_robin`` — request i to server i mod K (exact, stateless);
+  * ``jsq``         — join-shortest-queue on a work-conserving backlog
+    estimate: each server's busy-until clock advances by the request's
+    estimated service seconds (prefill + mean decode steps, from the
+    server's own cost table) divided by its slot count. The estimate
+    prices heterogeneous servers correctly (a 256x256 server drains
+    faster than a 64x64 one), which plain round-robin cannot.
+
+Disaggregated fleets (`FleetTables` with `prefill` and `decode` pools)
+split the two phases onto differently-shaped arrays, the
+prefill/decode-disaggregation deployment pattern: prompts run FIFO on the
+prefill pool (each prefill is exclusive, exactly the `prefill_first`
+admission cost), the built KV cache ships to a decode server over the
+fleet link (priced in time and Eq. 1 energy by `fleet.interconnect`), and
+the decode pool replays with zero-cost prefill — the KV residency still
+counts, so finite-UB spill behaves identically.
+
+`FleetResult` carries the same per-request/aggregate fields as
+`traffic.sim.SimResult`, so `traffic.slo.summarize`/`meets_slo` and the
+capacity bisection work on fleets unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.fleet.interconnect import DEFAULT_LINK, LinkModel
+from repro.traffic.sim import SimConfig, SimResult, simulate
+from repro.traffic.slo import SLO, meets_slo, saturation_qps, summarize
+from repro.traffic.workload import RequestTrace, TrafficModel
+
+ROUTING = ("round_robin", "jsq")
+
+
+@dataclasses.dataclass
+class FleetTables:
+    """A concrete runnable fleet: per-server cost tables by role.
+
+    Either `mixed` alone (every server does both phases) or `prefill` +
+    `decode` pools (disaggregated serving); mixing both layouts in one
+    fleet is rejected — route-then-simulate has no meaning for a request
+    that could either stay put or migrate."""
+    mixed: List = dataclasses.field(default_factory=list)
+    prefill: List = dataclasses.field(default_factory=list)
+    decode: List = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if self.mixed and (self.prefill or self.decode):
+            raise ValueError("a fleet is either mixed or disaggregated, "
+                             "not both")
+        if bool(self.prefill) != bool(self.decode):
+            raise ValueError("disaggregated fleets need BOTH prefill and "
+                             "decode pools")
+        if not (self.mixed or self.prefill):
+            raise ValueError("empty fleet")
+
+    @property
+    def disaggregated(self) -> bool:
+        return bool(self.prefill)
+
+    @property
+    def n_servers(self) -> int:
+        return len(self.mixed) + len(self.prefill) + len(self.decode)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSimConfig:
+    """Fleet plant: routing policy + per-server engine + KV-shipping link."""
+    routing: str = "round_robin"
+    server: SimConfig = SimConfig()
+    kv_link: LinkModel = DEFAULT_LINK    # prefill -> decode cache shipping
+
+    def __post_init__(self):
+        if self.routing not in ROUTING:
+            raise ValueError(
+                f"unknown routing {self.routing!r} (have {ROUTING})")
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Fleet-level replay accounting; field names mirror `SimResult` so
+    `traffic.slo.summarize` consumes either."""
+    n: int
+    arch: str
+    h: int
+    w: int
+    policy: str
+    slots: int
+    ttft_s: np.ndarray
+    tpot_s: np.ndarray
+    sim_seconds: float
+    wall_seconds: float
+    offered_qps: float
+    tokens_out: int
+    decode_steps: int
+    decode_seconds: float
+    prefill_seconds: float
+    spill_seconds: float
+    max_step_seconds: float
+    energy_eq1: float
+    # fleet extras
+    routing: str = "round_robin"
+    n_servers: int = 1
+    disaggregated: bool = False
+    link_seconds: float = 0.0        # total KV-shipping serialization time
+    link_energy: float = 0.0
+    per_server: List[SimResult] = dataclasses.field(default_factory=list)
+
+    @property
+    def energy_per_token(self) -> float:
+        return self.energy_eq1 / max(self.tokens_out, 1)
+
+    @property
+    def requests_per_wall_sec(self) -> float:
+        return self.n / max(self.wall_seconds, 1e-12)
+
+
+class _DecodeOnlyTable:
+    """CostTable proxy whose prefill is free: the decode pool of a
+    disaggregated fleet receives requests whose prompt was already
+    processed elsewhere — the KV residency (and its spill) remains, the
+    prefill compute does not. `prefill_cycles` is zeroed too so the JSQ
+    backlog estimate prices these servers by the work they actually do."""
+    __slots__ = ("_t",)
+
+    def __init__(self, table):
+        self._t = table
+
+    def prefill(self, prompt_len):
+        return 0.0, 0.0
+
+    @property
+    def prefill_cycles(self):
+        return [0.0] * len(self._t.prefill_cycles)
+
+    def __getattr__(self, name):
+        return getattr(self._t, name)
+
+
+def _est_service_seconds(table, plen: np.ndarray, olen: np.ndarray,
+                         cfg: SimConfig, phase: str = "both") -> np.ndarray:
+    """(n,) estimated exclusive service seconds per request on `table`
+    (prefill + output tokens at the mean decode-step cost); the JSQ
+    backlog currency. `phase="prefill"` keeps only the prompt term (the
+    prefill pool of a disaggregated fleet never decodes). Two lattice
+    lookups per server, vectorized by linear interpolation — not per
+    request."""
+    pc = np.interp(plen.astype(np.float64),
+                   np.asarray(table.prompt_lattice),
+                   np.asarray(table.prefill_cycles))
+    if phase == "prefill":
+        return pc / cfg.clock_hz
+    kv_mid = float(np.mean(plen) + 0.5 * np.mean(olen))
+    step = table.decode_step(cfg.slots, kv_mid)
+    return (pc + olen.astype(np.float64) * step) / cfg.clock_hz
+
+
+def route_requests(trace: RequestTrace, tables: Sequence,
+                   cfg: FleetSimConfig, phase: str = "both"
+                   ) -> List[np.ndarray]:
+    """Per-server request-index arrays (each sorted, so every sub-trace is
+    a valid `RequestTrace`)."""
+    n, k = len(trace), len(tables)
+    if k == 1:
+        return [np.arange(n)]
+    if cfg.routing == "round_robin":
+        return [np.arange(i, n, k) for i in range(k)]
+    # jsq: argmin of work-conserving busy-until estimates
+    est = np.stack([_est_service_seconds(t, trace.prompt_len,
+                                         trace.output_len, cfg.server,
+                                         phase=phase)
+                    for t in tables])              # (k, n)
+    slots = float(cfg.server.slots)
+    arr = trace.arrival_s
+    busy = np.zeros(k)
+    out: List[List[int]] = [[] for _ in range(k)]
+    for i in range(n):
+        t = arr[i]
+        s = int(np.argmin(np.maximum(busy, t)))
+        busy[s] = max(busy[s], t) + est[s, i] / slots
+        out[s].append(i)
+    return [np.asarray(ix, np.int64) for ix in out]
+
+
+def _sub_trace(trace: RequestTrace, idx: np.ndarray) -> RequestTrace:
+    return RequestTrace(arrival_s=trace.arrival_s[idx],
+                        prompt_len=trace.prompt_len[idx],
+                        output_len=trace.output_len[idx])
+
+
+def simulate_fleet(fleet: FleetTables, trace: RequestTrace,
+                   cfg: FleetSimConfig = FleetSimConfig()) -> FleetResult:
+    """Replay `trace` on a fleet. Deterministic for fixed inputs, like the
+    single-server simulator. Dispatches on the fleet layout."""
+    if fleet.disaggregated:
+        return _simulate_disaggregated(fleet, trace, cfg)
+    t_wall = time.perf_counter()
+    parts = route_requests(trace, fleet.mixed, cfg)
+    n = len(trace)
+    ttft = np.full(n, np.nan)
+    tpot = np.full(n, np.nan)
+    res: List[SimResult] = []
+    for table, idx in zip(fleet.mixed, parts):
+        if not len(idx):
+            continue
+        r = simulate(table, _sub_trace(trace, idx), cfg.server)
+        ttft[idx] = r.ttft_s
+        tpot[idx] = r.tpot_s
+        res.append(r)
+    lead = fleet.mixed[0]
+    return FleetResult(
+        n=n, arch=lead.arch, h=lead.h, w=lead.w, policy=cfg.server.policy,
+        slots=cfg.server.slots, ttft_s=ttft, tpot_s=tpot,
+        sim_seconds=max((r.sim_seconds for r in res), default=0.0),
+        wall_seconds=time.perf_counter() - t_wall,
+        offered_qps=trace.offered_qps,
+        tokens_out=sum(r.tokens_out for r in res),
+        decode_steps=sum(r.decode_steps for r in res),
+        decode_seconds=sum(r.decode_seconds for r in res),
+        prefill_seconds=sum(r.prefill_seconds for r in res),
+        spill_seconds=sum(r.spill_seconds for r in res),
+        max_step_seconds=max((r.max_step_seconds for r in res),
+                             default=0.0),
+        energy_eq1=sum(r.energy_eq1 for r in res),
+        routing=cfg.routing, n_servers=len(fleet.mixed),
+        per_server=res)
+
+
+def _simulate_disaggregated(fleet: FleetTables, trace: RequestTrace,
+                            cfg: FleetSimConfig) -> FleetResult:
+    """Prefill pool (FIFO, exclusive prompts) -> KV ship -> decode pool."""
+    t_wall = time.perf_counter()
+    n = len(trace)
+    clock = cfg.server.clock_hz
+
+    # --- phase 1: prompts on the prefill pool -----------------------------
+    parts = route_requests(trace, fleet.prefill, cfg, phase="prefill")
+    done = np.empty(n)
+    prefill_secs = 0.0
+    energy = 0.0
+    for table, idx in zip(fleet.prefill, parts):
+        free = 0.0
+        for i in idx:
+            pc, pen = table.prefill(int(trace.prompt_len[i]))
+            free = max(free, float(trace.arrival_s[i])) + pc / clock
+            done[i] = free
+            prefill_secs += pc / clock
+            energy += pen
+    # --- KV shipping over the fleet link ----------------------------------
+    kvb = fleet.decode[0].kv_bits_per_token
+    bits = trace.prompt_len.astype(np.float64) * kvb
+    ship = np.asarray([cfg.kv_link.transfer_cycles(b) for b in bits]) / clock
+    link_secs = float(ship.sum())
+    link_energy = float(sum(cfg.kv_link.transfer_energy(b) for b in bits))
+    energy += link_energy
+    ready = done + ship
+
+    # --- phase 2: decode pool (prefill-free replay) -----------------------
+    order = np.argsort(ready, kind="stable")
+    dec_trace = RequestTrace(arrival_s=ready[order],
+                             prompt_len=trace.prompt_len[order],
+                             output_len=trace.output_len[order])
+    dec_tables = [_DecodeOnlyTable(t) for t in fleet.decode]
+    dparts = route_requests(dec_trace, dec_tables, cfg)
+    ttft = np.full(n, np.nan)
+    tpot = np.full(n, np.nan)
+    res: List[SimResult] = []
+    for table, idx in zip(dec_tables, dparts):
+        if not len(idx):
+            continue
+        r = simulate(table, _sub_trace(dec_trace, idx), cfg.server)
+        rid = order[idx]
+        # total TTFT = prefill + shipping + decode-slot queueing; the
+        # decode-side "ttft" is pure wait (its prefill is free)
+        ttft[rid] = (ready[rid] - trace.arrival_s[rid]) + r.ttft_s
+        tpot[rid] = r.tpot_s
+        res.append(r)
+    lead = fleet.decode[0]
+    return FleetResult(
+        n=n, arch=lead.arch, h=lead.h, w=lead.w, policy=cfg.server.policy,
+        slots=cfg.server.slots, ttft_s=ttft, tpot_s=tpot,
+        sim_seconds=max((r.sim_seconds for r in res), default=0.0),
+        wall_seconds=time.perf_counter() - t_wall,
+        offered_qps=trace.offered_qps,
+        tokens_out=sum(r.tokens_out for r in res),
+        decode_steps=sum(r.decode_steps for r in res),
+        decode_seconds=sum(r.decode_seconds for r in res),
+        prefill_seconds=prefill_secs,
+        spill_seconds=sum(r.spill_seconds for r in res),
+        max_step_seconds=max((r.max_step_seconds for r in res),
+                             default=0.0),
+        energy_eq1=energy + sum(r.energy_eq1 for r in res),
+        routing=cfg.routing,
+        n_servers=fleet.n_servers, disaggregated=True,
+        link_seconds=link_secs, link_energy=link_energy,
+        per_server=res)
+
+
+# ----------------------------------------------------- capacity bisection --
+
+def fleet_saturation_qps(fleet: FleetTables, traffic: TrafficModel,
+                         cfg: FleetSimConfig) -> float:
+    """Closed-form fleet request-rate ceiling: the sum of every decode-
+    capable server's saturated rate (prefill servers bound TTFT, not the
+    steady-state token stream)."""
+    pool = fleet.decode if fleet.disaggregated else fleet.mixed
+    return sum(saturation_qps(t, traffic, cfg.server) for t in pool)
+
+
+def fleet_max_sustainable_qps(fleet: FleetTables, traffic: TrafficModel,
+                              slo: SLO,
+                              cfg: FleetSimConfig = FleetSimConfig(),
+                              n_requests: int = 1200, seed: int = 0,
+                              iters: int = 9, paired: bool = True
+                              ) -> Tuple[float, Dict]:
+    """`traffic.slo.max_sustainable_qps`, fleet edition: bisect the
+    largest arrival rate whose fleet replay meets `slo`. Probes draw
+    component-paired traces by default (`TrafficModel.sample(paired=True)`
+    — common random numbers), so capacities of different fleet
+    compositions under one mix are compared on identical length draws."""
+    from repro.traffic.slo import bisect_max_qps
+
+    def probe(qps):
+        res = simulate_fleet(
+            fleet, traffic.with_rate(qps).sample(n_requests, seed,
+                                                 paired=paired), cfg)
+        return meets_slo(res, slo), res
+
+    q, best_res = bisect_max_qps(
+        probe, 2.0 * fleet_saturation_qps(fleet, traffic, cfg), iters)
+    out = summarize(best_res, slo)
+    out["n_servers"] = fleet.n_servers
+    out["disaggregated"] = fleet.disaggregated
+    return q, out

@@ -146,6 +146,41 @@ class Graph:
                     roots.append(r)
         return tuple(roots)
 
+    def edge_bits(self, src: str, dst: str) -> float:
+        """Bits that cross a partition boundary when `src` and `dst` land
+        on different devices: the materialized storage roots backing src's
+        output (a view ships its underlying tensors, not the virtual
+        concatenation). Edges INTO a non-materializing `output` sink cost
+        nothing — the sink only pins carried state (KV caches) that stays
+        resident on whatever device produced it."""
+        if src not in self._preds[dst]:
+            raise ValueError(f"no edge {src!r} -> {dst!r} (edges are "
+                             "directed producer -> consumer)")
+        if self._by_name[dst].kind == "output":
+            return 0.0
+        return float(sum(self._by_name[r].out.size_bits
+                         for r in self.storage_roots(src)))
+
+    def cut_bits(self, left: Iterable[str]) -> float:
+        """Total bits crossing the cut from `left` to the rest of the
+        graph: every materialized root tensor produced inside `left` with
+        at least one consumer outside it ships ONCE (a tensor consumed by
+        several right-side nodes is multicast, not re-sent per edge).
+        `output`-sink consumers are excluded, same as :meth:`edge_bits` —
+        this is the activation traffic a pipeline boundary pays, which the
+        fleet interconnect model (repro.fleet.interconnect) prices in
+        cycles and Eq. 1-relative energy."""
+        left = set(left)
+        shipped: set = set()
+        for n in self.nodes:
+            if n.name in left or n.kind == "output":
+                continue
+            for p in self._preds[n.name]:
+                for r in self.storage_roots(p):
+                    if r in left:
+                        shipped.add(r)
+        return float(sum(self._by_name[r].out.size_bits for r in shipped))
+
     def as_chain(self) -> "Graph":
         """Connectivity-ablated copy: the same materializing nodes in
         insertion order, linked into a pure chain (joins/views dropped).

@@ -83,11 +83,13 @@ def saturation_qps(table: CostTable, traffic: TrafficModel,
     """Closed-form ceiling on the sustainable request rate: all slots busy
     decoding at the traffic's typical span, divided by the mean tokens one
     request costs. The bisection uses this to bracket from above — no
-    design can serve requests faster than its saturated decode rate."""
-    span = traffic.prompt_median + 0.5 * traffic.output_median
+    design can serve requests faster than its saturated decode rate.
+    Typical lengths come from the ACTIVE distribution (`typical_*`), so a
+    bucket mix does not bracket off the unused median fields."""
+    span = traffic.typical_prompt + 0.5 * traffic.typical_output
     step_cyc = table.decode_step(sim.slots, span)
     tok_per_sec = sim.slots * sim.clock_hz / max(step_cyc, 1.0)
-    return tok_per_sec / max(traffic.output_median, 1.0)
+    return tok_per_sec / max(traffic.typical_output, 1.0)
 
 
 # Bracket ceiling for the bisection: when a design point still meets the
@@ -95,6 +97,37 @@ def saturation_qps(table: CostTable, traffic: TrafficModel,
 # its capacity is beyond what that trace length can resolve — report the
 # cap instead of doubling forever.
 QPS_CAP = 1e6
+
+
+def bisect_max_qps(probe, hi: float, iters: int = 9):
+    """Shared bracket-open + bisection over `probe(qps) -> (ok, result)`:
+    the capacity search used by both the single-server and the fleet
+    sweeps (`fleet.sim.fleet_max_sustainable_qps`). `hi` is the initial
+    upper bracket (a saturation estimate; opened by doubling while the
+    probe still passes, up to `QPS_CAP`). Returns (max_qps, result at
+    it) — (0.0, result-at-lowest-probe) when even a near-idle trickle
+    misses."""
+    lo = hi / 1024.0
+    ok_lo, res_lo = probe(lo)
+    if not ok_lo:
+        return 0.0, res_lo
+    ok_hi, _ = probe(hi)
+    while ok_hi:                       # open the bracket (a short probe
+        lo, hi = hi, 2.0 * hi          # trace can ride out transient
+        if hi > QPS_CAP:               # overload past the estimate)
+            break
+        ok_hi, _ = probe(hi)
+    best, best_res = lo, None
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        ok, res = probe(mid)
+        if ok:
+            lo, best, best_res = mid, mid, res
+        else:
+            hi = mid
+    if best_res is None:
+        _, best_res = probe(best)
+    return min(best, QPS_CAP), best_res
 
 
 def max_sustainable_qps(table: CostTable, traffic: TrafficModel, slo: SLO,
@@ -115,25 +148,6 @@ def max_sustainable_qps(table: CostTable, traffic: TrafficModel, slo: SLO,
                                                             seed), sim)
         return meets_slo(res, slo), res
 
-    hi = 2.0 * saturation_qps(table, traffic, sim)
-    lo = hi / 1024.0
-    ok_lo, res_lo = probe(lo)
-    if not ok_lo:
-        return 0.0, summarize(res_lo, slo)
-    ok_hi, _ = probe(hi)
-    while ok_hi:                       # open the bracket (a short probe
-        lo, hi = hi, 2.0 * hi          # trace can ride out transient
-        if hi > QPS_CAP:               # overload past the estimate)
-            break
-        ok_hi, _ = probe(hi)
-    best, best_res = lo, None
-    for _ in range(iters):
-        mid = 0.5 * (lo + hi)
-        ok, res = probe(mid)
-        if ok:
-            lo, best, best_res = mid, mid, res
-        else:
-            hi = mid
-    if best_res is None:
-        _, best_res = probe(best)
-    return min(best, QPS_CAP), summarize(best_res, slo)
+    q, best_res = bisect_max_qps(
+        probe, 2.0 * saturation_qps(table, traffic, sim), iters)
+    return q, summarize(best_res, slo)

@@ -167,6 +167,29 @@ class TrafficModel:
     def with_rate(self, rate_qps: float) -> "TrafficModel":
         return dataclasses.replace(self, rate_qps=float(rate_qps))
 
+    def _typical(self, which: str) -> float:
+        dist = getattr(self, f"{which}_dist")
+        if dist == "buckets":
+            b = np.asarray(getattr(self, f"{which}_buckets"), np.float64)
+            p = np.asarray(getattr(self, f"{which}_probs"), np.float64)
+            order = np.argsort(b)
+            cum = np.cumsum(p[order] / p.sum())
+            return float(b[order][np.searchsorted(cum, 0.5)])
+        return float(getattr(self, f"{which}_median"))
+
+    @property
+    def typical_prompt(self) -> float:
+        """Median prompt length UNDER THE ACTIVE distribution — for
+        `buckets` the probability-weighted median of the histogram, not
+        the (unused) `prompt_median` field. The saturation estimate that
+        brackets the SLO bisection reads this, so bucket mixes get a
+        meaningful bracket too."""
+        return self._typical("prompt")
+
+    @property
+    def typical_output(self) -> float:
+        return self._typical("output")
+
     def _lengths(self, which: str, n: int, rng) -> np.ndarray:
         dist = getattr(self, f"{which}_dist")
         if dist == "lognormal":
@@ -182,8 +205,23 @@ class TrafficModel:
             return np.full(n, k, np.int32)
         raise ValueError(f"unknown {which}_dist {dist!r} (have {LENGTHS})")
 
-    def sample(self, n: int, seed: int = 0) -> RequestTrace:
-        rng = np.random.default_rng(seed)
+    def sample(self, n: int, seed: int = 0, *,
+               paired: bool = False) -> RequestTrace:
+        """Draw a trace. With ``paired=False`` (the default, and the
+        byte-stable contract the golden fixtures pin) one generator
+        feeds arrivals then lengths in sequence. With ``paired=True``
+        the arrival process and each length mix draw from INDEPENDENT
+        child streams of `seed` — common random numbers: two models that
+        differ only in their arrival process (a heterogeneous per-arch
+        mix) or rate (the SLO bisection's probes) see the exact same
+        prompt/output length draws, so fleet-vs-single-array and
+        arch-vs-arch comparisons are paired rather than confounded by
+        how much entropy the arrival sampler happened to consume."""
+        if paired:
+            rng, rng_p, rng_o = (np.random.default_rng([seed, k])
+                                 for k in range(3))
+        else:
+            rng = rng_p = rng_o = np.random.default_rng(seed)
         if self.arrival == "poisson":
             arr = poisson_arrivals(self.rate_qps, n, rng)
         elif self.arrival == "mmpp":
@@ -202,5 +240,5 @@ class TrafficModel:
             raise ValueError(
                 f"unknown arrival {self.arrival!r} (have {ARRIVALS})")
         return RequestTrace(arrival_s=np.asarray(arr, np.float64),
-                            prompt_len=self._lengths("prompt", n, rng),
-                            output_len=self._lengths("output", n, rng))
+                            prompt_len=self._lengths("prompt", n, rng_p),
+                            output_len=self._lengths("output", n, rng_o))
