@@ -601,14 +601,98 @@ def kernels():
           f"{len(cfgs)}cfgs_x_{len(layers)}layers")
 
 
+def search_bench(quick: bool = False):
+    """Device-resident search probes, written to BENCH_search.json:
+
+      * the FULL 10-arch x DEFAULT_HW SLO capacity sweep through the
+        lockstep batched bisection vs the per-point sequential search —
+        identical max-QPS tables required, speedup is the tentpole
+        perf-trajectory number (acceptance: >= 10x on one CPU host);
+      * the on-device (jnp, single-jit) NSGA-2 vs the per-generation
+        numpy oracle — bitwise-identical frontiers required;
+      * the gradient design-point refiner: one device dispatch for the
+        whole descent, a handful of exact re-evaluations, improvement
+        over a mid-grid seed.
+    """
+    from repro.core import get_workloads
+    from repro.core.dse import slo_capacity_sweep
+    from repro.core.search import nsga2_device, refine_design_point
+    from repro.core.systolic import analyze_network
+    from repro.traffic import SLO, TrafficModel, build_cost_tables
+
+    # 1. batched vs sequential bisection — full lattice in BOTH modes:
+    # the speedup claim is about the production sweep, not a smoke size
+    ts = build_cost_tables(backend="numpy")
+    tm = TrafficModel()
+    slo = SLO(ttft_s=2.0, tpot_s=0.1)
+    kw = dict(n_requests=1200, seed=0, tables=ts)
+    bat, us_bat = _timeit(
+        lambda: slo_capacity_sweep(tm, slo, search="batched", **kw), n=1)
+    seq, us_seq = _timeit(
+        lambda: slo_capacity_sweep(tm, slo, search="sequential", **kw), n=1)
+    identical = bool(np.array_equal(seq.max_qps, bat.max_qps))
+    n_points = int(np.prod(seq.max_qps.shape))
+    _emit("search_bisect_batched", us_bat,
+          f"{n_points}lanes;identical={identical}")
+    _emit("search_bisect_sequential", us_seq,
+          f"batched_speedup={us_seq / us_bat:.1f}x")
+
+    # 2. on-device NSGA-2 vs the numpy oracle (bitwise)
+    wls = list(get_workloads("alexnet"))
+
+    def eval_fn(pop):
+        h = pop[:, 0].astype(np.float64)
+        w = pop[:, 1].astype(np.float64)
+        m = analyze_network(wls, h, w)
+        return np.stack([np.asarray(m.energy), np.asarray(m.cycles)], 1)
+
+    pop, gens = (32, 12) if quick else (64, 40)
+    bounds = ((16, 256), (16, 256))
+    (Pj, Fj), us_j = _timeit(
+        lambda: nsga2_device(eval_fn, bounds, pop=pop, gens=gens), n=1)
+    (Pn, Fn), us_n = _timeit(
+        lambda: nsga2_device(eval_fn, bounds, pop=pop, gens=gens,
+                             backend="numpy"), n=1)
+    match = bool(np.array_equal(Pj, Pn) and np.array_equal(Fj, Fn))
+    _emit("search_nsga2_jnp", us_j,
+          f"pop={pop};gens={gens};front={len(Pj)};oracle_match={match}")
+    _emit("search_nsga2_numpy", us_n, f"jnp_vs_numpy={us_n / us_j:.2f}x")
+
+    # 3. gradient refiner: whole descent in ONE device dispatch
+    steps = 16 if quick else 48
+    ref, us_r = _timeit(
+        lambda: refine_design_point(wls, (128, 128), steps=steps), n=1)
+    _emit("search_refiner", us_r,
+          f"({ref['seed'][0]},{ref['seed'][1]})->({ref['h']},{ref['w']})"
+          f";improved={ref['improved']}"
+          f";dispatches={ref['device_dispatches']}"
+          f";exact_evals={ref['exact_evals']}")
+    _save("BENCH_search", {
+        "bisect_lanes": n_points,
+        "bisect_sequential_us": us_seq, "bisect_batched_us": us_bat,
+        "bisect_speedup": us_seq / us_bat, "bisect_identical": identical,
+        "nsga2_pop": pop, "nsga2_gens": gens,
+        "nsga2_jnp_us": us_j, "nsga2_numpy_us": us_n,
+        "nsga2_oracle_match": match, "nsga2_front": len(Pj),
+        "refiner_seed": list(ref["seed"]),
+        "refiner_point": [ref["h"], ref["w"]],
+        "refiner_improved": ref["improved"],
+        "refiner_objective": ref["objective"],
+        "refiner_seed_objective": ref["seed_objective"],
+        "refiner_device_dispatches": ref["device_dispatches"],
+        "refiner_exact_evals": ref["exact_evals"],
+        "refiner_steps": ref["steps"],
+    })
+
+
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--quick", action="store_true",
                         help="reduced graph capacity-sweep + serving-"
                              "scenario + traffic + fleet smoke only "
                              "(writes BENCH_graph.json, "
-                             "BENCH_scenarios.json, BENCH_traffic.json "
-                             "and BENCH_fleet.json)")
+                             "BENCH_scenarios.json, BENCH_traffic.json, "
+                             "BENCH_fleet.json and BENCH_search.json)")
     args = parser.parse_args()
     print("name,us_per_call,derived")
     if args.quick:
@@ -616,6 +700,7 @@ def main() -> None:
         scenarios_bench(quick=True)
         traffic_bench(quick=True)
         fleet_bench(quick=True)
+        search_bench(quick=True)
         return
     fig2_resnet_heatmap()
     fig3_pareto()
@@ -626,6 +711,7 @@ def main() -> None:
     scenarios_bench()
     traffic_bench()
     fleet_bench()
+    search_bench()
     connectivity()
     ablations()
     future_work()

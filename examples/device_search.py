@@ -1,0 +1,110 @@
+"""Device-resident search walkthrough: the three fused search loops of
+`core/search.py` on the paper's Fig. 5 robust-configuration task.
+
+1. Lockstep batched capacity bisection (`slo_capacity_sweep(search=...)`)
+   — bit-identical max-QPS tables, one packed replay per round.
+2. Warm-started / on-device NSGA-2 — seeded from the exact grid frontier,
+   jnp evolution bitwise-matched by a numpy oracle.
+3. Gradient design-point refinement of a Fig. 5 robust winner —
+   `jax.grad` over the relaxed closed forms proposes, the exact forms
+   decide.
+
+    PYTHONPATH=src python examples/device_search.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import get_workloads
+from repro.core.dse import pareto_nsga2, robust_config, slo_capacity_sweep
+from repro.core.search import nsga2_device, refine_design_point
+from repro.core.systolic import analyze_network
+from repro.traffic import SLO, TrafficModel, build_cost_tables
+
+
+def batched_capacity_sweep():
+    print("=== 1. lockstep batched capacity bisection ===")
+    archs = ["h2o-danube-3-4b", "xlstm-125m", "qwen3-14b"]
+    hw = ((64, 64), (128, 128), (64, 256))
+    tables = build_cost_tables(archs=archs, hw=hw, backend="numpy")
+    tm = TrafficModel()
+    slo = SLO(ttft_s=2.0, tpot_s=0.1)
+    kw = dict(archs=archs, hw=hw, n_requests=600, seed=0, tables=tables)
+    t0 = time.perf_counter()
+    bat = slo_capacity_sweep(tm, slo, search="batched", **kw)
+    t_b = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    seq = slo_capacity_sweep(tm, slo, search="sequential", **kw)
+    t_s = time.perf_counter() - t0
+    assert np.array_equal(seq.max_qps, bat.max_qps)
+    print(f"  {bat.max_qps.size} design points: sequential {t_s:.2f}s, "
+          f"batched {t_b:.2f}s ({t_s / t_b:.1f}x), tables bit-identical")
+    for a in archs:
+        h, w, q = bat.best(a)
+        print(f"  {a:>16}: best ({h:>3},{w:>3}) sustains {q:7.2f} qps")
+
+
+def warm_started_nsga2():
+    print("\n=== 2. warm-started NSGA-2 (jnp device == numpy oracle) ===")
+    wls = get_workloads("alexnet")
+    P0, F0 = pareto_nsga2(wls, pop=48, gens=25, seed=0)
+    Pw, Fw = pareto_nsga2(wls, pop=48, gens=25, seed=0, warm_start="grid")
+    dominated = all(((Fw <= f).all(1)).any() for f in F0)
+    print(f"  cold frontier {len(P0)} pts; warm (grid-seeded) {len(Pw)} pts"
+          f"; warm dominates-or-matches cold: {dominated}")
+
+    # the on-device engine: one jitted fori_loop for the whole evolution,
+    # transcribed bitwise by a numpy oracle
+    def eval_fn(pop):
+        h = pop[:, 0].astype(np.float64)
+        w = pop[:, 1].astype(np.float64)
+        m = analyze_network(list(wls), h, w)
+        return np.stack([np.asarray(m.energy), np.asarray(m.cycles)], 1)
+
+    bounds = ((16, 256), (16, 256))
+    Pj, Fj = nsga2_device(eval_fn, bounds, pop=48, gens=25, seed=0)
+    Pn, Fn = nsga2_device(eval_fn, bounds, pop=48, gens=25, seed=0,
+                          backend="numpy")
+    print(f"  device engine frontier ({len(Pj)} pts) matches its numpy "
+          f"oracle bitwise: "
+          f"{np.array_equal(Pj, Pn) and np.array_equal(Fj, Fn)}")
+
+
+def refine_fig5_winner():
+    print("\n=== 3. gradient refinement of a Fig. 5 robust winner ===")
+    models = {m: get_workloads(m) for m in ("alexnet", "vgg16",
+                                            "googlenet")}
+    cfgs, F, mask = robust_config(models)
+    winner = tuple(int(v) for v in cfgs[mask][np.argmin(F[mask].sum(1))])
+    print(f"  grid robust winner: {winner}")
+
+    # 3a. the winner is a genuine optimum: the refiner confirms it
+    r = refine_design_point(models, winner, objectives=("energy",),
+                            steps=48)
+    tag = "improved" if r["improved"] else "confirmed (already optimal)"
+    print(f"  refine winner  : ({r['seed'][0]},{r['seed'][1]}) -> "
+          f"({r['h']},{r['w']}) — {tag}")
+
+    # 3b. perturb it off-grid-optimum: the gradient pulls it back toward
+    # the paper's tall-narrow energy regime
+    bad = (winner[0] - 16, winner[1] + 8)
+    r = refine_design_point(models, bad, objectives=("energy",), steps=48)
+    tag = "improved" if r["improved"] else "confirmed"
+    print(f"  refine perturbed: ({r['seed'][0]},{r['seed'][1]}) -> "
+          f"({r['h']},{r['w']}) — {tag}")
+    print(f"  normalized exact objective {r['seed_objective']:.4f} -> "
+          f"{r['objective']:.4f} | 1 device dispatch, "
+          f"{r['exact_evals']} exact re-evaluations")
+    for m in models:
+        o = r["objectives"][m]
+        print(f"    {m:>10}: energy {o['energy']:.3e}")
+
+
+def main():
+    batched_capacity_sweep()
+    warm_started_nsga2()
+    refine_fig5_winner()
+
+
+if __name__ == "__main__":
+    main()

@@ -197,17 +197,25 @@ _NSGA2_KEYS = frozenset(
 
 
 def pareto_nsga2(workloads, objectives=("energy", "cycles"),
-                 model_kw: Optional[dict] = None, **kw):
+                 model_kw: Optional[dict] = None, engine: str = "numpy",
+                 **kw):
     """NSGA-II frontier with full model-option support.
 
-    Optimizer knobs (`pop`, `gens`, `seed`, `quantum`) go to `nsga2`; every
-    other keyword — `precision=`, `dataflow=`, `act_reread=`, ... — is
-    threaded through to `analyze_network`, so the evolved frontier reflects
-    the same accounting as the exact grid. `model_kw` may also be passed
-    explicitly."""
+    Optimizer knobs (`pop`, `gens`, `seed`, `quantum`, `warm_start`) go to
+    `nsga2`; every other keyword — `precision=`, `dataflow=`,
+    `act_reread=`, ... — is threaded through to `analyze_network`, so the
+    evolved frontier reflects the same accounting as the exact grid.
+    `model_kw` may also be passed explicitly.
+
+    `warm_start="grid"` seeds the initial population with the EXACT grid
+    Pareto points (one grid sweep + `pareto_grid`), so the evolved
+    frontier starts at — and can only improve on — the exact one.
+    `engine="device"` runs the fixed-shape on-device NSGA-2
+    (`core.search.nsga2_device`, one jit dispatch for the whole
+    evolution) instead of the per-generation numpy loop."""
     model_kw = dict(model_kw or {})
     for k in list(kw):
-        if k not in _NSGA2_KEYS:
+        if k not in _NSGA2_KEYS and k != "warm_start":
             model_kw[k] = kw.pop(k)
 
     def eval_fn(pop):
@@ -220,7 +228,21 @@ def pareto_nsga2(workloads, objectives=("energy", "cycles"),
                  "utilization": -m.utilization}[o]
             cols.append(np.asarray(v, np.float64))
         return np.stack(cols, axis=1)
-    return nsga2(eval_fn, ((GRID_LO, GRID_HI), (GRID_LO, GRID_HI)), **kw)
+
+    if isinstance(kw.get("warm_start"), str):
+        if kw["warm_start"] != "grid":
+            raise ValueError(f"unknown warm_start {kw['warm_start']!r} "
+                             "(have 'grid' or an (m, 2) genome array)")
+        sweep = grid_sweep(list(workloads), backend="numpy", **model_kw)
+        kw["warm_start"] = pareto_grid(sweep, objectives)[0]
+
+    bounds = ((GRID_LO, GRID_HI), (GRID_LO, GRID_HI))
+    if engine == "device":
+        from repro.core.search import nsga2_device
+        return nsga2_device(eval_fn, bounds, **kw)
+    if engine != "numpy":
+        raise ValueError(f"unknown engine {engine!r} (have numpy|device)")
+    return nsga2(eval_fn, bounds, **kw)
 
 
 def _normalize(x):
@@ -519,7 +541,8 @@ class SLOSweepResult:
 def slo_capacity_sweep(traffic, slo, archs: Optional[Sequence[str]] = None,
                        hw=None, sim=None, n_requests: int = 1200,
                        seed: int = 0, backend: str = "pallas",
-                       tables=None, **model_kw) -> SLOSweepResult:
+                       tables=None, search: str = "auto",
+                       **model_kw) -> SLOSweepResult:
     """The SLO-aware capacity design space: which (h, w) sustains how much
     traffic for each architecture.
 
@@ -529,12 +552,22 @@ def slo_capacity_sweep(traffic, slo, archs: Optional[Sequence[str]] = None,
     via `tables`), then each (arch, h, w) point is bisected for its max
     sustainable QPS on the discrete-event simulator — the Systimator-style
     "meets the deadline at rate X" answer rather than a scalar ranking.
+
+    `search` picks the bisection engine: "sequential" runs one scalar
+    bisection per point; "auto"/"batched" advance every point in lockstep
+    with one packed multi-lane replay per round (`core.search`). The two
+    paths are bit-identical — same probe sequences, same replays — the
+    batched one just runs an order of magnitude faster.
     """
     from repro.configs.base import list_archs
+    from repro.core.search import batched_max_sustainable_qps
     from repro.traffic.cost_table import DEFAULT_HW, build_cost_tables
     from repro.traffic.sim import SimConfig
     from repro.traffic.slo import max_sustainable_qps
 
+    if search not in ("auto", "batched", "sequential"):
+        raise ValueError(f"unknown search {search!r} "
+                         "(have auto|batched|sequential)")
     archs = list(list_archs()) if archs is None else list(archs)
     hw = list(DEFAULT_HW) if hw is None else [tuple(map(int, p)) for p in hw]
     sim = SimConfig() if sim is None else sim
@@ -552,12 +585,22 @@ def slo_capacity_sweep(traffic, slo, archs: Optional[Sequence[str]] = None,
     ept = np.zeros((A, C))
     good = np.zeros((A, C))
     summaries: List[List[dict]] = []
-    for a, arch in enumerate(archs):
+    if search == "sequential":
+        points = [
+            [max_sustainable_qps(tables.table(arch, h, w), per_arch[arch],
+                                 slo, sim=sim, n_requests=n_requests,
+                                 seed=seed) for h, w in hw]
+            for arch in archs]
+    else:
+        flat = batched_max_sustainable_qps(
+            [tables.table(arch, h, w) for arch in archs for h, w in hw],
+            [per_arch[arch] for arch in archs for _ in hw],
+            slo, sim=sim, n_requests=n_requests, seed=seed)
+        points = [flat[a * C:(a + 1) * C] for a in range(A)]
+    for a in range(A):
         row = []
-        for c, (h, w) in enumerate(hw):
-            q, summ = max_sustainable_qps(
-                tables.table(arch, h, w), per_arch[arch], slo, sim=sim,
-                n_requests=n_requests, seed=seed)
+        for c in range(C):
+            q, summ = points[a][c]
             qps[a, c] = q
             ept[a, c] = summ["energy_per_token"]
             good[a, c] = summ.get("goodput_qps", 0.0)
@@ -746,6 +789,7 @@ def fleet_capacity_sweep(traffic, slo, fleets: Sequence[FleetSpec],
                          seed: int = 0, backend: str = "pallas",
                          stage_tables=None, lattices: Optional[dict] = None,
                          pe_budget: Optional[int] = None,
+                         search: str = "auto",
                          **model_kw) -> FleetSweepResult:
     """The fleet-composition design space, end to end: every fleet's
     servers are partitioned (DP pipeline splits + tensor splits) over
@@ -759,12 +803,20 @@ def fleet_capacity_sweep(traffic, slo, fleets: Sequence[FleetSpec],
     overridden per FleetSpec; `link` the inter-array LinkModel (pipeline
     boundaries, TP collectives and disaggregated KV shipping);
     `pe_budget`, when given, rejects compositions over budget (iso-PE
-    discipline enforced, not assumed)."""
+    discipline enforced, not assumed). `search` picks the bisection
+    engine exactly as in `slo_capacity_sweep` ("auto"/"batched": one
+    lockstep bisection over every (arch, fleet) lane with the per-server
+    replays packed into one multi-lane engine; bit-identical to
+    "sequential")."""
     from repro.configs.base import list_archs
+    from repro.core.search import batched_fleet_max_sustainable_qps
     from repro.fleet.interconnect import DEFAULT_LINK
     from repro.fleet.partition import build_stage_tables
     from repro.fleet.sim import (FleetSimConfig, fleet_max_sustainable_qps)
 
+    if search not in ("auto", "batched", "sequential"):
+        raise ValueError(f"unknown search {search!r} "
+                         "(have auto|batched|sequential)")
     archs = list(list_archs()) if archs is None else list(archs)
     fleets = list(fleets)
     if not fleets:
@@ -796,19 +848,33 @@ def fleet_capacity_sweep(traffic, slo, fleets: Sequence[FleetSpec],
     good = np.zeros((A, F))
     summaries: List[List[dict]] = []
     plans: List[List[list]] = []
-    for a, arch in enumerate(archs):
+    resolved = [[resolve_fleet(stage_tables, arch, fleet, link)
+                 for fleet in fleets] for arch in archs]
+    lane_cfgs = [dataclasses.replace(sim, routing=fleet.routing)
+                 for fleet in fleets]
+    if search == "sequential":
+        points = [
+            [fleet_max_sustainable_qps(resolved[a][f][0], per_arch[arch],
+                                       slo, cfg=lane_cfgs[f],
+                                       n_requests=n_requests, seed=seed)
+             for f in range(F)]
+            for a, arch in enumerate(archs)]
+    else:
+        flat = batched_fleet_max_sustainable_qps(
+            [resolved[a][f][0] for a in range(A) for f in range(F)],
+            [per_arch[arch] for arch in archs for _ in fleets],
+            slo, [lane_cfgs[f] for _ in archs for f in range(F)],
+            n_requests=n_requests, seed=seed)
+        points = [flat[a * F:(a + 1) * F] for a in range(A)]
+    for a in range(A):
         row, prow = [], []
-        for f, fleet in enumerate(fleets):
-            ft, pl = resolve_fleet(stage_tables, arch, fleet, link)
-            cfg = dataclasses.replace(sim, routing=fleet.routing)
-            q, summ = fleet_max_sustainable_qps(
-                ft, per_arch[arch], slo, cfg=cfg,
-                n_requests=n_requests, seed=seed)
+        for f in range(F):
+            q, summ = points[a][f]
             qps[a, f] = q
             ept[a, f] = summ["energy_per_token"]
             good[a, f] = summ.get("goodput_qps", 0.0)
             row.append(summ)
-            prow.append(pl)
+            prow.append(resolved[a][f][1])
         summaries.append(row)
         plans.append(prow)
     return FleetSweepResult(archs=archs, fleets=fleets, slo=slo,

@@ -74,25 +74,43 @@ DEFAULT_PRECISION = Precision()
 
 @dataclasses.dataclass(frozen=True)
 class ModelOptions:
-    """Accounting options shared by all dataflows (ablated in benchmarks)."""
+    """Accounting options shared by all dataflows (ablated in benchmarks).
+
+    `relaxed=True` swaps the exact ceil-based tiling for its continuous
+    relaxation (see `tiling`): the closed forms become differentiable in
+    (h, w) so `jax.grad` can steer a design-point refiner. Relaxed numbers
+    are PROPOSAL-quality only — anything reported must be re-evaluated
+    with the exact forms."""
     act_reread: bool = False
     count_weight_load_hops: bool = False
     idle_pe_energy: float = 0.0
     n_arrays: int = 1
+    relaxed: bool = False
 
 
 # --------------------------------------------------------------------------
 # The tile-class decomposition — THE closed-form kernel of the whole model.
 # --------------------------------------------------------------------------
 
-def tiling(xp, D, s):
+def tiling(xp, D, s, relaxed: bool = False):
     """Tile a problem dimension D over an array dimension s.
 
     Returns (T, r): number of tiles T = ceil(D/s) and the edge-tile extent
     r = D - (T-1)*s in 1..s.  Edge tiles are partially occupied — this is
     where the paper's pow2 utilization effects come from.
+
+    With `relaxed=True` the ceil is replaced by its continuous envelope
+    T = max(D/s, 1): identical when D <= s, smooth in s (and D) elsewhere,
+    with r -> s for D > s. This makes every downstream closed form
+    differentiable — the objective surface `jax.grad` descends in the
+    design-point refiner (`core.search.refine_design_point`). Relaxed
+    values under-count the edge-tile raggedness, so they are proposals,
+    never reported numbers.
     """
-    T = xp.ceil(D / s)
+    if relaxed:
+        T = xp.maximum(D / s, 1.0)
+    else:
+        T = xp.ceil(D / s)
     return T, D - (T - 1) * s
 
 
@@ -155,8 +173,8 @@ def pe_multiplier(dataflow: str, n_arrays: int = 1) -> float:
 def ws_components(xp, M, K, N, h, w, opt: ModelOptions):
     """Weight-stationary: K maps to rows (h), N to columns (w); activations
     stream horizontally, partial sums sink to the Accumulator Array."""
-    Tk, rk = tiling(xp, K, h)
-    Tn, rn = tiling(xp, N, w)
+    Tk, rk = tiling(xp, K, h, opt.relaxed)
+    Tn, rn = tiling(xp, N, w, opt.relaxed)
     tsum = lambda fn: tile_sum(fn, Tk, rk, h, Tn, rn, w)
 
     # Subsequent weight loads are ALWAYS hidden by double buffering: a load
@@ -210,8 +228,8 @@ def os_components(xp, M, K, N, h, w, opt: ModelOptions):
     """Output-stationary: each PE owns one o(m, j); A streams from the left,
     W from the top, the K reduction happens in place (no accumulator array).
     A is re-read per column tile, W per row tile."""
-    Tm, rm = tiling(xp, M, h)
-    Tn, rn = tiling(xp, N, w)
+    Tm, rm = tiling(xp, M, h, opt.relaxed)
+    Tn, rn = tiling(xp, N, w, opt.relaxed)
     tsum = lambda fn: tile_sum(fn, Tm, rm, h, Tn, rn, w)
 
     pass_cycles = tsum(lambda ht, wt: K + ht + wt - 1)
@@ -332,7 +350,7 @@ def analyze_gemm_core(xp, M, K, N, h, w, *, dataflow: str = "ws",
                       act_reread: bool = False,
                       count_weight_load_hops: bool = False,
                       idle_pe_energy: float = 0.0,
-                      n_arrays: int = 1):
+                      n_arrays: int = 1, relaxed: bool = False):
     """Backend-agnostic analytical metrics for a (grouped) GEMM.
 
     All of M, K, N, h, w, groups may be broadcastable arrays of whatever
@@ -343,7 +361,8 @@ def analyze_gemm_core(xp, M, K, N, h, w, *, dataflow: str = "ws",
     precision = DEFAULT_PRECISION if precision is None else precision
     opt = ModelOptions(act_reread=act_reread,
                        count_weight_load_hops=count_weight_load_hops,
-                       idle_pe_energy=idle_pe_energy, n_arrays=n_arrays)
+                       idle_pe_energy=idle_pe_energy, n_arrays=n_arrays,
+                       relaxed=relaxed)
     fn = get_dataflow(dataflow)
     comp = fn(xp, M, K, N, h, w, opt)
     return finalize(xp, comp, h, w, groups, precision, opt,

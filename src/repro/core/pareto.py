@@ -51,12 +51,21 @@ def crowding_distance(F: np.ndarray) -> np.ndarray:
 
 
 def nsga2(eval_fn, bounds, *, pop: int = 64, gens: int = 40, seed: int = 0,
-          quantum: int = 8):
+          quantum: int = 8, warm_start=None):
     """NSGA-II over integer (h, w) genomes.
 
     eval_fn: (pop, 2) int array -> (pop, k) objective array (minimized).
     bounds: ((h_lo, h_hi), (w_lo, w_hi)); genes snap to `quantum` steps
-    (the paper sweeps 16..256 in steps of 8)."""
+    (the paper sweeps 16..256 in steps of 8).
+
+    `warm_start`, when given, is an (m, 2) array of genomes injected into
+    the initial population (overwriting its first min(m, pop) rows AFTER
+    the random draw, so the rng stream — and therefore every later
+    generation's randomness — is unchanged vs a cold start). Seeding with
+    exact grid-Pareto points keeps them in rank 0 under the elitist
+    selection for the whole run: the warm frontier can only match or
+    dominate the cold one — provided `pop` can hold the whole seed
+    frontier (crowding truncation may evict rank-0 points otherwise)."""
     rng = np.random.default_rng(seed)
     (hl, hh), (wl, wh) = bounds
 
@@ -65,6 +74,9 @@ def nsga2(eval_fn, bounds, *, pop: int = 64, gens: int = 40, seed: int = 0,
         return np.clip(x, [hl, wl], [hh, wh]).astype(int)
 
     P = snap(rng.uniform([hl, wl], [hh, wh], size=(pop, 2)))
+    if warm_start is not None:
+        ws = snap(np.asarray(warm_start, np.float64))[:pop]
+        P[:len(ws)] = ws
     FP = eval_fn(P)
     for _ in range(gens):
         ranks = fast_non_dominated_sort(FP)

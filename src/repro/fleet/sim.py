@@ -149,6 +149,13 @@ class _DecodeOnlyTable:
     def prefill_cycles(self):
         return [0.0] * len(self._t.prefill_cycles)
 
+    @property
+    def prefill_energy(self):
+        # Zeroed alongside prefill_cycles: packed replay engines
+        # interpolate the lattice directly instead of calling `prefill()`,
+        # and must charge the same free prefill the scalar path does.
+        return [0.0] * len(self._t.prefill_energy)
+
     def __getattr__(self, name):
         return getattr(self._t, name)
 
@@ -207,19 +214,41 @@ def _sub_trace(trace: RequestTrace, idx: np.ndarray) -> RequestTrace:
 def simulate_fleet(fleet: FleetTables, trace: RequestTrace,
                    cfg: FleetSimConfig = FleetSimConfig()) -> FleetResult:
     """Replay `trace` on a fleet. Deterministic for fixed inputs, like the
-    single-server simulator. Dispatches on the fleet layout."""
-    if fleet.disaggregated:
-        return _simulate_disaggregated(fleet, trace, cfg)
+    single-server simulator. Dispatches on the fleet layout.
+
+    The route/assemble halves are factored out (`_disagg_prepare`,
+    `_assemble_mixed`, `_assemble_disagg`) so the batched capacity search
+    (`core.search`) can run the per-server replays on a packed multi-lane
+    engine while sharing *this exact* routing and accounting code — the
+    batched sweep is bit-identical to this loop by construction."""
     t_wall = time.perf_counter()
+    if fleet.disaggregated:
+        prep = _disagg_prepare(fleet, trace, cfg)
+        results = [
+            simulate(t, _sub_trace(prep["dec_trace"], idx), cfg.server)
+            if len(idx) else None
+            for t, idx in zip(prep["dec_tables"], prep["dparts"])]
+        return _assemble_disagg(fleet, trace, cfg, prep, results, t_wall)
     parts = route_requests(trace, fleet.mixed, cfg)
+    results = [
+        simulate(t, _sub_trace(trace, idx), cfg.server) if len(idx) else None
+        for t, idx in zip(fleet.mixed, parts)]
+    return _assemble_mixed(fleet, trace, cfg, parts, results, t_wall)
+
+
+def _assemble_mixed(fleet: FleetTables, trace: RequestTrace,
+                    cfg: FleetSimConfig, parts: List[np.ndarray],
+                    results: List[Optional[SimResult]],
+                    t_wall: float) -> FleetResult:
+    """Scatter per-server mixed-fleet results back to request order and
+    aggregate. `results` aligns with `parts`; empty servers are None."""
     n = len(trace)
     ttft = np.full(n, np.nan)
     tpot = np.full(n, np.nan)
     res: List[SimResult] = []
-    for table, idx in zip(fleet.mixed, parts):
-        if not len(idx):
+    for idx, r in zip(parts, results):
+        if r is None:
             continue
-        r = simulate(table, _sub_trace(trace, idx), cfg.server)
         ttft[idx] = r.ttft_s
         tpot[idx] = r.tpot_s
         res.append(r)
@@ -242,10 +271,14 @@ def simulate_fleet(fleet: FleetTables, trace: RequestTrace,
         per_server=res)
 
 
-def _simulate_disaggregated(fleet: FleetTables, trace: RequestTrace,
-                            cfg: FleetSimConfig) -> FleetResult:
-    """Prefill pool (FIFO, exclusive prompts) -> KV ship -> decode pool."""
-    t_wall = time.perf_counter()
+def _disagg_prepare(fleet: FleetTables, trace: RequestTrace,
+                    cfg: FleetSimConfig,
+                    dec_tables: Optional[List] = None) -> Dict:
+    """Disaggregated phase 1 on the host: FIFO exclusive prefills per
+    prefill server, KV shipping over the fleet link, and the decode-pool
+    trace + routing. Returns everything the decode replay and the final
+    assembly need. `dec_tables` lets a caller pass prebuilt
+    `_DecodeOnlyTable` proxies (the batched engine packs them once)."""
     n = len(trace)
     clock = cfg.server.clock_hz
 
@@ -271,20 +304,33 @@ def _simulate_disaggregated(fleet: FleetTables, trace: RequestTrace,
     energy += link_energy
     ready = done + ship
 
-    # --- phase 2: decode pool (prefill-free replay) -----------------------
+    # --- phase 2 setup: decode pool sees ready-ordered arrivals -----------
     order = np.argsort(ready, kind="stable")
     dec_trace = RequestTrace(arrival_s=ready[order],
                              prompt_len=trace.prompt_len[order],
                              output_len=trace.output_len[order])
-    dec_tables = [_DecodeOnlyTable(t) for t in fleet.decode]
+    if dec_tables is None:
+        dec_tables = [_DecodeOnlyTable(t) for t in fleet.decode]
     dparts = route_requests(dec_trace, dec_tables, cfg)
+    return {"dec_tables": dec_tables, "dec_trace": dec_trace,
+            "dparts": dparts, "order": order, "ready": ready,
+            "prefill_secs": prefill_secs, "energy": energy,
+            "link_secs": link_secs, "link_energy": link_energy}
+
+
+def _assemble_disagg(fleet: FleetTables, trace: RequestTrace,
+                     cfg: FleetSimConfig, prep: Dict,
+                     results: List[Optional[SimResult]],
+                     t_wall: float) -> FleetResult:
+    """Combine phase-1 accounting with per-decode-server results."""
+    n = len(trace)
+    order, ready = prep["order"], prep["ready"]
     ttft = np.full(n, np.nan)
     tpot = np.full(n, np.nan)
     res: List[SimResult] = []
-    for table, idx in zip(dec_tables, dparts):
-        if not len(idx):
+    for idx, r in zip(prep["dparts"], results):
+        if r is None:
             continue
-        r = simulate(table, _sub_trace(dec_trace, idx), cfg.server)
         rid = order[idx]
         # total TTFT = prefill + shipping + decode-slot queueing; the
         # decode-side "ttft" is pure wait (its prefill is free)
@@ -301,14 +347,14 @@ def _simulate_disaggregated(fleet: FleetTables, trace: RequestTrace,
         tokens_out=sum(r.tokens_out for r in res),
         decode_steps=sum(r.decode_steps for r in res),
         decode_seconds=sum(r.decode_seconds for r in res),
-        prefill_seconds=prefill_secs,
+        prefill_seconds=prep["prefill_secs"],
         spill_seconds=sum(r.spill_seconds for r in res),
         max_step_seconds=max((r.max_step_seconds for r in res),
                              default=0.0),
-        energy_eq1=energy + sum(r.energy_eq1 for r in res),
+        energy_eq1=prep["energy"] + sum(r.energy_eq1 for r in res),
         routing=cfg.routing,
         n_servers=fleet.n_servers, disaggregated=True,
-        link_seconds=link_secs, link_energy=link_energy,
+        link_seconds=prep["link_secs"], link_energy=prep["link_energy"],
         per_server=res)
 
 
@@ -342,9 +388,10 @@ def fleet_max_sustainable_qps(fleet: FleetTables, traffic: TrafficModel,
                                                  paired=paired), cfg)
         return meets_slo(res, slo), res
 
-    q, best_res = bisect_max_qps(
+    q, best_res, saturated = bisect_max_qps(
         probe, 2.0 * fleet_saturation_qps(fleet, traffic, cfg), iters)
     out = summarize(best_res, slo)
+    out["saturated_at_bracket"] = saturated
     out["n_servers"] = fleet.n_servers
     out["disaggregated"] = fleet.disaggregated
     return q, out

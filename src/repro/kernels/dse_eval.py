@@ -183,3 +183,49 @@ def dse_eval_batched(configs, layer_sets, *, block_c: int = 128,
         out_shape=jax.ShapeDtypeStruct((S, C, len(OUT_COLS)), jnp.float32),
         interpret=interpret,
     )(configs.astype(jnp.float32), layer_sets.astype(jnp.float32))
+
+
+def relaxed_objectives(workloads, objectives=("energy", "cycles"),
+                       **model_kw):
+    """Differentiable network objectives as a jnp function of (h, w).
+
+    Builds the same closed forms as the sweep kernels — one
+    `analyze_gemm_core(jnp, ...)` call over the network's layer table —
+    but with the continuous tiling relaxation (`model_core.tiling` with
+    `relaxed=True`), so the returned ``f(x)`` (x = jnp array [h, w]) is
+    smooth and `jax.grad(f)` exists everywhere on the design plane.
+
+    Objective names follow `core.dse`: "energy" / "cycles" minimized,
+    "utilization" negated so it is minimized too. Returns a (k,) jnp
+    vector per call. Relaxed values under-count edge-tile raggedness:
+    they steer proposals (`core.search.refine_design_point`); every
+    reported number comes from the exact numpy forms
+    (`core.systolic.analyze_network`).
+    """
+    import numpy as np
+    for o in objectives:
+        if o not in ("energy", "cycles", "utilization"):
+            raise ValueError(f"unknown objective {o!r}")
+    layers = np.asarray([(M, K, N, g, rep)
+                         for (M, K, N, g, rep) in workloads], np.float64)
+    M = jnp.asarray(layers[:, 0])
+    K = jnp.asarray(layers[:, 1])
+    N = jnp.asarray(layers[:, 2])
+    g = jnp.asarray(layers[:, 3] * layers[:, 4])
+    dataflow = model_kw.pop("dataflow", "ws")
+    n_arrays = model_kw.pop("n_arrays", 1)
+    pe_mult = pe_multiplier(dataflow, n_arrays)
+
+    def f(x):
+        h, w = x[0], x[1]
+        d = analyze_gemm_core(jnp, M, K, N, h, w, dataflow=dataflow,
+                              groups=g, n_arrays=n_arrays, relaxed=True,
+                              **model_kw)
+        cyc = jnp.sum(d["cycles"])
+        cols = {"cycles": lambda: cyc,
+                "energy": lambda: jnp.sum(d["energy"]),
+                "utilization": lambda: -jnp.sum(d["macs"]) / (
+                    jnp.maximum(cyc, 1.0) * h * w * pe_mult)}
+        return jnp.stack([cols[o]() for o in objectives])
+
+    return f

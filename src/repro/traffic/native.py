@@ -1,0 +1,332 @@
+"""Optional cc-compiled lane executor for the batched capacity search.
+
+`core.search` replays hundreds of (design point, probe) lanes per sweep.
+The XLA lockstep engine (`traffic.lockstep`) amortizes Python dispatch
+across lanes, but on a small host its per-iteration launch overhead
+bounds the win; a plain C transcription of the scalar event loop runs a
+replay in microseconds. This module compiles that transcription ONCE per
+process with the system C compiler (no third-party deps — `ctypes` +
+`cc`) and exposes it behind the same packed-lane interface as
+`lockstep.LockstepBatch`, so the search driver can treat the two as
+interchangeable probe executors.
+
+Bit-identity: the C source is an op-for-op transcription of
+`traffic.sim.simulate`'s prefill_first path, and x86-64/AArch64 doubles
+follow IEEE-754 exactly at -O2 (no reassociation). `-ffp-contract=off`
+additionally forbids contracting `a*b + c` into a single-rounding fma,
+so every expression rounds exactly like the interpreted source. The heap
+of (finish_step, rid) pairs becomes a linear scan over packed int64 keys
+`finish_step * (n+1) + rid`, whose minimum reproduces the heap's
+lexicographic pop order (same device trick as `lockstep`).
+
+Everything degrades gracefully: if no C compiler is present or the
+compile fails, `available()` returns False and callers fall back to the
+XLA or scalar paths. The shared object is cached under the system temp
+directory keyed by source hash.
+"""
+from __future__ import annotations
+
+import ctypes
+import hashlib
+import os
+import subprocess
+import tempfile
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core.model_core import DRAM_COST_PER_WORD, REF_BITS
+from repro.traffic.sim import SimConfig
+from repro.traffic.workload import RequestTrace
+
+_KPAD = 8                       # lattice pad, shared with lockstep
+
+_C_SOURCE = r"""
+#include <stdint.h>
+
+#define BIGKEY 0x7fffffffffffffffLL
+
+static void interp_axis(const double* lat, int k, double x,
+                        int* i_out, double* f_out) {
+    if (x <= lat[0]) { *i_out = 0; *f_out = 0.0; return; }
+    if (x >= lat[k - 1]) { *i_out = k - 2; *f_out = 1.0; return; }
+    int lo = 0, hi = k;                       /* bisect_right */
+    while (lo < hi) {
+        int mid = (lo + hi) / 2;
+        if (x < lat[mid]) hi = mid; else lo = mid + 1;
+    }
+    int i = lo - 1;
+    *i_out = i;
+    *f_out = (x - lat[i]) / (lat[i + 1] - lat[i]);
+}
+
+static double bilerp(const double* g, int nk, int ia, double fa,
+                     int j, double fk) {
+    const double* r0 = g + (int64_t)ia * nk;
+    const double* r1 = r0 + nk;
+    double lo = r0[j] + fk * (r0[j + 1] - r0[j]);
+    double hi = r1[j] + fk * (r1[j + 1] - r1[j]);
+    return lo + fa * (hi - lo);
+}
+
+/* One scalar replay per lane; transcribed op-for-op from
+   traffic/sim.py (prefill_first, no timeline). Returns 0. */
+int replay_lanes(
+    int n_lanes, int n_max, int nb, int nk, int np_,
+    int slots, int has_ub,
+    double clock, double ub_bits, double dram_bpc, double spe,
+    const double* lat,          /* (L, 3, KPAD) padded lattices */
+    const double* grid,         /* (L, 2*np + 2*nb*nk) */
+    const double* kvb_arr,      /* (L,) */
+    const double* req,          /* (L, 3, n_max): arr | plen | olen */
+    const int64_t* n_arr,       /* (L,) live lengths */
+    double* ttft_out,           /* (L, n_max), pre-filled NaN */
+    double* tpot_out,           /* (L, n_max), pre-filled NaN */
+    double* agg_out)            /* (L, 9): t nstep tok dec pre sp en ms - */
+{
+    int kpad = 8;
+    for (int lane = 0; lane < n_lanes; lane++) {
+        const double* lslot = lat + (int64_t)lane * 3 * kpad;
+        const double* lkv = lslot + kpad;
+        const double* lprm = lslot + 2 * kpad;
+        const double* pcyc = grid + (int64_t)lane * (2 * np_ + 2 * nb * nk);
+        const double* pen_g = pcyc + np_;
+        const double* dcyc = pen_g + np_;
+        const double* den_g = dcyc + nb * nk;
+        double kvb = kvb_arr[lane];
+        const double* arr = req + (int64_t)lane * 3 * n_max;
+        const double* plen = arr + n_max;
+        const double* olen = plen + n_max;
+        int64_t n = n_arr[lane];
+        double* ttft = ttft_out + (int64_t)lane * n_max;
+        double* tpot = tpot_out + (int64_t)lane * n_max;
+
+        int64_t key[64];
+        for (int s = 0; s < slots; s++) key[s] = BIGKEY;
+        double t = 0.0, kv_tok = 0.0;
+        int64_t nstep = 0, nxt = 0, tokens_out = 0;
+        int active = 0;
+        double decode_secs = 0.0, prefill_secs = 0.0, spill_secs = 0.0;
+        double energy = 0.0, max_step = 0.0;
+        int ia, jk, ip;
+        double fa, fk, fp;
+
+        while (1) {
+            /* admissions (FIFO; exclusive prefill) */
+            while (active < slots && nxt < n && arr[nxt] <= t) {
+                int64_t rid = nxt;
+                nxt += 1;
+                interp_axis(lprm, np_, plen[rid], &ip, &fp);
+                double pc = pcyc[ip] + fp * (pcyc[ip + 1] - pcyc[ip]);
+                double pe = pen_g[ip] + fp * (pen_g[ip + 1] - pen_g[ip]);
+                double sp = 0.0;
+                if (has_ub) {
+                    double over = (kv_tok + plen[rid]) * kvb - ub_bits;
+                    if (over > 0.0) sp = 2.0 * over / dram_bpc;
+                }
+                double dt = (pc + sp) / clock;
+                t += dt;
+                prefill_secs += dt;
+                spill_secs += sp / clock;
+                if (active && dt > max_step) max_step = dt;
+                energy += pe + sp * dram_bpc * spe;
+                ttft[rid] = t - arr[rid];
+                kv_tok += plen[rid];
+                active += 1;
+                int64_t fin = nstep + (int64_t)olen[rid];
+                for (int s = 0; s < slots; s++)
+                    if (key[s] == BIGKEY) {
+                        key[s] = fin * (n + 1) + rid;
+                        break;
+                    }
+            }
+
+            if (active == 0) {
+                if (nxt < n) {
+                    if (arr[nxt] > t) t = arr[nxt];   /* idle jump */
+                    continue;
+                }
+                break;                                /* drained */
+            }
+
+            /* bulk decode: identical steps until the next event */
+            int64_t minkey = BIGKEY;
+            for (int s = 0; s < slots; s++)
+                if (key[s] < minkey) minkey = key[s];
+            int64_t k = minkey / (n + 1) - nstep;
+            if (active < slots && nxt < n) {
+                double gap = arr[nxt] - t;
+                interp_axis(lslot, nb, (double)active, &ia, &fa);
+                interp_axis(lkv, nk, kv_tok / active, &jk, &fk);
+                double ds = bilerp(dcyc, nk, ia, fa, jk, fk);
+                double sp0 = 0.0;
+                if (has_ub) {
+                    double over = kv_tok * kvb - ub_bits;
+                    if (over > 0.0) sp0 = 2.0 * over / dram_bpc;
+                }
+                double dur1 = (ds + sp0) / clock;
+                double ratio = gap / dur1;
+                if (ratio < (double)k) {
+                    int64_t k_arr = (int64_t)ratio + 1;
+                    if (k_arr < k) k = k_arr;
+                }
+            }
+            double kv_mid = kv_tok / active + (k - 1) * 0.5;
+            interp_axis(lslot, nb, (double)active, &ia, &fa);
+            interp_axis(lkv, nk, kv_mid, &jk, &fk);
+            double cyc = bilerp(dcyc, nk, ia, fa, jk, fk);
+            double sp = 0.0;
+            if (has_ub) {
+                double over = (kv_tok + k * active * 0.5) * kvb - ub_bits;
+                if (over > 0.0) sp = 2.0 * over / dram_bpc;
+            }
+            double dt = k * (cyc + sp) / clock;
+            t += dt;
+            decode_secs += dt;
+            spill_secs += k * sp / clock;
+            energy += k * (bilerp(den_g, nk, ia, fa, jk, fk)
+                           + sp * dram_bpc * spe);
+            nstep += k;
+            kv_tok += k * active;
+            if (dt / k > max_step) max_step = dt / k;
+            while (1) {                               /* completions */
+                minkey = BIGKEY;
+                int sm = -1;
+                for (int s = 0; s < slots; s++)
+                    if (key[s] < minkey) { minkey = key[s]; sm = s; }
+                if (minkey / (n + 1) > nstep) break;
+                int64_t rid = minkey % (n + 1);
+                key[sm] = BIGKEY;
+                active -= 1;
+                kv_tok -= plen[rid] + olen[rid];
+                tokens_out += (int64_t)olen[rid];
+                tpot[rid] = (t - arr[rid] - ttft[rid]) / olen[rid];
+            }
+        }
+
+        double* agg = agg_out + (int64_t)lane * 9;
+        agg[0] = t;
+        agg[1] = (double)nstep;
+        agg[2] = (double)tokens_out;
+        agg[3] = decode_secs;
+        agg[4] = prefill_secs;
+        agg[5] = spill_secs;
+        agg[6] = energy;
+        agg[7] = max_step;
+        agg[8] = 0.0;
+    }
+    return 0;
+}
+"""
+
+_lib: Optional[object] = None
+_tried = False
+
+
+def _compile() -> Optional[object]:
+    """Build (or reuse) the shared object; None on any failure."""
+    tag = hashlib.sha256(_C_SOURCE.encode()).hexdigest()[:16]
+    cache = os.path.join(tempfile.gettempdir(),
+                         f"repro_native_{tag}.so")
+    if not os.path.exists(cache):
+        src = cache[:-3] + ".c"
+        with open(src, "w") as f:
+            f.write(_C_SOURCE)
+        tmp = cache + f".tmp{os.getpid()}"
+        for cc in ("cc", "gcc", "clang"):
+            try:
+                r = subprocess.run(
+                    [cc, "-O2", "-fPIC", "-shared",
+                     "-ffp-contract=off", "-o", tmp, src],
+                    capture_output=True, timeout=120)
+            except (OSError, subprocess.TimeoutExpired):
+                continue
+            if r.returncode == 0:
+                os.replace(tmp, cache)       # atomic vs. racing builds
+                break
+        else:
+            return None
+    lib = ctypes.CDLL(cache)
+    d, i = ctypes.c_double, ctypes.c_int
+    pd = np.ctypeslib.ndpointer(np.float64, flags="C_CONTIGUOUS")
+    pi = np.ctypeslib.ndpointer(np.int64, flags="C_CONTIGUOUS")
+    lib.replay_lanes.restype = ctypes.c_int
+    lib.replay_lanes.argtypes = [i, i, i, i, i, i, i, d, d, d, d,
+                                 pd, pd, pd, pd, pi, pd, pd, pd]
+    return lib
+
+
+def available() -> bool:
+    """True iff the native executor compiled (cached per process)."""
+    global _lib, _tried
+    if not _tried:
+        _tried = True
+        try:
+            _lib = _compile()
+        except Exception:
+            _lib = None
+    return _lib is not None
+
+
+class NativeBatch:
+    """`lockstep.LockstepBatch`-shaped probe executor backed by the C
+    replay loop. Same packed-lane protocol: fixed tables, per-round
+    traces, raw result dict with ttft/tpot plus aggregate vectors."""
+
+    def __init__(self, tables: Sequence[object], cfg: SimConfig,
+                 n_max: int):
+        from repro.traffic.lockstep import _pack_tables
+
+        if not available():
+            raise RuntimeError("no C compiler available")
+        if cfg.policy != "prefill_first":
+            raise ValueError("NativeBatch supports prefill_first only")
+        if cfg.slots > 64:
+            raise ValueError("NativeBatch supports at most 64 slots")
+        self.tables = list(tables)
+        self.cfg = cfg
+        self.n_max = int(n_max)
+        packed = _pack_tables(tables)
+        self.dims = packed["dims"]
+        self._lat = np.ascontiguousarray(packed["lat"].reshape(
+            len(tables), 3 * _KPAD))
+        nb, nk, npr = self.dims
+        # native grid keeps the raw (unconcatenated-lattice) layout
+        gw = 2 * npr + 2 * nb * nk
+        self._grid = np.ascontiguousarray(
+            packed["sg"][:, 3 * _KPAD:3 * _KPAD + gw])
+        self._kvb = np.ascontiguousarray(packed["kvb"])
+
+    def run(self, traces: Sequence[RequestTrace]) -> Dict[str, np.ndarray]:
+        from repro.traffic.lockstep import _pack_traces
+
+        # native rows need no +1 scratch column: repack at width n_max
+        req1, n = _pack_traces(traces, self.n_max)
+        req = np.ascontiguousarray(
+            req1.reshape(len(traces), 3, self.n_max + 1)[:, :, :-1])
+        return self.run_packed(req, n)
+
+    def run_packed(self, req: np.ndarray, n: np.ndarray
+                   ) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        L = req.shape[0]
+        nb, nk, npr = self.dims
+        has_ub = cfg.ub_kib is not None
+        ttft = np.full((L, self.n_max), np.nan)
+        tpot = np.full((L, self.n_max), np.nan)
+        agg = np.zeros((L, 9))
+        _lib.replay_lanes(
+            L, self.n_max, nb, nk, npr, cfg.slots, int(has_ub),
+            float(cfg.clock_hz),
+            float(cfg.ub_kib) * 8192.0 if has_ub else 0.0,
+            float(cfg.dram_bits_per_cycle),
+            DRAM_COST_PER_WORD / REF_BITS,
+            self._lat, self._grid, self._kvb,
+            np.ascontiguousarray(req.reshape(L, -1)),
+            np.ascontiguousarray(n), ttft, tpot, agg)
+        return {"ttft": ttft, "tpot": tpot, "t": agg[:, 0],
+                "nstep": agg[:, 1].astype(np.int64),
+                "tokens_out": agg[:, 2].astype(np.int64),
+                "decode_seconds": agg[:, 3], "prefill_seconds": agg[:, 4],
+                "spill_seconds": agg[:, 5], "energy": agg[:, 6],
+                "max_step": agg[:, 7]}

@@ -104,19 +104,28 @@ def bisect_max_qps(probe, hi: float, iters: int = 9):
     the capacity search used by both the single-server and the fleet
     sweeps (`fleet.sim.fleet_max_sustainable_qps`). `hi` is the initial
     upper bracket (a saturation estimate; opened by doubling while the
-    probe still passes, up to `QPS_CAP`). Returns (max_qps, result at
-    it) — (0.0, result-at-lowest-probe) when even a near-idle trickle
-    misses."""
+    probe still passes, up to `QPS_CAP` — plus ONE extra doubling past
+    the cap, so a bad saturation estimate gets a second chance to bound
+    the answer). Returns (max_qps, result-at-it, saturated_at_bracket);
+    (0.0, result-at-lowest-probe, False) when even a near-idle trickle
+    misses. `saturated_at_bracket` is True when the probe still passed
+    at the final (cap-busting) bracket: the reported capacity is then a
+    FLOOR limited by the probe trace, not a resolved maximum — sweeps
+    must surface it rather than silently report the cap as capacity."""
     lo = hi / 1024.0
     ok_lo, res_lo = probe(lo)
     if not ok_lo:
-        return 0.0, res_lo
+        return 0.0, res_lo, False
     ok_hi, _ = probe(hi)
+    grown = False
     while ok_hi:                       # open the bracket (a short probe
         lo, hi = hi, 2.0 * hi          # trace can ride out transient
         if hi > QPS_CAP:               # overload past the estimate)
-            break
+            if grown:
+                break
+            grown = True               # grow the bracket once past the cap
         ok_hi, _ = probe(hi)
+    saturated = bool(ok_hi)            # still passing at the last bracket
     best, best_res = lo, None
     for _ in range(iters):
         mid = 0.5 * (lo + hi)
@@ -127,7 +136,7 @@ def bisect_max_qps(probe, hi: float, iters: int = 9):
             hi = mid
     if best_res is None:
         _, best_res = probe(best)
-    return min(best, QPS_CAP), best_res
+    return min(best, QPS_CAP), best_res, saturated
 
 
 def max_sustainable_qps(table: CostTable, traffic: TrafficModel, slo: SLO,
@@ -148,6 +157,8 @@ def max_sustainable_qps(table: CostTable, traffic: TrafficModel, slo: SLO,
                                                             seed), sim)
         return meets_slo(res, slo), res
 
-    q, best_res = bisect_max_qps(
+    q, best_res, saturated = bisect_max_qps(
         probe, 2.0 * saturation_qps(table, traffic, sim), iters)
-    return q, summarize(best_res, slo)
+    out = summarize(best_res, slo)
+    out["saturated_at_bracket"] = saturated
+    return q, out
