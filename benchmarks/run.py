@@ -18,6 +18,9 @@ CSV and writes machine-readable results to results/benchmarks/.
         dse_eval_batched dispatch vs the per-stage loop, a 1M-request
         multi-server fleet replay, and the fleet-composition capacity
         sweep + robust fleet config                      [beyond paper]
+  obs    observability: tracing-disabled overhead on the 1M-request
+        replay, deterministic Perfetto export of a seeded disagg fleet
+        trace, and the metrics-registry counter totals  [beyond paper]
   connectivity  graph-IR liveness: peak UB residency + finite-UB spill for
         chain vs residual vs dense-concat networks       [beyond paper]
   ablations  model-accounting options (act_reread, idle-PE, load hops)
@@ -26,10 +29,10 @@ CSV and writes machine-readable results to results/benchmarks/.
   kernels    Pallas kernel microbenches (interpret mode)
 
 ``--quick`` runs the reduced capacity sweep, the serving-scenario sweep,
-the traffic stage and the fleet stage, writing
+the traffic, fleet, search and obs stages, writing
 results/benchmarks/BENCH_graph.json, BENCH_scenarios.json,
-BENCH_traffic.json and BENCH_fleet.json (the CI smoke/perf-trajectory
-probes).
+BENCH_traffic.json, BENCH_fleet.json, BENCH_search.json and
+BENCH_obs.json (the CI smoke/perf-trajectory probes).
 """
 from __future__ import annotations
 
@@ -685,6 +688,106 @@ def search_bench(quick: bool = False):
     })
 
 
+def obs_bench(quick: bool = False):
+    """Observability probes, written to BENCH_obs.json:
+
+      * measured instrumentation overhead with tracing DISABLED on the
+        1M-request replay (the same replay traffic_bench times): runs
+        with no tracer attached vs a disabled Tracer attached,
+        interleaved, min-of-reps — CI fails the stage above 3%;
+      * a seeded two-server disaggregated fleet replay traced on the
+        simulation clock, exported twice to Perfetto trace-event JSON:
+        must validate (monotone per-track timestamps, balanced spans,
+        one track per server/pool) and be byte-identical across runs
+        (the sample trace is the CI artifact);
+      * the counter totals this stage accumulated (the registry report).
+    """
+    from repro import obs
+    from repro.fleet import FleetSimConfig, FleetTables, simulate_fleet
+    from repro.traffic import SimConfig, TrafficModel, build_cost_tables
+    from repro.traffic.slo import SLO, summarize
+
+    before = obs.metrics().snapshot()
+
+    # 1. tracing-disabled overhead on the 1M-request replay
+    from repro.traffic import simulate
+    ts = build_cost_tables(["xlstm-125m"], [(128, 128)], backend="numpy")
+    tab = ts.table("xlstm-125m", 128, 128)
+    tm = TrafficModel(rate_qps=200.0, prompt_median=256, output_median=48)
+    n_replay = 1_000_000
+    trace = tm.sample(n_replay, seed=0)
+    cfg_base = SimConfig(slots=64)                       # no tracer field set
+    cfg_off = SimConfig(slots=64,
+                        tracer=obs.Tracer(enabled=False, clock="sim"))
+    reps = 2 if quick else 3
+    base_s, off_s = [], []
+    simulate(tab, trace, cfg_base)                       # warm caches once
+    for _ in range(reps):                                # interleave reps so
+        base_s.append(simulate(tab, trace, cfg_base)     # drift hits both
+                      .wall_seconds)
+        off_s.append(simulate(tab, trace, cfg_off).wall_seconds)
+    t_base, t_off = min(base_s), min(off_s)
+    overhead = (t_off - t_base) / t_base
+    _emit("obs_disabled_overhead_1m", t_off * 1e6,
+          f"base={t_base:.2f}s;off={t_off:.2f}s;overhead={overhead:+.2%}")
+
+    # 2. seeded two-server disagg traced replay -> deterministic export
+    ts2 = build_cost_tables(["xlstm-125m"], [(64, 64), (128, 128)],
+                            backend="numpy")
+    fleet = FleetTables(prefill=[ts2.table("xlstm-125m", 128, 128)],
+                        decode=[ts2.table("xlstm-125m", 64, 64),
+                                ts2.table("xlstm-125m", 128, 128)])
+    tm2 = TrafficModel(rate_qps=60.0, prompt_median=256, output_median=32)
+    trace2 = tm2.sample(400, seed=7)
+    blobs, tracers, fres = [], [], None
+    for _ in range(2):
+        tr = obs.Tracer(clock="sim")
+        fres = simulate_fleet(
+            fleet, trace2,
+            FleetSimConfig(server=SimConfig(slots=16, ub_kib=4096.0,
+                                            tracer=tr)))
+        summ = summarize(fres, SLO(ttft_s=2.0, tpot_s=0.15))
+        blobs.append(obs.trace_json(
+            tr, metadata={"seed": 7, "requests": len(trace2),
+                          "ttft_hist": summ["ttft_hist"],
+                          "tpot_hist": summ["tpot_hist"]}))
+        tracers.append(tr)
+    problems = obs.validate_trace(json.loads(blobs[0]))
+    deterministic = blobs[0] == blobs[1]
+    tracks = tracers[0].tracks()
+    trace_path = os.path.join(RESULTS, "trace_replay_sample.perfetto.json")
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(trace_path, "w") as f:
+        f.write(blobs[0])
+    _emit("obs_disagg_trace_export", 0.0,
+          f"events={len(tracers[0])};tracks={len(tracks)}"
+          f";valid={not problems};deterministic={deterministic}")
+
+    # 3. counter totals accumulated by this stage
+    delta = obs.metrics().delta(before)
+    _emit("obs_counters", 0.0,
+          f"sim.events={delta.get('sim.events', 0):.0f}"
+          f";sim.table_lookups={delta.get('sim.table_lookups', 0):.0f}"
+          f";fleet.kv_ships={delta.get('fleet.kv_ships', 0):.0f}")
+    _save("BENCH_obs", {
+        "replay_requests": n_replay,
+        "replay_reps": reps,
+        "replay_base_seconds": t_base,
+        "replay_disabled_tracer_seconds": t_off,
+        "disabled_overhead_frac": overhead,
+        "trace_requests": len(trace2),
+        "trace_events": len(tracers[0]),
+        "trace_tracks": tracks,
+        "trace_valid": not problems,
+        "trace_problems": problems[:10],
+        "trace_deterministic": deterministic,
+        "trace_path": os.path.relpath(trace_path,
+                                      os.path.join(RESULTS, "..", "..")),
+        "counters": {k: delta[k] for k in sorted(delta)},
+        "registry": obs.metrics().summarize(),
+    })
+
+
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--quick", action="store_true",
@@ -701,6 +804,7 @@ def main() -> None:
         traffic_bench(quick=True)
         fleet_bench(quick=True)
         search_bench(quick=True)
+        obs_bench(quick=True)
         return
     fig2_resnet_heatmap()
     fig3_pareto()
@@ -712,6 +816,7 @@ def main() -> None:
     traffic_bench()
     fleet_bench()
     search_bench()
+    obs_bench()
     connectivity()
     ablations()
     future_work()

@@ -1,0 +1,87 @@
+"""Observability walkthrough: trace a seeded disaggregated fleet replay
+and open it in Perfetto.
+
+The discrete-event simulators answer "what is the p99 at this rate"; the
+trace layer answers *why* — where a request waited, when a decode pool
+saturated, which steps paid a KV-spill stall. This walkthrough:
+
+  1. builds a two-decode-server disaggregated fleet (prefill pool +
+     heterogeneous decode pool) from numpy cost tables,
+  2. replays a seeded Poisson trace with a sim-clock `obs.Tracer`
+     attached: per-request lifecycle lifelines (arrival -> queue ->
+     prefill -> decode runs -> finish), per-server engine lanes, KV-link
+     shipping, spill instants and active-slot counter tracks,
+  3. exports Chrome/Perfetto trace-event JSON (deterministic: the same
+     seed always writes byte-identical bytes) with the TTFT/TPOT
+     latency histograms attached as trace metadata,
+  4. prints the metrics-registry counters the replay accumulated — the
+     numbers behind the "O(events), zero model evals" claims.
+
+Open the written file at https://ui.perfetto.dev (or chrome://tracing):
+one track per server/pool, request lifelines on the `.req` lanes.
+
+    PYTHONPATH=src python examples/trace_replay.py
+"""
+import json
+import os
+
+from repro import obs
+from repro.fleet import FleetSimConfig, FleetTables, simulate_fleet
+from repro.traffic import SLO, SimConfig, TrafficModel, build_cost_tables
+from repro.traffic.slo import summarize
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results",
+                   "trace_replay.perfetto.json")
+
+
+def main():
+    # 1. a small disaggregated fleet: one prefill server feeding a
+    # heterogeneous two-server decode pool over the KV link
+    tables = build_cost_tables(archs=["xlstm-125m"],
+                               hw=((64, 64), (128, 128)), backend="numpy")
+    fleet = FleetTables(
+        prefill=[tables.table("xlstm-125m", 128, 128)],
+        decode=[tables.table("xlstm-125m", 64, 64),
+                tables.table("xlstm-125m", 128, 128)])
+
+    # 2. seeded replay with a simulation-clock tracer attached; the
+    # finite UB makes long-context requests pay visible spill stalls
+    traffic = TrafficModel(rate_qps=60.0, prompt_median=256,
+                           output_median=32)
+    trace = traffic.sample(400, seed=7)
+    tracer = obs.Tracer(clock="sim")
+    cfg = FleetSimConfig(routing="round_robin",
+                         server=SimConfig(slots=16, ub_kib=4096.0,
+                                          tracer=tracer))
+    res = simulate_fleet(fleet, trace, cfg)
+    summ = summarize(res, SLO(ttft_s=2.0, tpot_s=0.15))
+    print(f"replayed {res.n} requests on {res.n_servers} servers "
+          f"(disaggregated={res.disaggregated}): "
+          f"p99 TTFT {summ['ttft_p99_s']:.3f}s, "
+          f"p99 TPOT {summ['tpot_p99_s'] * 1e3:.1f}ms")
+    print(f"trace: {len(tracer)} events on tracks {tracer.tracks()}")
+    for i, tl in enumerate(res.server_timelines):
+        print(f"  decode{i} timeline: {len(tl)} samples, "
+              f"final t={tl[-1, 0]:.2f}s")
+
+    # 3. deterministic Perfetto export, latency histograms riding along
+    # as trace metadata (visible in the Perfetto info panel)
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    obs.write_trace(tracer, OUT,
+                    metadata={"seed": 7, "ttft_hist": summ["ttft_hist"],
+                              "tpot_hist": summ["tpot_hist"]})
+    problems = obs.validate_trace(json.load(open(OUT)))
+    print(f"wrote {os.path.normpath(OUT)} "
+          f"({os.path.getsize(OUT)} bytes, "
+          f"{'valid' if not problems else problems[:3]}) — open it at "
+          f"https://ui.perfetto.dev")
+
+    # 4. what the registry counted along the way
+    counters = obs.metrics().summarize()["counters"]
+    print("registry counters:")
+    for name in sorted(counters):
+        print(f"  {name:24s} {counters[name]:>12.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -52,6 +52,7 @@ from repro.core import systolic
 from repro.core.model_core import Precision
 from repro.core.pareto import nsga2, pareto_mask
 from repro.core.workloads import Workload
+from repro.obs.trace import tracer as _obs_tracer
 
 GRID_LO, GRID_HI, GRID_STEP = 16, 256, 8
 
@@ -379,6 +380,17 @@ def scenario_sweep(named_workloads: Dict[str, Sequence[Workload]], hs=None,
     names = list(named_workloads)
     shape = (len(names),) + H.shape
 
+    _span = _obs_tracer().span("scenario_sweep", "dse", backend=backend,
+                               fused=bool(fused), scenarios=len(names),
+                               configs=int(H.size))
+    with _span:
+        return _scenario_sweep_body(named_workloads, names, hs, ws, H, W,
+                                    shape, backend, fused, block_c,
+                                    model_kw)
+
+
+def _scenario_sweep_body(named_workloads, names, hs, ws, H, W, shape,
+                         backend, fused, block_c, model_kw):
     if backend == "numpy":
         grids = {k: np.empty(shape, np.float64) for k in _SWEEP_KEYS}
         for i, name in enumerate(names):
@@ -571,8 +583,12 @@ def slo_capacity_sweep(traffic, slo, archs: Optional[Sequence[str]] = None,
     archs = list(list_archs()) if archs is None else list(archs)
     hw = list(DEFAULT_HW) if hw is None else [tuple(map(int, p)) for p in hw]
     sim = SimConfig() if sim is None else sim
+    _tr = _obs_tracer()
     if tables is None:
-        tables = build_cost_tables(archs, hw, backend=backend, **model_kw)
+        with _tr.span("cost_tables", "dse", archs=len(archs),
+                      configs=len(hw)):
+            tables = build_cost_tables(archs, hw, backend=backend,
+                                       **model_kw)
     per_arch = traffic if isinstance(traffic, dict) else \
         {a: traffic for a in archs}
     missing = set(archs) - set(per_arch)
@@ -585,18 +601,20 @@ def slo_capacity_sweep(traffic, slo, archs: Optional[Sequence[str]] = None,
     ept = np.zeros((A, C))
     good = np.zeros((A, C))
     summaries: List[List[dict]] = []
-    if search == "sequential":
-        points = [
-            [max_sustainable_qps(tables.table(arch, h, w), per_arch[arch],
-                                 slo, sim=sim, n_requests=n_requests,
-                                 seed=seed) for h, w in hw]
-            for arch in archs]
-    else:
-        flat = batched_max_sustainable_qps(
-            [tables.table(arch, h, w) for arch in archs for h, w in hw],
-            [per_arch[arch] for arch in archs for _ in hw],
-            slo, sim=sim, n_requests=n_requests, seed=seed)
-        points = [flat[a * C:(a + 1) * C] for a in range(A)]
+    with _tr.span("capacity_search", "dse", search=search, lanes=A * C):
+        if search == "sequential":
+            points = [
+                [max_sustainable_qps(tables.table(arch, h, w),
+                                     per_arch[arch], slo, sim=sim,
+                                     n_requests=n_requests,
+                                     seed=seed) for h, w in hw]
+                for arch in archs]
+        else:
+            flat = batched_max_sustainable_qps(
+                [tables.table(arch, h, w) for arch in archs for h, w in hw],
+                [per_arch[arch] for arch in archs for _ in hw],
+                slo, sim=sim, n_requests=n_requests, seed=seed)
+            points = [flat[a * C:(a + 1) * C] for a in range(A)]
     for a in range(A):
         row = []
         for c in range(C):
@@ -835,12 +853,16 @@ def fleet_capacity_sweep(traffic, slo, fleets: Sequence[FleetSpec],
         raise ValueError(f"fleet_capacity_sweep: no traffic model for "
                          f"{sorted(missing)[:3]}")
 
+    _tr = _obs_tracer()
     if stage_tables is None:
         hw = sorted({(p.h, p.w) for f in fleets for p in f.pools})
         tps = sorted({p.tp for f in fleets for p in f.pools})
-        stage_tables = build_stage_tables(archs, hw=hw, tps=tps,
-                                          backend=backend,
-                                          **(lattices or {}), **model_kw)
+        with _tr.span("stage_tables", "dse", archs=len(archs),
+                      configs=len(hw), tps=len(tps)):
+            stage_tables = build_stage_tables(archs, hw=hw, tps=tps,
+                                              backend=backend,
+                                              **(lattices or {}),
+                                              **model_kw)
 
     A, F = len(archs), len(fleets)
     qps = np.zeros((A, F))
@@ -848,24 +870,28 @@ def fleet_capacity_sweep(traffic, slo, fleets: Sequence[FleetSpec],
     good = np.zeros((A, F))
     summaries: List[List[dict]] = []
     plans: List[List[list]] = []
-    resolved = [[resolve_fleet(stage_tables, arch, fleet, link)
-                 for fleet in fleets] for arch in archs]
+    with _tr.span("resolve_fleets", "dse", archs=A, fleets=F):
+        resolved = [[resolve_fleet(stage_tables, arch, fleet, link)
+                     for fleet in fleets] for arch in archs]
     lane_cfgs = [dataclasses.replace(sim, routing=fleet.routing)
                  for fleet in fleets]
-    if search == "sequential":
-        points = [
-            [fleet_max_sustainable_qps(resolved[a][f][0], per_arch[arch],
-                                       slo, cfg=lane_cfgs[f],
-                                       n_requests=n_requests, seed=seed)
-             for f in range(F)]
-            for a, arch in enumerate(archs)]
-    else:
-        flat = batched_fleet_max_sustainable_qps(
-            [resolved[a][f][0] for a in range(A) for f in range(F)],
-            [per_arch[arch] for arch in archs for _ in fleets],
-            slo, [lane_cfgs[f] for _ in archs for f in range(F)],
-            n_requests=n_requests, seed=seed)
-        points = [flat[a * F:(a + 1) * F] for a in range(A)]
+    with _tr.span("capacity_search", "dse", search=search, lanes=A * F):
+        if search == "sequential":
+            points = [
+                [fleet_max_sustainable_qps(resolved[a][f][0],
+                                           per_arch[arch], slo,
+                                           cfg=lane_cfgs[f],
+                                           n_requests=n_requests,
+                                           seed=seed)
+                 for f in range(F)]
+                for a, arch in enumerate(archs)]
+        else:
+            flat = batched_fleet_max_sustainable_qps(
+                [resolved[a][f][0] for a in range(A) for f in range(F)],
+                [per_arch[arch] for arch in archs for _ in fleets],
+                slo, [lane_cfgs[f] for _ in archs for f in range(F)],
+                n_requests=n_requests, seed=seed)
+            points = [flat[a * F:(a + 1) * F] for a in range(A)]
     for a in range(A):
         row, prow = [], []
         for f in range(F):

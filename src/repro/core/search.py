@@ -42,6 +42,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import metrics as _obs_metrics
+from repro.obs.trace import tracer as _obs_tracer
 from repro.traffic.sim import SimConfig, SimResult, simulate
 from repro.traffic.slo import (QPS_CAP, SLO, meets_slo, saturation_qps,
                                summarize)
@@ -158,14 +160,21 @@ def batched_bisect(probe_batch: Callable, brackets: Sequence[float],
     (`[(max_qps, result, saturated_at_bracket)] per lane`, rounds)."""
     lanes = [_BisectLane(h, iters) for h in brackets]
     rounds = 0
+    n_probes = 0
+    tr = _obs_tracer()
     while True:
         reqs = [(i, ln.qps) for i, ln in enumerate(lanes) if not ln.done]
         if not reqs:
             break
-        outs = probe_batch(reqs)
+        with tr.span("lockstep_round", "bisect", round=rounds,
+                     lanes=len(reqs)):
+            outs = probe_batch(reqs)
         for (i, _q), (ok, res) in zip(reqs, outs):
             lanes[i].feed(ok, res)
         rounds += 1
+        n_probes += len(reqs)
+    _obs_metrics().add_many({"search.lockstep_rounds": rounds,
+                             "search.probes": n_probes})
     return [(ln.q_out, ln.res_out, ln.saturated) for ln in lanes], rounds
 
 
@@ -252,6 +261,11 @@ class _ServerBatch:
         if backend not in ("auto", "native", "xla"):
             raise ValueError(f"unknown backend {backend!r} "
                              "(have auto|native|xla|scalar)")
+        tr = self.cfg.tracer
+        if tr is not None and tr.enabled:
+            return "scalar"                # packed engines emit no events;
+                                           # traced replays take the
+                                           # instrumented scalar path
         if self.cfg.policy != "prefill_first":
             return "scalar"                # packed engines only do prefill_first
         shapes = {(len(t.slot_lattice), len(t.kv_lattice),

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core.model_core import (METRIC_FIELDS, Precision,
                                    analyze_gemm_core, pe_multiplier)
+from repro.obs.metrics import metrics as _obs_metrics
 
 # numpy float64 throughout: cycle/movement counts exceed 2^24 for real nets,
 # where float32 would silently round. The JAX-side vectorized evaluation of
@@ -139,6 +140,8 @@ def analyze_network(workloads, h, w, **kw):
         M, K, N, g, rep = wl
         m = analyze_gemm(M, K, N, h, w, groups=g * rep, **kw)
         ms.append(m)
+    _obs_metrics().add_many({"model.network_evals": 1,
+                             "model.gemm_evals": len(ms)})
     pe = (np.asarray(h, np.float64) * np.asarray(w, np.float64)
           * pe_multiplier(kw.get("dataflow", "ws"), kw.get("n_arrays", 1)))
     return combine(ms, pe_count=pe)

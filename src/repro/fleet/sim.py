@@ -41,6 +41,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.fleet.interconnect import DEFAULT_LINK, LinkModel
+from repro.obs.metrics import metrics as _obs_metrics
 from repro.traffic.sim import SimConfig, SimResult, simulate
 from repro.traffic.slo import SLO, meets_slo, saturation_qps, summarize
 from repro.traffic.workload import RequestTrace, TrafficModel
@@ -121,6 +122,14 @@ class FleetResult:
     link_seconds: float = 0.0        # total KV-shipping serialization time
     link_energy: float = 0.0
     per_server: List[SimResult] = dataclasses.field(default_factory=list)
+
+    @property
+    def server_timelines(self) -> List[np.ndarray]:
+        """Bounded (<= SimConfig.timeline_samples) per-server utilization
+        timelines, each (T, 3) [t_s, active_slots, utilization], in
+        `per_server` order (empty entries for packed-engine replays,
+        which record no timelines)."""
+        return [r.timeline for r in self.per_server]
 
     @property
     def energy_per_token(self) -> float:
@@ -211,6 +220,17 @@ def _sub_trace(trace: RequestTrace, idx: np.ndarray) -> RequestTrace:
                         output_len=trace.output_len[idx])
 
 
+def _server_cfg(cfg: FleetSimConfig, role: str, i: int) -> SimConfig:
+    """Per-server engine config: when a tracer is attached, each server
+    gets its own trace lane (`server0`, `decode1`, ...) so the export has
+    one track per server/pool; untraced replays share `cfg.server`
+    untouched (keeping SimConfig equality for the batched search)."""
+    s = cfg.server
+    if s.tracer is None:
+        return s
+    return dataclasses.replace(s, track=f"{role}{i}")
+
+
 def simulate_fleet(fleet: FleetTables, trace: RequestTrace,
                    cfg: FleetSimConfig = FleetSimConfig()) -> FleetResult:
     """Replay `trace` on a fleet. Deterministic for fixed inputs, like the
@@ -222,17 +242,21 @@ def simulate_fleet(fleet: FleetTables, trace: RequestTrace,
     engine while sharing *this exact* routing and accounting code — the
     batched sweep is bit-identical to this loop by construction."""
     t_wall = time.perf_counter()
+    _obs_metrics().inc("fleet.replays")
     if fleet.disaggregated:
         prep = _disagg_prepare(fleet, trace, cfg)
         results = [
-            simulate(t, _sub_trace(prep["dec_trace"], idx), cfg.server)
+            simulate(t, _sub_trace(prep["dec_trace"], idx),
+                     _server_cfg(cfg, "decode", i))
             if len(idx) else None
-            for t, idx in zip(prep["dec_tables"], prep["dparts"])]
+            for i, (t, idx) in enumerate(zip(prep["dec_tables"],
+                                             prep["dparts"]))]
         return _assemble_disagg(fleet, trace, cfg, prep, results, t_wall)
     parts = route_requests(trace, fleet.mixed, cfg)
     results = [
-        simulate(t, _sub_trace(trace, idx), cfg.server) if len(idx) else None
-        for t, idx in zip(fleet.mixed, parts)]
+        simulate(t, _sub_trace(trace, idx), _server_cfg(cfg, "server", i))
+        if len(idx) else None
+        for i, (t, idx) in enumerate(zip(fleet.mixed, parts))]
     return _assemble_mixed(fleet, trace, cfg, parts, results, t_wall)
 
 
@@ -282,19 +306,26 @@ def _disagg_prepare(fleet: FleetTables, trace: RequestTrace,
     n = len(trace)
     clock = cfg.server.clock_hz
 
+    tr = cfg.server.tracer
+    emit = tr is not None and tr.enabled
+
     # --- phase 1: prompts on the prefill pool -----------------------------
     parts = route_requests(trace, fleet.prefill, cfg, phase="prefill")
     done = np.empty(n)
     prefill_secs = 0.0
     energy = 0.0
-    for table, idx in zip(fleet.prefill, parts):
+    for si, (table, idx) in enumerate(zip(fleet.prefill, parts)):
         free = 0.0
         for i in idx:
             pc, pen = table.prefill(int(trace.prompt_len[i]))
-            free = max(free, float(trace.arrival_s[i])) + pc / clock
+            start = max(free, float(trace.arrival_s[i]))
+            free = start + pc / clock
             done[i] = free
             prefill_secs += pc / clock
             energy += pen
+            if emit:
+                tr.complete("prefill", f"prefill{si}", start, free - start,
+                            rid=int(i), tokens=int(trace.prompt_len[i]))
     # --- KV shipping over the fleet link ----------------------------------
     kvb = fleet.decode[0].kv_bits_per_token
     bits = trace.prompt_len.astype(np.float64) * kvb
@@ -303,6 +334,11 @@ def _disagg_prepare(fleet: FleetTables, trace: RequestTrace,
     link_energy = float(sum(cfg.kv_link.transfer_energy(b) for b in bits))
     energy += link_energy
     ready = done + ship
+    if emit:
+        for i in range(n):
+            tr.complete("kv_ship", "kv_link", float(done[i]),
+                        float(ship[i]), rid=i)
+    _obs_metrics().add_many({"fleet.kv_ships": n})
 
     # --- phase 2 setup: decode pool sees ready-ordered arrivals -----------
     order = np.argsort(ready, kind="stable")

@@ -12,6 +12,7 @@ import jax
 from repro.kernels.dse_eval import dse_eval, dse_eval_batched
 from repro.kernels.swa_attention import swa_attention
 from repro.kernels.ws_matmul import ws_matmul
+from repro.obs.metrics import metrics as _obs_metrics
 
 
 def _default_interpret() -> bool:
@@ -34,7 +35,12 @@ def attention(q, k, v, *, window=None, block_q=128, block_kv=128,
 
 def sweep(configs, layers, *, block_c=128, interpret=None, **model_kw):
     """DSE sweep kernel; `model_kw` passes dataflow/precision/accounting
-    options through to the shared model core (see kernels/dse_eval.py)."""
+    options through to the shared model core (see kernels/dse_eval.py).
+
+    Counts one `kernels.sweep_dispatches` per call — here in the plain
+    wrapper, NOT inside the jitted `dse_eval` (which only runs its Python
+    body at trace time), so the counter reflects actual dispatches."""
+    _obs_metrics().inc("kernels.sweep_dispatches")
     interpret = _default_interpret() if interpret is None else interpret
     return dse_eval(configs, layers, block_c=block_c, interpret=interpret,
                     **model_kw)
@@ -43,7 +49,12 @@ def sweep(configs, layers, *, block_c=128, interpret=None, **model_kw):
 def sweep_batched(configs, layer_sets, *, block_c=128, interpret=None,
                   **model_kw):
     """Fused (scenario, config) sweep kernel over batched layer sets —
-    S scenarios x C configs in one dispatch (see kernels/dse_eval.py)."""
+    S scenarios x C configs in one dispatch (see kernels/dse_eval.py).
+
+    Counts one `kernels.fused_dispatches` per call (in the wrapper, not
+    the jitted body) — the counter the "ONE fused dispatch per sweep"
+    regression tests assert on."""
+    _obs_metrics().inc("kernels.fused_dispatches")
     interpret = _default_interpret() if interpret is None else interpret
     return dse_eval_batched(configs, layer_sets, block_c=block_c,
                             interpret=interpret, **model_kw)

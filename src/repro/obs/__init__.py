@@ -1,0 +1,46 @@
+"""Unified observability layer: tracing, metrics, Perfetto export.
+
+Three pieces, one import surface:
+
+  * `Tracer` (`obs.trace`)   — nestable spans / counters / instants /
+    async request lifelines on a wall or simulated clock; off by default,
+    near-free when disabled.
+  * `MetricsRegistry` (`obs.metrics`) — always-on named counters and
+    log-spaced histograms; turns "ONE fused dispatch" docstring claims
+    into numbers tests assert on.
+  * `obs.export`             — Chrome/Perfetto trace-event JSON writer +
+    structural validator; seeded sim-clock traces export byte-identically.
+
+Typical use::
+
+    from repro import obs
+    tr = obs.Tracer(clock="sim")
+    cfg = SimConfig(slots=64, tracer=tr, track="server0")
+    simulate(table, trace, cfg)
+    obs.write_trace(tr, "results/replay.perfetto.json")
+    print(obs.metrics().to_json())
+"""
+from repro.obs.export import (histogram_events, to_trace_events, trace_json,
+                              validate_trace, write_trace)
+from repro.obs.metrics import (Histogram, MetricsRegistry, log_histogram,
+                               metrics, reset_metrics)
+from repro.obs.trace import (Tracer, disable_tracing, enable_tracing,
+                             set_tracer, tracer)
+
+__all__ = [
+    "Histogram",
+    "MetricsRegistry",
+    "Tracer",
+    "disable_tracing",
+    "enable_tracing",
+    "histogram_events",
+    "log_histogram",
+    "metrics",
+    "reset_metrics",
+    "set_tracer",
+    "to_trace_events",
+    "trace_json",
+    "tracer",
+    "validate_trace",
+    "write_trace",
+]

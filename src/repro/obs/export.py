@@ -1,0 +1,182 @@
+"""Perfetto / Chrome trace-event JSON export + schema validation.
+
+`write_trace` renders a `Tracer` — either clock domain — into the Chrome
+trace-event format that `ui.perfetto.dev` (and chrome://tracing) opens
+directly: each distinct track becomes one named thread lane (one per
+server/pool for simulated traces, one per sweep stage for wall traces),
+B/E spans nest, async `b`/`e` request lifelines overlap, and `C` events
+draw counter tracks (active slots, utilization).
+
+The export is DETERMINISTIC: tracks are numbered in sorted-name order,
+events are stably sorted by timestamp, and the JSON is dumped with sorted
+keys and fixed separators — a seeded sim-clock replay therefore exports
+byte-identical files on every run (asserted by the `obs` benchmark stage
+and CI). Timestamps convert from the tracer's seconds to trace-event
+microseconds.
+
+`validate_trace` checks the structural contract the viewers rely on —
+monotone per-track timestamps, balanced B/E span stacks, paired async
+lifelines, non-negative X durations, numeric counter samples — and
+returns a list of problems (empty = valid), which the tests assert on.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.obs.trace import ARGS, DUR, ID, NAME, PH, TRACK, TS, Tracer
+
+_US = 1e6                       # tracer seconds -> trace-event microseconds
+
+
+def to_trace_events(tracer: Tracer, pid: int = 1) -> List[Dict]:
+    """Convert a tracer's event list into Chrome trace-event dicts.
+
+    Tracks map to thread ids in sorted-name order (stable across runs);
+    metadata naming events lead, then all payload events stably sorted by
+    timestamp (ties keep emission order, preserving B-before-E at equal
+    timestamps)."""
+    tracks = sorted(set(ev[TRACK] for ev in tracer.events))
+    tid = {t: i + 1 for i, t in enumerate(tracks)}
+
+    out: List[Dict] = [{
+        "args": {"name": f"repro ({tracer.clock} clock)"},
+        "name": "process_name", "ph": "M", "pid": pid,
+    }]
+    for t in tracks:
+        out.append({"args": {"name": t}, "name": "thread_name", "ph": "M",
+                    "pid": pid, "tid": tid[t]})
+        out.append({"args": {"sort_index": tid[t]},
+                    "name": "thread_sort_index", "ph": "M", "pid": pid,
+                    "tid": tid[t]})
+
+    payload: List[Dict] = []
+    for ev in tracer.events:
+        ph = ev[PH]
+        rec: Dict = {"name": ev[NAME], "ph": ph, "pid": pid,
+                     "tid": tid[ev[TRACK]], "ts": ev[TS] * _US}
+        if ph in ("B", "E", "X"):
+            rec["cat"] = "span"
+        if ph == "X":
+            rec["dur"] = ev[DUR] * _US
+        elif ph == "I":
+            rec["s"] = "t"
+        elif ph in ("b", "n", "e"):
+            rec["cat"] = "req"
+            rec["id"] = str(ev[ID])
+        if ev[ARGS]:
+            rec["args"] = dict(ev[ARGS])
+        payload.append(rec)
+    payload.sort(key=lambda r: r["ts"])          # stable: ties keep order
+    return out + payload
+
+
+def write_trace(tracer: Tracer, path: str,
+                metadata: Optional[Dict] = None) -> str:
+    """Write the tracer as a Perfetto-loadable trace-event JSON file.
+
+    `metadata` lands under ``otherData`` (Perfetto shows it in the trace
+    info panel) — the place capacity summaries attach their latency
+    histograms so a trace carries its distributions. Deterministic: same
+    events + metadata -> byte-identical file."""
+    obj = {
+        "displayTimeUnit": "ms",
+        "otherData": {"clock": tracer.clock, **(metadata or {})},
+        "traceEvents": to_trace_events(tracer),
+    }
+    with open(path, "w") as f:
+        json.dump(obj, f, sort_keys=True, separators=(",", ":"))
+    return path
+
+
+def trace_json(tracer: Tracer, metadata: Optional[Dict] = None) -> str:
+    """The exact bytes `write_trace` would write (for tests/CI)."""
+    obj = {
+        "displayTimeUnit": "ms",
+        "otherData": {"clock": tracer.clock, **(metadata or {})},
+        "traceEvents": to_trace_events(tracer),
+    }
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def histogram_events(hist: Dict, name: str, track: str = "histogram",
+                     t0: float = 0.0, dt: float = 1e-6) -> List[tuple]:
+    """Render a compact log-histogram dict (`obs.metrics.log_histogram`)
+    as counter-event tuples — one 'C' sample per bucket, so the
+    distribution draws as a bar profile on its own counter track. Append
+    to a tracer via ``tracer.events.extend(...)`` before export."""
+    events = []
+    counts = hist["counts"]
+    for i, c in enumerate(counts):
+        events.append(("C", name, track, t0 + i * dt, None, None,
+                       {"count": c}))
+    return events
+
+
+def validate_trace(obj: Union[Dict, Sequence[Dict]]) -> List[str]:
+    """Structural validation of an exported trace (or its event list).
+
+    Returns problem strings; an empty list means the trace honors the
+    schema the viewers rely on:
+      * every payload event has a finite numeric ``ts``;
+      * per-track timestamps are monotone non-decreasing in file order;
+      * B/E spans balance per track (LIFO, matching names);
+      * async b/e lifelines pair up per (cat, id, name);
+      * X events carry a non-negative ``dur``;
+      * C events carry only numeric series values.
+    """
+    events = obj.get("traceEvents", []) if isinstance(obj, dict) else obj
+    problems: List[str] = []
+    last_ts: Dict = {}
+    stacks: Dict = {}
+    async_open: Dict = {}
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph == "M":
+            continue
+        key = (ev.get("pid"), ev.get("tid"))
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts != ts:
+            problems.append(f"event {i}: missing/non-finite ts")
+            continue
+        if ts < last_ts.get(key, float("-inf")):
+            problems.append(
+                f"event {i}: ts {ts} < previous {last_ts[key]} on "
+                f"track {key}")
+        last_ts[key] = ts
+        if ph == "B":
+            stacks.setdefault(key, []).append(ev.get("name"))
+        elif ph == "E":
+            stack = stacks.get(key)
+            if not stack:
+                problems.append(f"event {i}: E with empty span stack on "
+                                f"track {key}")
+            elif stack.pop() != ev.get("name"):
+                problems.append(f"event {i}: E name {ev.get('name')!r} "
+                                f"does not match open span")
+        elif ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                problems.append(f"event {i}: X without non-negative dur")
+        elif ph in ("b", "e", "n"):
+            akey = (ev.get("cat"), ev.get("id"), ev.get("name"))
+            if ph == "b":
+                async_open[akey] = async_open.get(akey, 0) + 1
+            elif ph == "e":
+                n = async_open.get(akey, 0) - 1
+                if n < 0:
+                    problems.append(f"event {i}: async end without begin "
+                                    f"for {akey}")
+                async_open[akey] = n
+        elif ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args or any(
+                    not isinstance(v, (int, float)) for v in args.values()):
+                problems.append(f"event {i}: C without numeric series")
+    for key, stack in stacks.items():
+        if stack:
+            problems.append(f"unbalanced spans on track {key}: {stack}")
+    for akey, n in async_open.items():
+        if n > 0:
+            problems.append(f"unclosed async lifeline {akey}")
+    return problems

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core.model_core import DRAM_COST_PER_WORD, REF_BITS
 from repro.graph.occupancy import DRAM_BITS_PER_CYCLE
+from repro.obs.metrics import metrics as _obs_metrics
 from repro.scenarios.score import DEFAULT_CLOCK_HZ
 from repro.traffic.cost_table import CostTable
 from repro.traffic.workload import RequestTrace
@@ -57,6 +58,12 @@ class SimConfig:
     ub_kib: Optional[float] = None       # None => infinite buffer, no spill
     dram_bits_per_cycle: float = DRAM_BITS_PER_CYCLE
     timeline_samples: int = 2048         # max retained utilization samples
+    # observability: an obs.Tracer(clock="sim") records per-request
+    # lifecycle events (queue -> prefill -> decode runs -> finish, spill
+    # stalls) on the simulation clock under `track` (+ ".req"/".queue"
+    # sub-lanes). None (the default) costs one hoisted bool per replay.
+    tracer: Optional[object] = None
+    track: str = "server"
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -131,6 +138,19 @@ def simulate(table: CostTable, trace: RequestTrace,
     dram_bpc = cfg.dram_bits_per_cycle
     spill_e_per_bit = DRAM_COST_PER_WORD / REF_BITS
 
+    # observability: `emit` is hoisted ONCE so a disabled/absent tracer
+    # costs nothing inside the loop; registry counters accumulate in
+    # plain locals and publish in one add_many at return.
+    tr = cfg.tracer
+    emit = tr is not None and tr.enabled
+    track = cfg.track
+    rtrack = track + ".req"
+    qtrack = track + ".queue"
+    n_events = 0                # discrete-event loop iterations
+    n_lookups = 0               # cost-table interpolations
+    n_spill = 0                 # steps that paid a DRAM-spill stall
+    spill_cyc = 0.0             # total stall cycles charged
+
     t = 0.0
     nstep = 0                   # decode-step counter
     active = 0                  # decode-active slots
@@ -159,15 +179,23 @@ def simulate(table: CostTable, trace: RequestTrace,
 
     def record(t_now, act, util):
         nonlocal tl_stride, tl_count
+        if emit:
+            tr.counter("slots", track, ts=t_now, active=act,
+                       utilization=util)
         tl_count += 1
         if tl_count % tl_stride:
             return
         timeline.append((t_now, act, util))
         if len(timeline) >= 2 * tl_cap:
-            del timeline[::2]            # halve resolution, keep the span
+            # halve resolution, keep the span: delete every other sample
+            # counting BACK from the end so the newest point survives
+            # regardless of parity (del timeline[::2] drops the final
+            # sample whenever the length is odd)
+            del timeline[-2::-2]
             tl_stride *= 2
 
     while True:
+        n_events += 1
         # ---- admissions (FIFO over arrivals; one slot per request) ----
         occupied = active + len(backlog)
         while occupied < slots and nxt < n and arr[nxt] <= t:
@@ -175,6 +203,12 @@ def simulate(table: CostTable, trace: RequestTrace,
             nxt += 1
             occupied += 1
             pc, pen = prefill(plen[rid])
+            n_lookups += 1
+            if emit:
+                tr.async_begin("request", rtrack, rid, arr[rid],
+                               prompt=plen[rid], out=olen[rid])
+                tr.complete("queue", qtrack, arr[rid], t - arr[rid],
+                            rid=rid)
             if chunked:
                 k_ch = -(-plen[rid] // chunk)     # ceil
                 backlog.append([rid, k_ch, pc / k_ch, pen / k_ch,
@@ -182,10 +216,14 @@ def simulate(table: CostTable, trace: RequestTrace,
             else:
                 # exclusive prefill: decode stalls for its whole duration
                 sp = spill_cycles(kv_tok + plen[rid])
+                t0 = t
                 dt = (pc + sp) / clock
                 t += dt
                 prefill_secs += dt
                 spill_secs += sp / clock
+                if sp > 0.0:
+                    n_spill += 1
+                    spill_cyc += sp
                 if active and dt > max_step:   # stalls every running slot
                     max_step = dt
                 energy += pen + sp * dram_bpc * spill_e_per_bit
@@ -193,6 +231,13 @@ def simulate(table: CostTable, trace: RequestTrace,
                 kv_tok += plen[rid]
                 active += 1
                 heappush(heap, (nstep + olen[rid], rid))
+                if emit:
+                    tr.begin("prefill", track, ts=t0, rid=rid,
+                             tokens=plen[rid])
+                    tr.end(track, ts=t)
+                    if sp > 0.0:
+                        tr.instant("kv_spill", track, ts=t, cycles=sp)
+                    tr.async_instant("first_token", rtrack, rid, t)
 
         if active == 0 and not backlog:
             if nxt < n:
@@ -215,9 +260,20 @@ def simulate(table: CostTable, trace: RequestTrace,
                 dec_cyc = dstep(active, kv_dec)
                 en += denergy(active, kv_dec)
                 util_macs = dmacs(active, kv_dec)
+                n_lookups += 3
             sp = spill_cycles(kv_tok + entry[4])
+            t0 = t
             dt = (pre_cyc + dec_cyc + sp) / clock
             t += dt
+            if sp > 0.0:
+                n_spill += 1
+                spill_cyc += sp
+            if emit:
+                tr.begin("chunk_step", track, ts=t0, rid=entry[0],
+                         active=active)
+                tr.end(track, ts=t)
+                if sp > 0.0:
+                    tr.instant("kv_spill", track, ts=t, cycles=sp)
             prefill_secs += pre_cyc / clock
             spill_secs += sp / clock
             if active:
@@ -241,11 +297,16 @@ def simulate(table: CostTable, trace: RequestTrace,
                     kv_tok -= plen[rid] + olen[rid]
                     tokens_out += olen[rid]
                     tpot[rid] = (t - arr[rid] - ttft[rid]) / olen[rid]
+                    if emit:
+                        tr.async_end("request", rtrack, rid, t,
+                                     tokens=olen[rid])
             entry[1] -= 1
             if entry[1] == 0:
                 backlog.popleft()
                 rid = entry[0]
                 ttft[rid] = t - arr[rid]
+                if emit:
+                    tr.async_instant("first_token", rtrack, rid, t)
                 # pro-rata chunking can leave float residue on kv_tok;
                 # snap the finished prompt to its exact token count and
                 # move it from prefill residency to decode residency
@@ -262,6 +323,7 @@ def simulate(table: CostTable, trace: RequestTrace,
                 gap = arr[nxt] - t
                 dur1 = (dstep(active, kv_tok / active)
                         + spill_cycles(kv_tok)) / clock
+                n_lookups += 1
                 k_arr = int(gap / dur1) + 1
                 if k_arr < k:
                     k = k_arr
@@ -270,17 +332,28 @@ def simulate(table: CostTable, trace: RequestTrace,
             kv_mid = kv_tok / active + (k - 1) * 0.5
             cyc = dstep(active, kv_mid)
             sp = spill_cycles(kv_tok + k * active * 0.5)
+            n_lookups += 3
+            t0 = t
             dt = k * (cyc + sp) / clock
             t += dt
             decode_secs += dt
             sps = k * sp / clock
             spill_secs += sps
+            if sp > 0.0:
+                n_spill += k
+                spill_cyc += k * sp
             energy += k * (denergy(active, kv_mid)
                            + sp * dram_bpc * spill_e_per_bit)
             nstep += k
             kv_tok += k * active
             if dt / k > max_step:
                 max_step = dt / k
+            if emit:
+                tr.begin("decode", track, ts=t0, steps=k, active=active)
+                tr.end(track, ts=t)
+                if sp > 0.0:
+                    tr.instant("kv_spill", track, ts=t,
+                               cycles=k * sp)
             record(t, active, dmacs(active, kv_mid) / max(cyc * pe, 1.0))
             while heap and heap[0][0] <= nstep:
                 _, rid = heappop(heap)
@@ -288,7 +361,16 @@ def simulate(table: CostTable, trace: RequestTrace,
                 kv_tok -= plen[rid] + olen[rid]
                 tokens_out += olen[rid]
                 tpot[rid] = (t - arr[rid] - ttft[rid]) / olen[rid]
+                if emit:
+                    tr.async_end("request", rtrack, rid, t,
+                                 tokens=olen[rid])
 
+    _obs_metrics().add_many({
+        "sim.replays": 1, "sim.requests": n, "sim.tokens_out": tokens_out,
+        "sim.events": n_events, "sim.decode_steps": nstep,
+        "sim.table_lookups": n_lookups, "sim.spill_steps": n_spill,
+        "sim.spill_cycles": spill_cyc,
+    })
     return SimResult(
         n=n, arch=table.arch, h=table.h, w=table.w, policy=cfg.policy,
         slots=slots, ttft_s=ttft, tpot_s=tpot, sim_seconds=t,

@@ -18,6 +18,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import log_histogram, metrics as _obs_metrics
 from repro.traffic.cost_table import CostTable
 from repro.traffic.sim import SimConfig, SimResult, simulate
 from repro.traffic.workload import TrafficModel
@@ -52,6 +53,12 @@ def summarize(res: SimResult, slo: Optional[SLO] = None) -> Dict:
         for p in (50.0, 99.0):
             out[f"{name}_p{p:.0f}_s"] = (
                 float(np.percentile(x, p)) if len(x) else float("nan"))
+        # compact log-spaced latency histogram (1 ms .. 1000 s, 4 buckets
+        # per decade + under/overflow): capacity answers carry their
+        # distributions, not just p50/p99 scalars; exported alongside the
+        # trace by obs.export (JSON-ready plain ints/floats)
+        out[f"{name}_hist"] = log_histogram(x, lo=1e-3, hi=1e3,
+                                            buckets_per_decade=4)
     if slo is not None:
         out[f"ttft_p{slo.pct:.0f}_s"] = (
             float(np.percentile(ttft, slo.pct)) if len(ttft)
@@ -112,6 +119,13 @@ def bisect_max_qps(probe, hi: float, iters: int = 9):
     at the final (cap-busting) bracket: the reported capacity is then a
     FLOOR limited by the probe trace, not a resolved maximum — sweeps
     must surface it rather than silently report the cap as capacity."""
+    _probe = probe
+    _inc = _obs_metrics().inc
+
+    def probe(qps):
+        _inc("slo.bisection_probes")
+        return _probe(qps)
+
     lo = hi / 1024.0
     ok_lo, res_lo = probe(lo)
     if not ok_lo:
