@@ -14,6 +14,9 @@ CSV and writes machine-readable results to results/benchmarks/.
   traffic  traffic-driven serving simulation: fused cost-table build vs the
         per-lattice-point dispatch loop, a 1M-request Poisson replay, and
         the SLO capacity sweep + robust traffic config   [beyond paper]
+  kv     KV-reuse & speculative serving: cache-hit and acceptance-rate
+        capacity sweeps, the robust-winner flip table, and the
+        no-reuse == plain-sweep CI gate                  [beyond paper]
   fleet  fleet-scale serving: per-block stage tables from ONE fused
         dse_eval_batched dispatch vs the per-stage loop, a 1M-request
         multi-server fleet replay, and the fleet-composition capacity
@@ -29,10 +32,10 @@ CSV and writes machine-readable results to results/benchmarks/.
   kernels    Pallas kernel microbenches (interpret mode)
 
 ``--quick`` runs the reduced capacity sweep, the serving-scenario sweep,
-the traffic, fleet, search and obs stages, writing
+the traffic, kv, fleet, search and obs stages, writing
 results/benchmarks/BENCH_graph.json, BENCH_scenarios.json,
-BENCH_traffic.json, BENCH_fleet.json, BENCH_search.json and
-BENCH_obs.json (the CI smoke/perf-trajectory probes).
+BENCH_traffic.json, BENCH_kv.json, BENCH_fleet.json, BENCH_search.json
+and BENCH_obs.json (the CI smoke/perf-trajectory probes).
 """
 from __future__ import annotations
 
@@ -330,6 +333,133 @@ def traffic_bench(quick: bool = False):
         "robust_winner_hw": [int(hw_out[winner, 0]),
                              int(hw_out[winner, 1])],
         "robust_frontier": int(mask.sum()),
+    })
+
+
+def kv_bench(quick: bool = False):
+    """KV-reuse & speculative serving probes, written to BENCH_kv.json:
+
+      * the no-reuse gate row: the traffic stage's SLO capacity sweep
+        re-run through the `cache_hit=0` path — CI asserts it matches
+        BENCH_traffic.json exactly (the KV machinery must be a no-op
+        when off);
+      * cache-hit sweep: max QPS + the Fig. 5 robust array-shape winner
+        at increasing shared-prefix fractions (prefix-cache tier on);
+      * acceptance-rate sweep: draft/verify speculative decoding at
+        increasing acceptance rates, same tracking;
+      * the winner-flip table: every (scenario, SLO) point whose robust
+        winner differs from the no-reuse winner (acceptance: >= 1).
+    """
+    from repro.core.dse import robust_traffic_config, slo_capacity_sweep
+    from repro.traffic import (SLO, KVReuseConfig, SimConfig,
+                               SpecDecodeConfig, TrafficModel,
+                               build_cost_tables)
+
+    n_req = 300 if quick else 1200
+    sim = SimConfig(slots=16)
+    tables = build_cost_tables(backend="pallas")
+
+    # ---- no-reuse gate: the traffic stage's sweep through cache_hit=0 ----
+    # (same archs/hw/mix/SLO/tables as traffic_bench; CI asserts the
+    # numbers below equal BENCH_traffic.json's)
+    g_archs = ["h2o-danube-3-4b", "xlstm-125m"]
+    g_hw = ((64, 64), (128, 128), (256, 256), (64, 256))
+    g_slo = SLO(ttft_s=2.0, tpot_s=0.15)
+    g_mix = {
+        "h2o-danube-3-4b": TrafficModel(rate_qps=1.0, prompt_median=256,
+                                        output_median=64),
+        "xlstm-125m": TrafficModel(rate_qps=1.0, prompt_median=128,
+                                   output_median=32, arrival="mmpp"),
+    }
+    gate = slo_capacity_sweep(g_mix, g_slo, archs=g_archs, hw=g_hw,
+                              sim=sim, n_requests=n_req, tables=tables,
+                              cache_hit=0.0)
+    plain = slo_capacity_sweep(g_mix, g_slo, archs=g_archs, hw=g_hw,
+                               sim=sim, n_requests=n_req, tables=tables)
+    gate_ok = bool((gate.max_qps == plain.max_qps).all())
+    assert gate_ok, "cache_hit=0 drifted from the plain sweep"
+    _emit("kv_no_reuse_gate", 0.0, f"identical_to_plain={gate_ok}")
+
+    # ---- scenario sweeps: iso-PE aspect ratios, where reuse can flip ----
+    # the robust winner (a 256x256 vs 64x64 comparison is a PE-count
+    # contest, not a shape question)
+    arch = "h2o-danube-3-4b"
+    hw = ((128, 128), (64, 256), (256, 64))     # 16384 PEs each
+    mix = TrafficModel(rate_qps=1.0, prompt_median=128, output_median=256,
+                       prompt_range=(16, 1024), output_range=(16, 1024))
+    slos = {"tight": SLO(ttft_s=0.5, tpot_s=0.05),
+            "relaxed": SLO(ttft_s=2.0, tpot_s=0.15)}
+    spec_k = 4
+    spec_tables = build_cost_tables(
+        [arch, "xlstm-125m"], hw, backend="pallas",
+        spec=SpecDecodeConfig("xlstm-125m", k=spec_k))
+
+    def winner(sw):
+        hw_out, _F, mask, win = robust_traffic_config(
+            sw, weights={arch: 1.0})
+        return [int(hw_out[win, 0]), int(hw_out[win, 1])], int(mask.sum())
+
+    rows, flips = [], []
+    t0 = time.perf_counter()
+    for slo_name, slo in slos.items():
+        def sweep(**kw):
+            return slo_capacity_sweep(mix, slo, archs=[arch], hw=hw,
+                                      sim=sim, n_requests=n_req, **kw)
+
+        w0, _ = winner(sweep(tables=tables))
+        scen = [("no_reuse", {"tables": tables})]
+        for share in (0.25, 0.5, 0.85):
+            scen.append((f"cache_hit_{share}", {
+                "tables": tables,
+                "cache_hit": KVReuseConfig(share=share, prefix_len=1024,
+                                           n_prefixes=4,
+                                           cache_mib=4096.0)}))
+        for acc in (0.5, 0.7, 0.9):
+            scen.append((f"spec_accept_{acc}", {
+                "tables": spec_tables,
+                "spec_decode": SpecDecodeConfig("xlstm-125m", k=spec_k,
+                                                acceptance=acc)}))
+        scen.append(("combined_0.85_0.9", {
+            "tables": spec_tables,
+            "cache_hit": KVReuseConfig(share=0.85, prefix_len=1024,
+                                       n_prefixes=4, cache_mib=4096.0),
+            "spec_decode": SpecDecodeConfig("xlstm-125m", k=spec_k,
+                                            acceptance=0.9)}))
+        for name, kw in scen:
+            sw = sweep(**kw)
+            w, front = winner(sw)
+            flip = w != w0
+            rows.append({"slo": slo_name, "scenario": name,
+                         "winner_hw": w, "no_reuse_winner_hw": w0,
+                         "flip": flip, "frontier": front,
+                         "max_qps": sw.max_qps.tolist(),
+                         "energy_per_token":
+                             sw.energy_per_token.tolist()})
+            if flip:
+                flips.append({"slo": slo_name, "scenario": name,
+                              "winner_hw": w, "no_reuse_winner_hw": w0})
+            _emit(f"kv_{slo_name}_{name}", 0.0,
+                  f"winner={w[0]}x{w[1]};flip={flip}")
+    us_rows = (time.perf_counter() - t0) * 1e6
+    _emit("kv_winner_flip_table", us_rows,
+          f"flips={len(flips)}of{len(rows)}"
+          + (f";first={flips[0]['slo']}/{flips[0]['scenario']}"
+             f"@{flips[0]['winner_hw'][0]}x{flips[0]['winner_hw'][1]}"
+             if flips else ""))
+    _save("BENCH_kv", {
+        "gate": {
+            "archs": g_archs, "hw": [list(p) for p in g_hw],
+            "slo": {"ttft_s": g_slo.ttft_s, "tpot_s": g_slo.tpot_s,
+                    "pct": g_slo.pct},
+            "no_reuse_max_qps": gate.max_qps.tolist(),
+            "cache_hit0_identical": gate_ok,
+        },
+        "arch": arch, "hw": [list(p) for p in hw],
+        "slos": {k: {"ttft_s": v.ttft_s, "tpot_s": v.tpot_s,
+                     "pct": v.pct} for k, v in slos.items()},
+        "n_requests": n_req,
+        "scenarios": rows,
+        "winner_flips": flips,
     })
 
 
@@ -802,6 +932,7 @@ def main() -> None:
         graph_quick()
         scenarios_bench(quick=True)
         traffic_bench(quick=True)
+        kv_bench(quick=True)
         fleet_bench(quick=True)
         search_bench(quick=True)
         obs_bench(quick=True)
@@ -814,6 +945,7 @@ def main() -> None:
     lm_architectures()
     scenarios_bench()
     traffic_bench()
+    kv_bench()
     fleet_bench()
     search_bench()
     obs_bench()

@@ -363,9 +363,10 @@ class ScenarioSweepResult:
         return int(self.hs[i]), int(self.ws[j]), float(e[i, j])
 
 
-def scenario_sweep(named_workloads: Dict[str, Sequence[Workload]], hs=None,
+def scenario_sweep(named_workloads, hs=None,
                    ws=None, backend: str = "pallas", fused: bool = True,
-                   block_c: int = 128, **model_kw) -> ScenarioSweepResult:
+                   block_c: int = 128, cache_hit: float = 0.0,
+                   spec_decode=None, **model_kw) -> ScenarioSweepResult:
     """Sweep the whole scenario matrix over the (h, w) grid.
 
     `backend="pallas"` with `fused=True` (the default) pads every
@@ -373,7 +374,27 @@ def scenario_sweep(named_workloads: Dict[str, Sequence[Workload]], hs=None,
     SINGLE fused kernel dispatch over (scenario, h, w); `fused=False` is
     the per-scenario dispatch loop kept as the speedup baseline.
     `backend="numpy"` is the float64 reference (always a per-scenario
-    loop; exact, used by the equivalence tests)."""
+    loop; exact, used by the equivalence tests).
+
+    `named_workloads` is either the lowered {name: workload list} dict or
+    a `scenarios.matrix.Scenario` list. The KV-serving knobs — `cache_hit`
+    (fraction of each prefill prompt served from the cross-request prefix
+    cache) and `spec_decode` (a `traffic.cost_table.SpecDecodeConfig`;
+    decode cells lower as k-draft + verify rounds) — re-lower the cells
+    via `scenarios.matrix.kv_named_workloads`, so they require the
+    Scenario list, not a pre-lowered dict."""
+    if cache_hit or spec_decode is not None:
+        from repro.scenarios.matrix import kv_named_workloads
+        if isinstance(named_workloads, dict):
+            raise ValueError(
+                "scenario_sweep: cache_hit/spec_decode re-lower the "
+                "scenario cells — pass the Scenario list "
+                "(serving_matrix(...)), not a pre-lowered dict")
+        named_workloads = kv_named_workloads(named_workloads, cache_hit,
+                                             spec_decode)
+    elif not isinstance(named_workloads, dict):
+        from repro.scenarios.matrix import named_workloads as _lower
+        named_workloads = _lower(named_workloads)
     hs = grid_axes() if hs is None else np.asarray(hs)
     ws = grid_axes() if ws is None else np.asarray(ws)
     H, W = np.meshgrid(hs, ws, indexing="ij")
@@ -550,10 +571,35 @@ class SLOSweepResult:
                 float(self.max_qps[a, c]))
 
 
+def _kv_scenario(per_arch: Dict, sim, cache_hit, spec_decode):
+    """Apply the KV-reuse / speculative-decode scenario knobs to a
+    per-arch traffic dict + a `traffic.sim.SimConfig`.
+
+    `cache_hit` is a `traffic.workload.KVReuseConfig` or a float
+    shorthand (the shared-template probability at the defaults); it adds
+    the shared-prefix axis to every traffic model and turns the
+    simulator's prefix-cache tier on. `spec_decode` is a
+    `traffic.cost_table.SpecDecodeConfig` and arms the draft/verify
+    engine (the cost tables must carry the matching lattices). Returns
+    the adjusted (per_arch, sim, kv_config_or_None)."""
+    from repro.traffic.workload import KVReuseConfig
+    kv = None
+    if cache_hit is not None:
+        kv = cache_hit if isinstance(cache_hit, KVReuseConfig) \
+            else KVReuseConfig(share=float(cache_hit))
+        per_arch = {a: kv.apply(tm) for a, tm in per_arch.items()}
+        if kv.share > 0.0:
+            sim = dataclasses.replace(sim, prefix_cache_mib=kv.cache_mib)
+    if spec_decode is not None:
+        sim = dataclasses.replace(sim, spec=spec_decode)
+    return per_arch, sim, kv
+
+
 def slo_capacity_sweep(traffic, slo, archs: Optional[Sequence[str]] = None,
                        hw=None, sim=None, n_requests: int = 1200,
                        seed: int = 0, backend: str = "pallas",
                        tables=None, search: str = "auto",
+                       cache_hit=None, spec_decode=None,
                        **model_kw) -> SLOSweepResult:
     """The SLO-aware capacity design space: which (h, w) sustains how much
     traffic for each architecture.
@@ -570,6 +616,12 @@ def slo_capacity_sweep(traffic, slo, archs: Optional[Sequence[str]] = None,
     with one packed multi-lane replay per round (`core.search`). The two
     paths are bit-identical — same probe sequences, same replays — the
     batched one just runs an order of magnitude faster.
+
+    `cache_hit` / `spec_decode` are the KV-serving scenario knobs
+    (`_kv_scenario`): shared-prefix traffic + the prefix-cache tier, and
+    draft/verify speculative decoding (when set, the cost tables are
+    built with the extra draft/verify lattices — prebuilt `tables` must
+    already carry them).
     """
     from repro.configs.base import list_archs
     from repro.core.search import batched_max_sustainable_qps
@@ -588,13 +640,14 @@ def slo_capacity_sweep(traffic, slo, archs: Optional[Sequence[str]] = None,
         with _tr.span("cost_tables", "dse", archs=len(archs),
                       configs=len(hw)):
             tables = build_cost_tables(archs, hw, backend=backend,
-                                       **model_kw)
+                                       spec=spec_decode, **model_kw)
     per_arch = traffic if isinstance(traffic, dict) else \
         {a: traffic for a in archs}
     missing = set(archs) - set(per_arch)
     if missing:
         raise ValueError(f"slo_capacity_sweep: no traffic model for "
                          f"{sorted(missing)[:3]}")
+    per_arch, sim, _ = _kv_scenario(per_arch, sim, cache_hit, spec_decode)
 
     A, C = len(archs), len(hw)
     qps = np.zeros((A, C))
@@ -760,6 +813,23 @@ def enumerate_fleet_specs(pe_budget: int,
     return out
 
 
+class _SpecStageTables:
+    """Adapter serving a plain spec-enabled `CostTableSet` through the
+    stage-table interface: speculative fleets are restricted to
+    single-array servers (stages=1, tp=1), whose tables need no
+    partitioning — `resolve_fleet` passes them through so the
+    draft/verify lattices survive to the per-server simulator."""
+    passthrough = True
+
+    def __init__(self, tables):
+        self._tables = tables
+
+    def table(self, arch: str, h: int, w: int, tp: int = 1):
+        if tp != 1:
+            raise ValueError("speculative fleets are tp=1")
+        return self._tables.table(arch, h, w)
+
+
 def resolve_fleet(stage_tables, arch: str, fleet: FleetSpec, link=None):
     """Materialize a FleetSpec into runnable per-server cost tables
     (`fleet.sim.FleetTables`) + the pipeline plans behind them."""
@@ -769,7 +839,12 @@ def resolve_fleet(stage_tables, arch: str, fleet: FleetSpec, link=None):
     link = DEFAULT_LINK if link is None else link
     pools: Dict[str, list] = {"mixed": [], "prefill": [], "decode": []}
     plans, cache = [], {}
+    passthrough = getattr(stage_tables, "passthrough", False)
     for pool in fleet.pools:
+        if passthrough:
+            pools[pool.role] += [stage_tables.table(
+                arch, pool.h, pool.w, pool.tp)] * pool.n_servers
+            continue
         key = (pool.h, pool.w, pool.tp, pool.stages)
         if key not in cache:
             cache[key] = partition_server_table(
@@ -808,6 +883,7 @@ def fleet_capacity_sweep(traffic, slo, fleets: Sequence[FleetSpec],
                          stage_tables=None, lattices: Optional[dict] = None,
                          pe_budget: Optional[int] = None,
                          search: str = "auto",
+                         cache_hit=None, spec_decode=None,
                          **model_kw) -> FleetSweepResult:
     """The fleet-composition design space, end to end: every fleet's
     servers are partitioned (DP pipeline splits + tensor splits) over
@@ -852,9 +928,34 @@ def fleet_capacity_sweep(traffic, slo, fleets: Sequence[FleetSpec],
     if missing:
         raise ValueError(f"fleet_capacity_sweep: no traffic model for "
                          f"{sorted(missing)[:3]}")
+    per_arch, server_cfg, _ = _kv_scenario(per_arch, sim.server,
+                                           cache_hit, spec_decode)
+    if server_cfg is not sim.server:
+        sim = dataclasses.replace(sim, server=server_cfg)
+    if spec_decode is not None:
+        # Speculative decode needs the draft/verify lattices, which the
+        # pipeline-partitioned stage tables do not carry: restrict to
+        # single-array servers (stages=1, tp=1) and resolve those pools
+        # straight from spec-enabled plain cost tables.
+        bad = [f.name for f in fleets
+               if any(p.stages != 1 or p.tp != 1 for p in f.pools)]
+        if bad:
+            raise ValueError(
+                "fleet_capacity_sweep: spec_decode requires single-array "
+                f"servers (stages=1, tp=1); offending fleets: {bad[:3]}")
 
     _tr = _obs_tracer()
-    if stage_tables is None:
+    if spec_decode is not None and stage_tables is None:
+        from repro.traffic.cost_table import build_cost_tables
+        hw = sorted({(p.h, p.w) for f in fleets for p in f.pools})
+        with _tr.span("cost_tables", "dse", archs=len(archs),
+                      configs=len(hw)):
+            spec_tables = build_cost_tables(archs, hw, backend=backend,
+                                            spec=spec_decode,
+                                            **(lattices or {}),
+                                            **model_kw)
+        stage_tables = _SpecStageTables(spec_tables)
+    elif stage_tables is None:
         hw = sorted({(p.h, p.w) for f in fleets for p in f.pools})
         tps = sorted({p.tp for f in fleets for p in f.pools})
         with _tr.span("stage_tables", "dse", archs=len(archs),

@@ -195,7 +195,9 @@ class _TraceFactory:
 
     def trace(self, tm: TrafficModel, qps: float, n: int, seed: int,
               paired: bool) -> RequestTrace:
-        if tm.arrival != "poisson":
+        if tm.arrival != "poisson" or tm.prefix_lens is not None:
+            # prefix-bearing models take the full sampler so the cached
+            # fast path never silently drops the shared-prefix axis
             return tm.with_rate(qps).sample(n, seed, paired=paired)
         key = (dataclasses.replace(tm, rate_qps=1.0), n, seed, paired)
         ent = self._cache.get(key)
@@ -268,6 +270,9 @@ class _ServerBatch:
                                            # instrumented scalar path
         if self.cfg.policy != "prefill_first":
             return "scalar"                # packed engines only do prefill_first
+        if self.cfg.prefix_cache_mib is not None or self.cfg.spec is not None:
+            return "scalar"                # KV-reuse / speculative replays
+                                           # run the scalar event loop
         shapes = {(len(t.slot_lattice), len(t.kv_lattice),
                    len(t.prompt_lattice)) for t in self.tables}
         if len(shapes) != 1:

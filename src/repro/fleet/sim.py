@@ -42,11 +42,12 @@ import numpy as np
 
 from repro.fleet.interconnect import DEFAULT_LINK, LinkModel
 from repro.obs.metrics import metrics as _obs_metrics
+from repro.traffic.cost_table import _interp_axis
 from repro.traffic.sim import SimConfig, SimResult, simulate
 from repro.traffic.slo import SLO, meets_slo, saturation_qps, summarize
 from repro.traffic.workload import RequestTrace, TrafficModel
 
-ROUTING = ("round_robin", "jsq")
+ROUTING = ("round_robin", "jsq", "prefix_affinity")
 
 
 @dataclasses.dataclass
@@ -121,6 +122,14 @@ class FleetResult:
     disaggregated: bool = False
     link_seconds: float = 0.0        # total KV-shipping serialization time
     link_energy: float = 0.0
+    # KV-reuse / speculative-decode accounting, summed over servers
+    # (kv_ship_reuse_hits counts disagg KV ships deduplicated against an
+    # already-shipped prefix template)
+    cache_hits: int = 0
+    cache_evictions: int = 0
+    draft_steps: int = 0
+    accepted_tokens: int = 0
+    kv_ship_reuse_hits: int = 0
     per_server: List[SimResult] = dataclasses.field(default_factory=list)
 
     @property
@@ -182,8 +191,17 @@ def _est_service_seconds(table, plen: np.ndarray, olen: np.ndarray,
                    np.asarray(table.prefill_cycles))
     if phase == "prefill":
         return pc / cfg.clock_hz
-    kv_mid = float(np.mean(plen) + 0.5 * np.mean(olen))
-    step = table.decode_step(cfg.slots, kv_mid)
+    # Per-request KV midpoints: pricing every request at the FLEET-mean
+    # midpoint flattens the decode-cost spread, so JSQ underestimates
+    # long-prompt/long-output requests and over-packs whichever server
+    # they land on. Blend the slot axis once (it is pinned at
+    # `cfg.slots`), then the KV axis vectorizes with np.interp — still
+    # one lattice read per server, now priced per request.
+    kv_mid = plen.astype(np.float64) + 0.5 * olen.astype(np.float64)
+    grid = np.asarray(table.decode_cycles, np.float64)
+    i, fa = _interp_axis(list(table.slot_lattice), float(cfg.slots))
+    row = (1.0 - fa) * grid[i] + fa * grid[i + 1]
+    step = np.interp(kv_mid, np.asarray(table.kv_lattice, np.float64), row)
     return (pc + olen.astype(np.float64) * step) / cfg.clock_hz
 
 
@@ -197,6 +215,17 @@ def route_requests(trace: RequestTrace, tables: Sequence,
         return [np.arange(n)]
     if cfg.routing == "round_robin":
         return [np.arange(i, n, k) for i in range(k)]
+    if cfg.routing == "prefix_affinity":
+        # Template-sticky routing: all requests sharing a prefix template
+        # land on one server (pid mod K), so that server's prefix cache
+        # sees every reuse opportunity instead of 1/K of them; unshared
+        # requests round-robin. Falls back to round-robin when the trace
+        # has no prefix axis.
+        if trace.prefix_id is None:
+            return [np.arange(i, n, k) for i in range(k)]
+        pid = trace.prefix_id
+        srv = np.where(pid >= 0, pid % k, np.arange(n) % k)
+        return [np.flatnonzero(srv == i) for i in range(k)]
     # jsq: argmin of work-conserving busy-until estimates
     est = np.stack([_est_service_seconds(t, trace.prompt_len,
                                          trace.output_len, cfg.server,
@@ -215,9 +244,12 @@ def route_requests(trace: RequestTrace, tables: Sequence,
 
 
 def _sub_trace(trace: RequestTrace, idx: np.ndarray) -> RequestTrace:
+    pid = None if trace.prefix_id is None else trace.prefix_id[idx]
+    pfx = None if trace.prefix_len is None else trace.prefix_len[idx]
     return RequestTrace(arrival_s=trace.arrival_s[idx],
                         prompt_len=trace.prompt_len[idx],
-                        output_len=trace.output_len[idx])
+                        output_len=trace.output_len[idx],
+                        prefix_id=pid, prefix_len=pfx)
 
 
 def _server_cfg(cfg: FleetSimConfig, role: str, i: int) -> SimConfig:
@@ -292,6 +324,10 @@ def _assemble_mixed(fleet: FleetTables, trace: RequestTrace,
                              default=0.0),
         energy_eq1=sum(r.energy_eq1 for r in res),
         routing=cfg.routing, n_servers=len(fleet.mixed),
+        cache_hits=sum(r.cache_hits for r in res),
+        cache_evictions=sum(r.cache_evictions for r in res),
+        draft_steps=sum(r.draft_steps for r in res),
+        accepted_tokens=sum(r.accepted_tokens for r in res),
         per_server=res)
 
 
@@ -329,6 +365,24 @@ def _disagg_prepare(fleet: FleetTables, trace: RequestTrace,
     # --- KV shipping over the fleet link ----------------------------------
     kvb = fleet.decode[0].kv_bits_per_token
     bits = trace.prompt_len.astype(np.float64) * kvb
+    # Shipped-KV reuse: when the trace carries a prefix axis and the fleet
+    # runs a prefix-cache tier, the decode pool already holds each
+    # template's KV after its first ship — later requests sharing that
+    # template ship only their unique suffix. Dedup in prefill-completion
+    # order (the order blocks actually hit the link).
+    reuse_hits = 0
+    if (trace.prefix_id is not None
+            and cfg.server.prefix_cache_mib is not None):
+        seen = set()
+        for i in np.argsort(done, kind="stable"):
+            pid = int(trace.prefix_id[i])
+            if pid < 0:
+                continue
+            if pid in seen:
+                bits[i] -= float(trace.prefix_len[i]) * kvb
+                reuse_hits += 1
+            else:
+                seen.add(pid)
     ship = np.asarray([cfg.kv_link.transfer_cycles(b) for b in bits]) / clock
     link_secs = float(ship.sum())
     link_energy = float(sum(cfg.kv_link.transfer_energy(b) for b in bits))
@@ -338,9 +392,16 @@ def _disagg_prepare(fleet: FleetTables, trace: RequestTrace,
         for i in range(n):
             tr.complete("kv_ship", "kv_link", float(done[i]),
                         float(ship[i]), rid=i)
-    _obs_metrics().add_many({"fleet.kv_ships": n})
+    counters = {"fleet.kv_ships": n}
+    if reuse_hits:
+        counters["fleet.kv_ship_reuse_hits"] = reuse_hits
+    _obs_metrics().add_many(counters)
 
     # --- phase 2 setup: decode pool sees ready-ordered arrivals -----------
+    # (the prefix axis is NOT threaded through: decode-side prefill is
+    # free, so a per-server prefix cache there would charge transfer time
+    # while skipping nothing — reuse in the disagg path is the link-level
+    # dedup above)
     order = np.argsort(ready, kind="stable")
     dec_trace = RequestTrace(arrival_s=ready[order],
                              prompt_len=trace.prompt_len[order],
@@ -351,7 +412,8 @@ def _disagg_prepare(fleet: FleetTables, trace: RequestTrace,
     return {"dec_tables": dec_tables, "dec_trace": dec_trace,
             "dparts": dparts, "order": order, "ready": ready,
             "prefill_secs": prefill_secs, "energy": energy,
-            "link_secs": link_secs, "link_energy": link_energy}
+            "link_secs": link_secs, "link_energy": link_energy,
+            "reuse_hits": reuse_hits}
 
 
 def _assemble_disagg(fleet: FleetTables, trace: RequestTrace,
@@ -391,6 +453,11 @@ def _assemble_disagg(fleet: FleetTables, trace: RequestTrace,
         routing=cfg.routing,
         n_servers=fleet.n_servers, disaggregated=True,
         link_seconds=prep["link_secs"], link_energy=prep["link_energy"],
+        cache_hits=sum(r.cache_hits for r in res),
+        cache_evictions=sum(r.cache_evictions for r in res),
+        draft_steps=sum(r.draft_steps for r in res),
+        accepted_tokens=sum(r.accepted_tokens for r in res),
+        kv_ship_reuse_hits=prep.get("reuse_hits", 0),
         per_server=res)
 
 

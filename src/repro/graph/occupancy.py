@@ -45,6 +45,21 @@ def spill_bits(profile: OccupancyProfile, ub_bits: Optional[float]) -> float:
 DRAM_BITS_PER_CYCLE = 256.0
 
 
+def prefix_transfer_cycles(bits, bits_per_cycle: float = DRAM_BITS_PER_CYCLE):
+    """One-way DRAM transfer cycles for a cached-prefix KV block.
+
+    The cross-request prefix-cache tier (traffic/sim.py) lives one level
+    above the per-step spill model: a cache HIT refetches the template's
+    KV from DRAM instead of recomputing its prefill, a MISS writes the
+    freshly built block out so later requests can hit. Each is ONE move —
+    half the round-trip convention of `spill_latency_cycles`, which
+    charges write+refetch per step for state that thrashes. Energy prices
+    the same bits through `core.model_core.dram_spill_energy`'s per-bit
+    weight (evictions, being pure write-backs, pay energy but no stall).
+    Vectorized over `bits`."""
+    return np.asarray(bits, np.float64) / float(bits_per_cycle)
+
+
 def spill_latency_cycles(occ_bits, ub_bits: Optional[float],
                          bits_per_cycle: float = DRAM_BITS_PER_CYCLE):
     """Per-step stall cycles for residency above a finite UB.

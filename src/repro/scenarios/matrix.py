@@ -90,3 +90,37 @@ def named_workloads(scenarios: Sequence[Scenario]
                     ) -> Dict[str, List[Workload]]:
     """{scenario name: flat workload list} — the scenario_sweep input."""
     return {sc.name: sc.workloads() for sc in scenarios}
+
+
+def kv_named_workloads(scenarios: Sequence[Scenario],
+                       cache_hit: float = 0.0,
+                       spec=None) -> Dict[str, List[Workload]]:
+    """Scenario lowering under KV reuse / speculative decoding.
+
+    The static-matrix counterpart of the serving simulator's
+    `prefix_cache_mib` / `SpecDecodeConfig` knobs: prefill cells lower at
+    the post-cache-hit effective prompt (`seq_len * (1 - cache_hit)` —
+    the cached prefix portion of prefill is skipped), and decode cells
+    under `spec` (a `traffic.cost_table.SpecDecodeConfig`) lower as one
+    draft/verify ROUND: `k` draft-model decode steps plus one target
+    verify step over all `k + 1` candidate positions. Keys stay the
+    ORIGINAL scenario names so robust-mix weight dicts carry over
+    unchanged between the no-reuse and reuse sweeps."""
+    if not 0.0 <= cache_hit < 1.0:
+        raise ValueError(f"cache_hit must be in [0, 1), got {cache_hit}")
+    out: Dict[str, List[Workload]] = {}
+    for sc in scenarios:
+        if sc.phase == "prefill" and cache_hit > 0.0:
+            s_eff = max(1, int(round(sc.seq_len * (1.0 - cache_hit))))
+            out[sc.name] = Scenario(sc.arch, "prefill", sc.batch,
+                                    s_eff).workloads()
+        elif sc.phase == "decode" and spec is not None:
+            draft = extract_workloads(get_config(spec.draft_arch),
+                                      sc.shape)
+            verify = extract_workloads(get_config(sc.arch), ShapeConfig(
+                sc.name + "/verify", sc.seq_len,
+                sc.batch * (spec.k + 1), "decode"))
+            out[sc.name] = draft * spec.k + verify
+        else:
+            out[sc.name] = sc.workloads()
+    return out

@@ -17,11 +17,13 @@ QPS per (arch, h, w) under an SLO) and `core.dse.robust_traffic_config`
 mix).
 """
 from repro.traffic.cost_table import (CostTable, CostTableSet,  # noqa
-                                      DEFAULT_HW, build_cost_tables,
-                                      kv_bits_per_token)
+                                      DEFAULT_HW, SpecDecodeConfig,
+                                      build_cost_tables, kv_bits_per_token,
+                                      spec_round_counts)
 from repro.traffic.sim import SimConfig, SimResult, simulate  # noqa
 from repro.traffic.slo import (SLO, max_sustainable_qps, meets_slo,  # noqa
                                saturation_qps, summarize)
-from repro.traffic.workload import (RequestTrace, TrafficModel,  # noqa
-                                    bucket_lengths, lognormal_lengths,
-                                    mmpp_arrivals, poisson_arrivals)
+from repro.traffic.workload import (KVReuseConfig, RequestTrace,  # noqa
+                                    TrafficModel, bucket_lengths,
+                                    lognormal_lengths, mmpp_arrivals,
+                                    poisson_arrivals)

@@ -67,6 +67,57 @@ def _interp_axis(lattice: List[float], x: float) -> Tuple[int, float]:
     return i, (x - lattice[i]) / (lattice[i + 1] - lattice[i])
 
 
+@dataclasses.dataclass(frozen=True)
+class SpecDecodeConfig:
+    """Draft/verify speculative decoding as a cost-table axis.
+
+    One decode ROUND runs `k` draft-model steps then ONE target-model
+    verify step over all `k + 1` candidate positions (each speculated
+    token is a GEMM row, so verify lowers as decode at batch
+    `slots * (k + 1)`). Acceptance follows the standard leading-run
+    model: among the k drafts, the round emits `1 + run` tokens where
+    `run` is the leading run of iid Bernoulli(`acceptance`) successes —
+    between 1 and k+1 tokens per round. `seed` drives the acceptance
+    draws (`spec_round_counts`), so a replay is deterministic."""
+    draft_arch: str
+    k: int = 4
+    acceptance: float = 0.7
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if not 0.0 <= self.acceptance <= 1.0:
+            raise ValueError(
+                f"acceptance must be in [0, 1], got {self.acceptance}")
+
+
+def spec_round_counts(output_len, k: int, acceptance: float,
+                      seed: int = 0) -> np.ndarray:
+    """(n,) draft/verify rounds to emit each request's `output_len`
+    tokens under the leading-run acceptance model — a pure function of
+    (output_len, k, acceptance, seed), drawn from a dedicated child
+    stream so it shares no entropy with trace sampling. Exact token
+    accounting: request i's accepted-beyond-baseline tokens are
+    `output_len[i] - rounds[i]` (every round emits its verify token plus
+    the accepted draft run), which is what the `sim.accepted_tokens`
+    counter reconciles against."""
+    olen = np.asarray(output_len, np.int64)
+    if olen.ndim != 1:
+        raise ValueError("output_len must be 1-d")
+    rng = np.random.default_rng([int(seed), 0x5bec])
+    remaining = olen.copy()
+    rounds = np.zeros(len(olen), np.int64)
+    alive = remaining > 0
+    while alive.any():
+        u = rng.random((int(alive.sum()), k))
+        run = (u < acceptance).cumprod(axis=1).sum(axis=1)  # in [0, k]
+        remaining[alive] -= np.minimum(run + 1, remaining[alive])
+        rounds[alive] += 1
+        alive = remaining > 0
+    return rounds
+
+
 @dataclasses.dataclass
 class CostTable:
     """Per-step cost lattice of ONE (arch, h, w) design point.
@@ -90,6 +141,20 @@ class CostTable:
     prefill_energy: List[float] = dataclasses.field(default_factory=list)
     kv_bits_per_token: float = 0.0
     pe: float = 0.0                     # h * w (utilization normalizer)
+    # speculative-decode lattices (empty unless built with spec=...):
+    # draft_* is the DRAFT arch's decode step on this same (h, w) array;
+    # verify_* is the target arch's decode step at batch slot*(k+1) —
+    # both indexed [slot][kv] on the shared lattices above.
+    spec_k: int = 0                     # 0 => no spec lattices
+    draft_arch: str = ""
+    draft_cycles: List[List[float]] = dataclasses.field(default_factory=list)
+    draft_energy: List[List[float]] = dataclasses.field(default_factory=list)
+    draft_macs: List[List[float]] = dataclasses.field(default_factory=list)
+    verify_cycles: List[List[float]] = dataclasses.field(
+        default_factory=list)
+    verify_energy: List[List[float]] = dataclasses.field(
+        default_factory=list)
+    verify_macs: List[List[float]] = dataclasses.field(default_factory=list)
 
     # ------------------------------------------------------------- lookups --
     def _bilerp(self, grid: List[List[float]], active: float,
@@ -117,6 +182,33 @@ class CostTable:
         e = self.prefill_energy
         return (c[i] + f * (c[i + 1] - c[i]),
                 e[i] + f * (e[i + 1] - e[i]))
+
+    # ------------------------------------------- speculative-decode lookups --
+    @property
+    def has_spec(self) -> bool:
+        return self.spec_k > 0 and bool(self.draft_cycles)
+
+    def draft_step(self, active: float, kv: float) -> float:
+        """Cycles of ONE draft-model decode step at `active` slots."""
+        return self._bilerp(self.draft_cycles, active, kv)
+
+    def draft_step_energy(self, active: float, kv: float) -> float:
+        return self._bilerp(self.draft_energy, active, kv)
+
+    def draft_step_macs(self, active: float, kv: float) -> float:
+        return self._bilerp(self.draft_macs, active, kv)
+
+    def verify_step(self, active: float, kv: float) -> float:
+        """Cycles of ONE target-model verify step over `active` slots'
+        k+1 candidate positions (lowered at batch `active * (k + 1)`;
+        the slot axis is still addressed by `active`)."""
+        return self._bilerp(self.verify_cycles, active, kv)
+
+    def verify_step_energy(self, active: float, kv: float) -> float:
+        return self._bilerp(self.verify_energy, active, kv)
+
+    def verify_step_macs(self, active: float, kv: float) -> float:
+        return self._bilerp(self.verify_macs, active, kv)
 
 
 @dataclasses.dataclass
@@ -153,7 +245,9 @@ def build_cost_tables(archs: Optional[Sequence[str]] = None,
                       kv_lattice: Sequence[int] = DEFAULT_KV_LATTICE,
                       prompt_lattice: Sequence[int] = DEFAULT_PROMPT_LATTICE,
                       backend: str = "pallas", block_c: Optional[int] = None,
-                      act_bits: float = 8.0, **model_kw) -> CostTableSet:
+                      act_bits: float = 8.0,
+                      spec: Optional[SpecDecodeConfig] = None,
+                      **model_kw) -> CostTableSet:
     """Build every (arch, h, w) cost table in one fused batched dispatch.
 
     `backend="pallas"` (default) stacks ALL archs' lattice points — decode
@@ -163,6 +257,12 @@ def build_cost_tables(archs: Optional[Sequence[str]] = None,
     loop (used by the equivalence tests and the deterministic golden
     fixture); `backend="pallas-loop"` is the one-dispatch-per-lattice-point
     baseline the benchmark times the fusion against.
+
+    `spec` additionally lowers two speculative-decode lattices per arch
+    into the SAME dispatch: the draft arch's decode grid (same slot/kv
+    lattices, same (h, w) array) and the target arch's verify grid at
+    batch `slot * (k + 1)`. The default `spec=None` adds no lattice
+    point and produces byte-identical tables.
     """
     import time
 
@@ -173,6 +273,9 @@ def build_cost_tables(archs: Optional[Sequence[str]] = None,
     prompt_l = [float(p) for p in prompt_lattice]
     nb, nk, npr = len(slot_l), len(kv_l), len(prompt_l)
     per_arch = nb * nk + npr
+    if spec is not None:
+        draft_cfg = get_config(spec.draft_arch)
+        per_arch += 2 * nb * nk
 
     workload_lists, metas = [], []
     for arch in archs:
@@ -180,6 +283,22 @@ def build_cost_tables(archs: Optional[Sequence[str]] = None,
         for shape in _lattice_shapes(slot_lattice, kv_lattice,
                                      prompt_lattice):
             workload_lists.append(extract_workloads(cfg, shape))
+        if spec is not None:
+            # draft-model steps: the draft arch's decode lattice
+            for b in slot_lattice:
+                for s in kv_lattice:
+                    workload_lists.append(extract_workloads(
+                        draft_cfg,
+                        ShapeConfig(f"sd{b}x{s}", int(s), int(b),
+                                    "decode")))
+            # verify batches: each of the k+1 speculated positions is a
+            # GEMM row, so one verify step is decode at batch b*(k+1)
+            for b in slot_lattice:
+                for s in kv_lattice:
+                    workload_lists.append(extract_workloads(
+                        cfg,
+                        ShapeConfig(f"sv{b}x{s}", int(s),
+                                    int(b) * (spec.k + 1), "decode")))
         metas.append((arch, kv_bits_per_token(cfg, act_bits)))
 
     t0 = time.perf_counter()
@@ -191,11 +310,30 @@ def build_cost_tables(archs: Optional[Sequence[str]] = None,
     for a, (arch, kvb) in enumerate(metas):
         base = a * per_arch
         dec = slice(base, base + nb * nk)
-        pre = slice(base + nb * nk, base + per_arch)
+        pre = slice(base + nb * nk, base + nb * nk + npr)
         for c, (h, w) in enumerate(hw):
             dc = cols["cycles"][dec, c].reshape(nb, nk)
             de = cols["energy"][dec, c].reshape(nb, nk)
             dm = cols["macs"][dec, c].reshape(nb, nk)
+            spec_kw = {}
+            if spec is not None:
+                sd = slice(base + nb * nk + npr,
+                           base + nb * nk + npr + nb * nk)
+                sv = slice(base + nb * nk + npr + nb * nk, base + per_arch)
+                spec_kw = dict(
+                    spec_k=int(spec.k), draft_arch=spec.draft_arch,
+                    draft_cycles=cols["cycles"][sd, c]
+                    .reshape(nb, nk).tolist(),
+                    draft_energy=cols["energy"][sd, c]
+                    .reshape(nb, nk).tolist(),
+                    draft_macs=cols["macs"][sd, c]
+                    .reshape(nb, nk).tolist(),
+                    verify_cycles=cols["cycles"][sv, c]
+                    .reshape(nb, nk).tolist(),
+                    verify_energy=cols["energy"][sv, c]
+                    .reshape(nb, nk).tolist(),
+                    verify_macs=cols["macs"][sv, c]
+                    .reshape(nb, nk).tolist())
             tables[(arch, h, w)] = CostTable(
                 arch=arch, h=h, w=w,
                 slot_lattice=slot_l, kv_lattice=kv_l,
@@ -204,7 +342,7 @@ def build_cost_tables(archs: Optional[Sequence[str]] = None,
                 decode_macs=dm.tolist(),
                 prefill_cycles=cols["cycles"][pre, c].tolist(),
                 prefill_energy=cols["energy"][pre, c].tolist(),
-                kv_bits_per_token=kvb, pe=float(h * w))
+                kv_bits_per_token=kvb, pe=float(h * w), **spec_kw)
     return CostTableSet(tables=tables, archs=archs, hw=hw,
                         n_scenarios=len(workload_lists), n_configs=len(hw),
                         backend=backend, build_seconds=build_s)

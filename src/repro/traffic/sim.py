@@ -34,7 +34,7 @@ import dataclasses
 import time
 from collections import deque
 from heapq import heappop, heappush
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -42,7 +42,8 @@ from repro.core.model_core import DRAM_COST_PER_WORD, REF_BITS
 from repro.graph.occupancy import DRAM_BITS_PER_CYCLE
 from repro.obs.metrics import metrics as _obs_metrics
 from repro.scenarios.score import DEFAULT_CLOCK_HZ
-from repro.traffic.cost_table import CostTable
+from repro.traffic.cost_table import CostTable, SpecDecodeConfig, \
+    spec_round_counts
 from repro.traffic.workload import RequestTrace
 
 POLICIES = ("prefill_first", "chunked")
@@ -58,6 +59,19 @@ class SimConfig:
     ub_kib: Optional[float] = None       # None => infinite buffer, no spill
     dram_bits_per_cycle: float = DRAM_BITS_PER_CYCLE
     timeline_samples: int = 2048         # max retained utilization samples
+    # cross-request prefix-cache tier (None => off): capacity, in MiB of
+    # KV bits, of an LRU cache over shared-prefix template KV blocks. A
+    # hit skips the template's portion of prefill and refetches its KV
+    # from DRAM (graph.occupancy.prefix_transfer_cycles); a miss prefills
+    # everything and writes the block out; evictions pay the write-back
+    # energy via the DRAM spill weight. Only traces that carry the
+    # shared-prefix axis are affected.
+    prefix_cache_mib: Optional[float] = None
+    # speculative decoding (None => off): per round, k draft-model steps
+    # plus one big-batch verify step on the target model, emitting
+    # 1 + accepted-run tokens (cost_table.SpecDecodeConfig). Requires a
+    # table built with matching spec lattices and `prefill_first`.
+    spec: Optional[SpecDecodeConfig] = None
     # observability: an obs.Tracer(clock="sim") records per-request
     # lifecycle events (queue -> prefill -> decode runs -> finish, spill
     # stalls) on the simulation clock under `track` (+ ".req"/".queue"
@@ -71,6 +85,12 @@ class SimConfig:
                 f"unknown policy {self.policy!r} (have {POLICIES})")
         if self.slots < 1 or self.chunk < 1:
             raise ValueError("slots and chunk must be >= 1")
+        if self.prefix_cache_mib is not None and self.prefix_cache_mib <= 0:
+            raise ValueError("prefix_cache_mib must be positive (None "
+                             "disables the cache tier)")
+        if self.spec is not None and self.policy != "prefill_first":
+            raise ValueError("speculative decode is modeled for the "
+                             "prefill_first policy only")
 
 
 @dataclasses.dataclass
@@ -98,6 +118,15 @@ class SimResult:
                                 # the inter-token jitter chunking bounds
     energy_eq1: float           # Eq. 1-relative, incl. DRAM spill energy
     timeline: np.ndarray        # (T, 3): [t_s, active_slots, utilization]
+    # KV-reuse / speculative-decode accounting (0 when the features are
+    # off). `accepted_tokens` counts tokens gained beyond the one-per-
+    # round baseline: sum of (output_len - rounds) over completed
+    # requests, exactly `tokens_out - decode_steps` when every request
+    # completes under speculation.
+    cache_hits: int = 0
+    cache_evictions: int = 0
+    draft_steps: int = 0
+    accepted_tokens: int = 0
 
     @property
     def energy_per_token(self) -> float:
@@ -137,6 +166,50 @@ def simulate(table: CostTable, trace: RequestTrace,
     ub_bits = None if cfg.ub_kib is None else float(cfg.ub_kib) * 8192.0
     dram_bpc = cfg.dram_bits_per_cycle
     spill_e_per_bit = DRAM_COST_PER_WORD / REF_BITS
+
+    # cross-request prefix cache (LRU keyed by template id, capacity in
+    # KV bits). Active only when BOTH the engine knob and the trace's
+    # shared-prefix axis are present — otherwise none of the admission
+    # branches below execute and the replay is byte-identical to the
+    # cache-less engine (the default-path golden contract).
+    cache_on = (cfg.prefix_cache_mib is not None
+                and trace.prefix_id is not None)
+    cache_hits = cache_evictions = 0
+    if cache_on:
+        pid_arr = trace.prefix_id.tolist()
+        pfx_arr = trace.prefix_len.tolist()
+        cache: Dict[int, float] = {}     # insertion-ordered dict => LRU
+        cache_bits = 0.0
+        cap_bits = float(cfg.prefix_cache_mib) * 8.0 * 1024.0 * 1024.0
+
+    # speculative decoding: per-request round counts are precomputed (a
+    # pure seeded function of the output lengths), so the loop still
+    # advances event-to-event — a "step" becomes one k-draft + verify
+    # ROUND, and each active request grows its KV at its own mean
+    # tokens-per-round rate (exact in total per request).
+    spec = cfg.spec
+    spec_on = spec is not None
+    accepted_tokens = 0
+    if spec_on:
+        if not table.has_spec:
+            raise ValueError(
+                "SimConfig.spec is set but the cost table carries no "
+                "draft/verify lattices — build_cost_tables(spec=...)")
+        if int(table.spec_k) != int(spec.k):
+            raise ValueError(
+                f"SimConfig.spec.k={spec.k} != table.spec_k="
+                f"{table.spec_k}: rebuild the tables for this k")
+        rounds = spec_round_counts(trace.output_len, spec.k,
+                                   spec.acceptance, spec.seed).tolist()
+        rate = [olen[i] / rounds[i] for i in range(n)]
+        spec_k = int(spec.k)
+        draft = table.draft_step
+        draft_e = table.draft_step_energy
+        draft_m = table.draft_step_macs
+        verify = table.verify_step
+        verify_e = table.verify_step_energy
+        verify_m = table.verify_step_macs
+        rate_sum = 0.0                   # sum of active tokens-per-round
 
     # observability: `emit` is hoisted ONCE so a disabled/absent tracer
     # costs nothing inside the loop; registry counters accumulate in
@@ -202,7 +275,41 @@ def simulate(table: CostTable, trace: RequestTrace,
             rid = nxt
             nxt += 1
             occupied += 1
-            pc, pen = prefill(plen[rid])
+            pfx_skip = 0       # prefill tokens skipped via a cache hit
+            xfer = 0.0         # one-way DRAM cycles moving the prefix KV
+            if cache_on:
+                pid = pid_arr[rid]
+                pl = pfx_arr[rid]
+                if pid >= 0 and pl > 0:
+                    # scalar mirror of occupancy.prefix_transfer_cycles
+                    # (the loop stays allocation-free): hit = refetch the
+                    # template KV instead of recomputing its prefill,
+                    # miss = prefill it all and write the block out
+                    bits_p = pl * kvb
+                    if pid in cache:
+                        del cache[pid]             # LRU touch
+                        cache[pid] = bits_p
+                        pfx_skip = pl
+                        cache_hits += 1
+                        xfer = bits_p / dram_bpc
+                    elif bits_p <= cap_bits:
+                        # blocks larger than the whole tier are never
+                        # inserted (and pay no write-out): that request
+                        # is just a plain full prefill
+                        cache[pid] = bits_p
+                        cache_bits += bits_p
+                        while cache_bits > cap_bits:
+                            old = next(iter(cache))
+                            ob = cache.pop(old)
+                            cache_bits -= ob
+                            cache_evictions += 1
+                            # evictions churn the cache: the DRAM spill
+                            # model prices the evicted block's traffic
+                            # in energy (no stall — write-backs drain
+                            # off the critical path)
+                            energy += ob * spill_e_per_bit
+                        xfer = bits_p / dram_bpc
+            pc, pen = prefill(plen[rid] - pfx_skip)
             n_lookups += 1
             if emit:
                 tr.async_begin("request", rtrack, rid, arr[rid],
@@ -210,14 +317,16 @@ def simulate(table: CostTable, trace: RequestTrace,
                 tr.complete("queue", qtrack, arr[rid], t - arr[rid],
                             rid=rid)
             if chunked:
-                k_ch = -(-plen[rid] // chunk)     # ceil
-                backlog.append([rid, k_ch, pc / k_ch, pen / k_ch,
+                # chunk the UNCACHED portion; the prefix fetch rides the
+                # chunk schedule (spread pro rata like the compute)
+                k_ch = -(-(plen[rid] - pfx_skip) // chunk)     # ceil
+                backlog.append([rid, k_ch, (pc + xfer) / k_ch, pen / k_ch,
                                 plen[rid] / k_ch, 0.0])
             else:
                 # exclusive prefill: decode stalls for its whole duration
                 sp = spill_cycles(kv_tok + plen[rid])
                 t0 = t
-                dt = (pc + sp) / clock
+                dt = (pc + sp + xfer) / clock
                 t += dt
                 prefill_secs += dt
                 spill_secs += sp / clock
@@ -226,17 +335,24 @@ def simulate(table: CostTable, trace: RequestTrace,
                     spill_cyc += sp
                 if active and dt > max_step:   # stalls every running slot
                     max_step = dt
-                energy += pen + sp * dram_bpc * spill_e_per_bit
+                energy += pen + (sp + xfer) * dram_bpc * spill_e_per_bit
                 ttft[rid] = t - arr[rid]
                 kv_tok += plen[rid]
                 active += 1
-                heappush(heap, (nstep + olen[rid], rid))
+                if spec_on:
+                    heappush(heap, (nstep + rounds[rid], rid))
+                    rate_sum += rate[rid]
+                else:
+                    heappush(heap, (nstep + olen[rid], rid))
                 if emit:
                     tr.begin("prefill", track, ts=t0, rid=rid,
                              tokens=plen[rid])
                     tr.end(track, ts=t)
                     if sp > 0.0:
                         tr.instant("kv_spill", track, ts=t, cycles=sp)
+                    if pfx_skip:
+                        tr.instant("prefix_hit", track, ts=t,
+                                   tokens=pfx_skip)
                     tr.async_instant("first_token", rtrack, rid, t)
 
         if active == 0 and not backlog:
@@ -317,22 +433,48 @@ def simulate(table: CostTable, trace: RequestTrace,
                 heappush(heap, (nstep + olen[rid], rid))
         else:
             # ---- bulk decode: identical steps until the next event ----
+            # (under speculation a "step" is one k-draft + verify round)
             k = heap[0][0] - nstep
             if active < slots and nxt < n:
                 # a free slot exists: break at the next arrival to admit
                 gap = arr[nxt] - t
-                dur1 = (dstep(active, kv_tok / active)
-                        + spill_cycles(kv_tok)) / clock
-                n_lookups += 1
+                if spec_on:
+                    kv_now = kv_tok / active
+                    dur1 = (spec_k * draft(active, kv_now)
+                            + verify(active, kv_now)
+                            + spill_cycles(kv_tok)) / clock
+                    n_lookups += 2
+                else:
+                    dur1 = (dstep(active, kv_tok / active)
+                            + spill_cycles(kv_tok)) / clock
+                    n_lookups += 1
                 k_arr = int(gap / dur1) + 1
                 if k_arr < k:
                     k = k_arr
             # midpoint span: each step grows every span (hence the mean)
-            # by exactly one token, and the lattice is piecewise-linear
-            kv_mid = kv_tok / active + (k - 1) * 0.5
-            cyc = dstep(active, kv_mid)
-            sp = spill_cycles(kv_tok + k * active * 0.5)
-            n_lookups += 3
+            # by exactly one token — `rate_sum / active` tokens per
+            # round under speculation — and the lattice is
+            # piecewise-linear
+            if spec_on:
+                kv_mid = (kv_tok / active
+                          + (k - 1) * 0.5 * (rate_sum / active))
+                cyc = (spec_k * draft(active, kv_mid)
+                       + verify(active, kv_mid))
+                en_step = (spec_k * draft_e(active, kv_mid)
+                           + verify_e(active, kv_mid))
+                macs_step = (spec_k * draft_m(active, kv_mid)
+                             + verify_m(active, kv_mid))
+                sp = spill_cycles(kv_tok + k * rate_sum * 0.5)
+                kv_add = k * rate_sum
+                n_lookups += 6
+            else:
+                kv_mid = kv_tok / active + (k - 1) * 0.5
+                cyc = dstep(active, kv_mid)
+                en_step = denergy(active, kv_mid)
+                macs_step = dmacs(active, kv_mid)
+                sp = spill_cycles(kv_tok + k * active * 0.5)
+                kv_add = k * active
+                n_lookups += 3
             t0 = t
             dt = k * (cyc + sp) / clock
             t += dt
@@ -342,10 +484,9 @@ def simulate(table: CostTable, trace: RequestTrace,
             if sp > 0.0:
                 n_spill += k
                 spill_cyc += k * sp
-            energy += k * (denergy(active, kv_mid)
-                           + sp * dram_bpc * spill_e_per_bit)
+            energy += k * (en_step + sp * dram_bpc * spill_e_per_bit)
             nstep += k
-            kv_tok += k * active
+            kv_tok += kv_add
             if dt / k > max_step:
                 max_step = dt / k
             if emit:
@@ -354,23 +495,35 @@ def simulate(table: CostTable, trace: RequestTrace,
                 if sp > 0.0:
                     tr.instant("kv_spill", track, ts=t,
                                cycles=k * sp)
-            record(t, active, dmacs(active, kv_mid) / max(cyc * pe, 1.0))
+            record(t, active, macs_step / max(cyc * pe, 1.0))
             while heap and heap[0][0] <= nstep:
                 _, rid = heappop(heap)
                 active -= 1
                 kv_tok -= plen[rid] + olen[rid]
+                if spec_on:
+                    rate_sum -= rate[rid]
+                    accepted_tokens += olen[rid] - rounds[rid]
                 tokens_out += olen[rid]
                 tpot[rid] = (t - arr[rid] - ttft[rid]) / olen[rid]
                 if emit:
                     tr.async_end("request", rtrack, rid, t,
                                  tokens=olen[rid])
 
-    _obs_metrics().add_many({
+    counters = {
         "sim.replays": 1, "sim.requests": n, "sim.tokens_out": tokens_out,
         "sim.events": n_events, "sim.decode_steps": nstep,
         "sim.table_lookups": n_lookups, "sim.spill_steps": n_spill,
         "sim.spill_cycles": spill_cyc,
-    })
+    }
+    draft_steps = 0
+    if cache_on:
+        counters["sim.cache_hits"] = cache_hits
+        counters["sim.cache_evictions"] = cache_evictions
+    if spec_on:
+        draft_steps = spec_k * nstep
+        counters["sim.draft_steps"] = draft_steps
+        counters["sim.accepted_tokens"] = accepted_tokens
+    _obs_metrics().add_many(counters)
     return SimResult(
         n=n, arch=table.arch, h=table.h, w=table.w, policy=cfg.policy,
         slots=slots, ttft_s=ttft, tpot_s=tpot, sim_seconds=t,
@@ -379,4 +532,6 @@ def simulate(table: CostTable, trace: RequestTrace,
         decode_steps=nstep, decode_seconds=decode_secs,
         prefill_seconds=prefill_secs, spill_seconds=spill_secs,
         max_step_seconds=max_step, energy_eq1=energy,
+        cache_hits=cache_hits, cache_evictions=cache_evictions,
+        draft_steps=draft_steps, accepted_tokens=accepted_tokens,
         timeline=np.asarray(timeline, np.float64).reshape(-1, 3))

@@ -106,10 +106,20 @@ def bucket_lengths(buckets: Sequence[int], probs: Sequence[float], n: int,
 
 @dataclasses.dataclass
 class RequestTrace:
-    """A concrete replayable request stream (the simulator input)."""
+    """A concrete replayable request stream (the simulator input).
+
+    The optional shared-prefix axis marks requests whose prompt BEGINS
+    with a template shared across requests (system prompts, few-shot
+    headers): `prefix_id[i] >= 0` names the template population and
+    `prefix_len[i]` counts its tokens, already INCLUDED in
+    `prompt_len[i]`. `-1`/`0` mean an unshared prompt. The axis is pure
+    annotation — a simulator that ignores it replays the exact same
+    work, which is what keeps the no-reuse goldens byte-identical."""
     arrival_s: np.ndarray       # (n,) float64, sorted
     prompt_len: np.ndarray      # (n,) int32, >= 1
     output_len: np.ndarray      # (n,) int32, >= 1 decode steps per request
+    prefix_id: Optional[np.ndarray] = None    # (n,) int32, -1 = unshared
+    prefix_len: Optional[np.ndarray] = None   # (n,) int32, part of prompt
 
     def __post_init__(self):
         n = len(self.arrival_s)
@@ -120,6 +130,17 @@ class RequestTrace:
         if n and (int(self.prompt_len.min()) < 1
                   or int(self.output_len.min()) < 1):
             raise ValueError("prompt_len/output_len must be >= 1")
+        if (self.prefix_id is None) != (self.prefix_len is None):
+            raise ValueError("prefix_id and prefix_len come together")
+        if self.prefix_id is not None:
+            if len(self.prefix_id) != n or len(self.prefix_len) != n:
+                raise ValueError("trace arrays must share one length")
+            if n and int(self.prefix_len.min()) < 0:
+                raise ValueError("prefix_len must be >= 0")
+            # the prefix is a PART of the prompt, and at least one
+            # non-template token must remain to prefill on a cache hit
+            if n and (self.prefix_len >= self.prompt_len).any():
+                raise ValueError("prefix_len must be < prompt_len")
 
     def __len__(self) -> int:
         return len(self.arrival_s)
@@ -163,9 +184,35 @@ class TrafficModel:
     output_range: Tuple[int, int] = (1, 2048)
     output_buckets: Optional[Tuple[int, ...]] = None
     output_probs: Optional[Tuple[float, ...]] = None
+    # shared-prefix populations (system prompts / few-shot templates):
+    # population k PREPENDS `prefix_lens[k]` template tokens to a
+    # `prefix_probs[k]` share of requests (the sampled prompt length is
+    # the request's unique part). Remaining mass is unshared. None (the
+    # default) disables the axis and changes no draw.
+    prefix_lens: Optional[Tuple[int, ...]] = None
+    prefix_probs: Optional[Tuple[float, ...]] = None
 
     def with_rate(self, rate_qps: float) -> "TrafficModel":
-        return dataclasses.replace(self, rate_qps=float(rate_qps))
+        """Rescale the arrival process to `rate_qps`. For synthetic
+        arrivals (poisson/mmpp) only the rate field changes; recorded
+        traces rescale their timestamps by the rate ratio (time-dilating
+        the recording, the standard trace-replay load knob) — leaving
+        them untouched would make every rate probe of the SLO bisection
+        replay identical arrivals."""
+        rate_qps = float(rate_qps)
+        if rate_qps <= 0.0:
+            raise ValueError(f"rate_qps must be positive, got {rate_qps}")
+        if self.arrival == "trace" and self.trace_arrival_s is not None \
+                and rate_qps != self.rate_qps:
+            if self.rate_qps <= 0.0:
+                raise ValueError("cannot rescale a trace with nonpositive "
+                                 f"rate_qps {self.rate_qps}")
+            scale = self.rate_qps / rate_qps
+            return dataclasses.replace(
+                self, rate_qps=rate_qps,
+                trace_arrival_s=tuple(t * scale
+                                      for t in self.trace_arrival_s))
+        return dataclasses.replace(self, rate_qps=rate_qps)
 
     def _typical(self, which: str) -> float:
         dist = getattr(self, f"{which}_dist")
@@ -174,7 +221,11 @@ class TrafficModel:
             p = np.asarray(getattr(self, f"{which}_probs"), np.float64)
             order = np.argsort(b)
             cum = np.cumsum(p[order] / p.sum())
-            return float(b[order][np.searchsorted(cum, 0.5)])
+            # upper-median convention (side="right"): the smallest bucket
+            # with cumulative mass STRICTLY above 0.5. side="left" is
+            # off by one bucket when the mass hits exactly 0.5 — two
+            # equal buckets would report the lower one as "typical".
+            return float(b[order][np.searchsorted(cum, 0.5, side="right")])
         return float(getattr(self, f"{which}_median"))
 
     @property
@@ -183,8 +234,13 @@ class TrafficModel:
         `buckets` the probability-weighted median of the histogram, not
         the (unused) `prompt_median` field. The saturation estimate that
         brackets the SLO bisection reads this, so bucket mixes get a
-        meaningful bracket too."""
-        return self._typical("prompt")
+        meaningful bracket too. Shared-prefix populations add their
+        expected template length (the prefix is part of the prompt)."""
+        base = self._typical("prompt")
+        if self.prefix_lens is not None:
+            base += float(sum(l * p for l, p in zip(self.prefix_lens,
+                                                    self.prefix_probs)))
+        return base
 
     @property
     def typical_output(self) -> float:
@@ -239,6 +295,77 @@ class TrafficModel:
         else:
             raise ValueError(
                 f"unknown arrival {self.arrival!r} (have {ARRIVALS})")
+        plen = self._lengths("prompt", n, rng_p)
+        pfx_id, pfx_len = self._prefixes(n, seed)
+        if pfx_len is not None:
+            plen = (plen + pfx_len).astype(np.int32)
         return RequestTrace(arrival_s=np.asarray(arr, np.float64),
-                            prompt_len=self._lengths("prompt", n, rng_p),
-                            output_len=self._lengths("output", n, rng_o))
+                            prompt_len=plen,
+                            output_len=self._lengths("output", n, rng_o),
+                            prefix_id=pfx_id, prefix_len=pfx_len)
+
+    def _prefixes(self, n: int, seed: int):
+        """Seeded shared-prefix assignment, or (None, None) when the axis
+        is off. Draws from its OWN child stream (`[seed, 3]`, disjoint
+        from the arrival/length streams in both the sequential and the
+        paired layout), so enabling sharing changes neither the arrival
+        nor the base-length draws — and probes at different rates see the
+        same template assignment (common random numbers)."""
+        if self.prefix_lens is None:
+            return None, None
+        lens = np.asarray(self.prefix_lens, np.int64)
+        probs = np.asarray(self.prefix_probs, np.float64)
+        if lens.ndim != 1 or probs.shape != lens.shape or len(lens) == 0:
+            raise ValueError("prefix_lens and prefix_probs must be "
+                             "equal-length non-empty 1-d")
+        if (lens < 1).any():
+            raise ValueError("prefix_lens must be >= 1")
+        total = float(probs.sum())
+        if (probs < 0).any() or total > 1.0 + 1e-12:
+            raise ValueError("prefix_probs must be non-negative with "
+                             "sum <= 1 (remaining mass is unshared)")
+        rng = np.random.default_rng([seed, 3])
+        p = np.append(probs, max(1.0 - total, 0.0))
+        idx = rng.choice(len(lens) + 1, size=n, p=p / p.sum())
+        shared = idx < len(lens)
+        pfx_len = np.where(shared, np.append(lens, 0)[idx], 0)
+        pfx_id = np.where(shared, idx, -1)
+        return pfx_id.astype(np.int32), pfx_len.astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVReuseConfig:
+    """The cross-request KV-reuse scenario knob, bundling the traffic
+    axis (what share of requests draw a shared template, how long) with
+    the engine axis (how much prefix cache the server keeps). The DSE
+    sweeps (`core.dse.slo_capacity_sweep`/`fleet_capacity_sweep`) accept
+    one of these as `cache_hit`; `share=0.0` is the exact no-reuse
+    baseline (no field of traffic or sim changes)."""
+    share: float = 0.5          # request share drawing a shared prefix
+    prefix_len: int = 512       # template length (tokens)
+    n_prefixes: int = 4         # distinct template populations
+    cache_mib: float = 256.0    # server prefix-cache capacity (MiB of KV)
+
+    def __post_init__(self):
+        if not 0.0 <= self.share <= 1.0:
+            raise ValueError(f"share must be in [0, 1], got {self.share}")
+        if self.prefix_len < 1 or self.n_prefixes < 1:
+            raise ValueError("prefix_len and n_prefixes must be >= 1")
+        if self.cache_mib <= 0.0:
+            raise ValueError("cache_mib must be positive")
+
+    def apply(self, tm: TrafficModel) -> TrafficModel:
+        """`tm` with this knob's shared-prefix populations attached
+        (equal shares across `n_prefixes` templates); identity at
+        share=0."""
+        if self.share == 0.0:
+            return tm
+        if tm.prefix_lens is not None:
+            raise ValueError("traffic model already carries shared-prefix "
+                             "populations; applying a KVReuseConfig on "
+                             "top would silently overwrite them")
+        return dataclasses.replace(
+            tm,
+            prefix_lens=(int(self.prefix_len),) * self.n_prefixes,
+            prefix_probs=(float(self.share) / self.n_prefixes,)
+            * self.n_prefixes)

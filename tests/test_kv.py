@@ -1,0 +1,410 @@
+"""KV reuse & speculative serving: the shared-prefix traffic axis, the
+cross-request prefix-cache tier, the draft/verify engine, the fleet
+affinity/ship-reuse paths — and the serving-sim bugfix pins that rode
+along (per-request JSQ pricing, trace rescaling in `with_rate`, the
+bucket-median convention).
+
+Golden regeneration (from the repo root):
+    PYTHONPATH=src:tests python -c "
+import json, test_kv as g
+json.dump(g.golden_records(), open(g.FIXTURE, 'w'),
+          indent=1, sort_keys=True)"
+"""
+import dataclasses
+import functools
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.search import _ServerBatch
+from repro.fleet.sim import (FleetSimConfig, FleetTables, _est_service_seconds,
+                             route_requests, simulate_fleet)
+from repro.traffic import (SLO, KVReuseConfig, RequestTrace, SimConfig,
+                           SpecDecodeConfig, TrafficModel, build_cost_tables,
+                           max_sustainable_qps, simulate, spec_round_counts,
+                           summarize)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "kv_sim_golden.json")
+
+ARCH = "h2o-danube-3-4b"        # attention arch: nonzero KV bits/token
+DRAFT = "xlstm-125m"            # SSM draft: cheap steps, zero KV growth
+
+TRAFFIC = TrafficModel(rate_qps=1.5, prompt_median=256,
+                       prompt_range=(16, 2048), output_median=48,
+                       output_range=(1, 512))
+KV = KVReuseConfig(share=0.6, prefix_len=512, n_prefixes=4, cache_mib=2048.0)
+SPEC = SpecDecodeConfig(draft_arch=DRAFT, k=4, acceptance=0.7)
+
+
+@functools.lru_cache(maxsize=None)
+def _table(arch=ARCH, h=128, w=128, spec=None):
+    return build_cost_tables(archs=sorted({arch, spec.draft_arch})
+                             if spec else [arch],
+                             hw=((h, w),), backend="numpy",
+                             spec=spec).table(arch, h, w)
+
+
+# ------------------------------------------------------ shared-prefix axis --
+
+def test_prefix_sampling_is_additive_and_seeded():
+    """The prefix axis draws from its own child stream: arrival times and
+    output lengths are byte-identical to the base model's, prompts grow
+    by exactly the drawn prefix, and the share is respected."""
+    base = TRAFFIC.sample(2000, seed=7)
+    tr = KV.apply(TRAFFIC).sample(2000, seed=7)
+    assert np.array_equal(tr.arrival_s, base.arrival_s)
+    assert np.array_equal(tr.output_len, base.output_len)
+    assert np.array_equal(tr.prompt_len, base.prompt_len + tr.prefix_len)
+    shared = tr.prefix_id >= 0
+    assert np.array_equal(tr.prefix_len[shared],
+                          np.full(shared.sum(), KV.prefix_len))
+    assert np.all(tr.prefix_len[~shared] == 0)
+    assert set(np.unique(tr.prefix_id)) <= set(range(-1, KV.n_prefixes))
+    assert abs(shared.mean() - KV.share) < 0.05
+    # deterministic
+    tr2 = KV.apply(TRAFFIC).sample(2000, seed=7)
+    assert np.array_equal(tr.prefix_id, tr2.prefix_id)
+
+
+def test_kv_reuse_config_validation():
+    assert KVReuseConfig(share=0.0).apply(TRAFFIC) is TRAFFIC
+    with pytest.raises(ValueError):
+        KVReuseConfig(share=1.5)
+    with pytest.raises(ValueError):
+        KVReuseConfig(prefix_len=0)
+    with pytest.raises(ValueError, match="already"):
+        KV.apply(KV.apply(TRAFFIC))
+
+
+def test_request_trace_prefix_validation():
+    with pytest.raises(ValueError):
+        RequestTrace(arrival_s=np.array([0.0]), prompt_len=np.array([8]),
+                     output_len=np.array([4]), prefix_id=np.array([0]),
+                     prefix_len=np.array([8]))   # prefix must be < prompt
+    with pytest.raises(ValueError):
+        RequestTrace(arrival_s=np.array([0.0]), prompt_len=np.array([8]),
+                     output_len=np.array([4]), prefix_id=np.array([0]))
+
+
+# ------------------------------------------------- satellite bugfix pins ----
+
+def test_bucket_median_upper_convention():
+    """Exact 0.5 cumulative mass picks the UPPER bucket (the smallest
+    bucket with cumulative mass strictly above one half)."""
+    tm = dataclasses.replace(
+        TRAFFIC, prompt_dist="buckets", prompt_buckets=(512, 2048),
+        prompt_probs=(0.5, 0.5))
+    assert tm.typical_prompt == 2048.0
+    tm = dataclasses.replace(
+        TRAFFIC, prompt_dist="buckets", prompt_buckets=(512, 2048),
+        prompt_probs=(0.6, 0.4))
+    assert tm.typical_prompt == 512.0
+
+
+def test_with_rate_rescales_trace_arrivals():
+    arr = (0.0, 1.0, 3.0, 10.0)
+    tm = dataclasses.replace(TRAFFIC, arrival="trace", trace_arrival_s=arr,
+                             rate_qps=0.4)
+    fast = tm.with_rate(0.8)                 # 2x the rate: half the gaps
+    assert fast.trace_arrival_s == tuple(t * 0.5 for t in arr)
+    assert tm.with_rate(0.4).trace_arrival_s == arr
+    with pytest.raises(ValueError):
+        tm.with_rate(0.0)
+
+
+def test_bisect_moves_on_trace_workload():
+    """SLO bisection on a trace workload actually probes different rates
+    (it was a no-op before `with_rate` rescaled the timestamps)."""
+    arr = tuple(np.sort(
+        np.random.default_rng(0).uniform(0, 100, 50)).tolist())
+    tm = TrafficModel(rate_qps=0.5, arrival="trace", trace_arrival_s=arr,
+                      prompt_median=128, output_median=32,
+                      prompt_range=(16, 512), output_range=(1, 128))
+    tab = _table(DRAFT, 64, 64)
+    r = simulate(tab, tm.sample(50, seed=0), SimConfig())
+    slo = SLO(ttft_s=4.0 * float(np.percentile(r.ttft_s, 99)),
+              tpot_s=4.0 * float(np.percentile(r.tpot_s, 99)))
+    q, _ = max_sustainable_qps(tab, tm, slo, n_requests=50, seed=0, iters=8)
+    assert q > 2.0 * tm.rate_qps             # headroom found, not pinned
+
+
+def test_est_service_seconds_prices_per_request():
+    """JSQ's backlog currency varies the decode-step price with each
+    request's own KV midpoint (the scalar fleet-mean bug flattened it)."""
+    tab = _table()
+    cfg = SimConfig(slots=16)
+    plen = np.array([64, 64, 1600, 1600])
+    olen = np.array([32, 32, 32, 32])        # same outputs, different KV
+    est = _est_service_seconds(tab, plen, olen, cfg)
+    pc = np.interp(plen.astype(float), np.asarray(tab.prompt_lattice),
+                   np.asarray(tab.prefill_cycles)) / cfg.clock_hz
+    step = (est - pc) / olen                 # per-decode-step price
+    assert step[2] > step[0] * 1.05          # long-prompt steps cost more
+    # exact per-request agreement with the scalar table lookup
+    for i in range(4):
+        want = tab.decode_step(cfg.slots, plen[i] + 0.5 * olen[i])
+        got = (est[i] - pc[i]) * cfg.clock_hz / olen[i]
+        assert got == pytest.approx(want, rel=1e-9)
+
+
+def test_jsq_balances_bimodal_mix():
+    """Routing-balance regression: under a bimodal length mix, per-request
+    pricing keeps two identical servers' realized busy time close."""
+    tab = _table()
+    n = 200
+    rng = np.random.default_rng(3)
+    short = rng.integers(0, 2, n).astype(bool)
+    trace = RequestTrace(
+        arrival_s=np.cumsum(rng.exponential(0.4, n)),
+        prompt_len=np.where(short, 64, 1600).astype(np.int64),
+        output_len=np.where(short, 8, 192).astype(np.int64))
+    cfg = FleetSimConfig(routing="jsq", server=SimConfig(slots=16))
+    res = simulate_fleet(FleetTables(mixed=[tab, tab]), trace, cfg)
+    busy = [r.decode_seconds + r.prefill_seconds for r in res.per_server]
+    assert max(busy) / min(busy) < 1.3
+
+
+# -------------------------------------------------------- prefix cache tier --
+
+def _prefix_trace(n=600, seed=11):
+    return KV.apply(TRAFFIC).sample(n, seed)
+
+
+def test_cache_hits_reconcile_and_skip_prefill():
+    tab = _table()
+    tr = _prefix_trace()
+    off = simulate(tab, tr, SimConfig(slots=16))
+    on = simulate(tab, tr, SimConfig(slots=16, prefix_cache_mib=KV.cache_mib))
+    shared = tr.prefix_id >= 0
+    distinct = len(set(tr.prefix_id[shared].tolist()))
+    # capacity >> 4 templates: every share after the first use hits
+    assert on.cache_hits == int(shared.sum()) - distinct
+    assert on.cache_evictions == 0
+    assert on.prefill_seconds < off.prefill_seconds
+    assert off.cache_hits == 0 and off.draft_steps == 0
+
+
+def test_cache_evictions_churn_small_tier():
+    tab = _table()
+    tr = _prefix_trace()
+    block_mib = KV.prefix_len * tab.kv_bits_per_token / 8 / 2**20
+    cfg = SimConfig(slots=16, prefix_cache_mib=1.5 * block_mib)
+    r = simulate(tab, tr, cfg)               # one template fits at a time
+    assert r.cache_evictions > 0
+    assert r.cache_hits < simulate(
+        tab, tr, SimConfig(slots=16,
+                           prefix_cache_mib=KV.cache_mib)).cache_hits
+    # a block that cannot fit at all is never inserted -> no churn
+    tiny = simulate(tab, tr, SimConfig(slots=16,
+                                       prefix_cache_mib=0.5 * block_mib))
+    assert tiny.cache_hits == 0 and tiny.cache_evictions == 0
+
+
+def test_cache_off_is_plain_replay():
+    """A prefix-bearing trace with the cache tier off replays
+    byte-identically to the same lengths with no prefix axis."""
+    tab = _table()
+    tr = _prefix_trace(300)
+    plain = RequestTrace(arrival_s=tr.arrival_s, prompt_len=tr.prompt_len,
+                         output_len=tr.output_len)
+    a = simulate(tab, tr, SimConfig(slots=16))
+    b = simulate(tab, plain, SimConfig(slots=16))
+    assert a.energy_eq1 == b.energy_eq1
+    assert a.sim_seconds == b.sim_seconds
+    assert np.array_equal(a.ttft_s, b.ttft_s)
+
+
+# ------------------------------------------------------ speculative decode --
+
+def test_spec_round_counts_bounds():
+    olen = np.arange(1, 400)
+    k = SPEC.k
+    assert np.array_equal(spec_round_counts(olen, k, 0.0), olen)
+    assert np.array_equal(spec_round_counts(olen, k, 1.0),
+                          -(-olen // (k + 1)))
+    mid = spec_round_counts(olen, k, 0.7, seed=5)
+    assert np.all(mid >= -(-olen // (k + 1))) and np.all(mid <= olen)
+    assert np.array_equal(mid, spec_round_counts(olen, k, 0.7, seed=5))
+
+
+def test_spec_replay_reconciles_token_accounting():
+    spec = SPEC
+    tab = _table(ARCH, 128, 128, spec)
+    tr = TRAFFIC.sample(600, seed=11)
+    base = simulate(_table(), tr, SimConfig(slots=16))
+    r = simulate(tab, tr, SimConfig(slots=16, spec=spec))
+    rounds = spec_round_counts(tr.output_len, spec.k, spec.acceptance,
+                               spec.seed)
+    # every request completes: accepted = sum(olen_i - rounds_i), exactly
+    assert r.accepted_tokens == int(tr.output_len.sum() - rounds.sum())
+    assert r.draft_steps == spec.k * r.decode_steps
+    assert r.tokens_out == base.tokens_out
+    assert r.decode_steps < base.decode_steps    # rounds < token steps
+    # spec table with spec OFF is byte-identical to the plain table
+    off = simulate(tab, tr, SimConfig(slots=16))
+    assert off.energy_eq1 == base.energy_eq1
+    assert off.sim_seconds == base.sim_seconds
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError):
+        SpecDecodeConfig(draft_arch=DRAFT, k=0)
+    with pytest.raises(ValueError):
+        SpecDecodeConfig(draft_arch=DRAFT, acceptance=1.5)
+    with pytest.raises(ValueError, match="prefill_first"):
+        SimConfig(policy="chunked", chunk=64, spec=SPEC)
+    with pytest.raises(ValueError):     # table lacks draft/verify lattices
+        simulate(_table(), TRAFFIC.sample(10, seed=0),
+                 SimConfig(spec=SPEC))
+
+
+# ----------------------------------------------------------- fleet threading --
+
+def test_prefix_affinity_routing_colocates_templates():
+    tab = _table()
+    tr = _prefix_trace(600)
+    parts = route_requests(tr, [tab, tab, tab],
+                           FleetSimConfig(routing="prefix_affinity"))
+    srv = np.empty(len(tr), np.int64)
+    for s, idx in enumerate(parts):
+        srv[idx] = s
+    for pid in range(KV.n_prefixes):
+        owners = set(srv[tr.prefix_id == pid].tolist())
+        assert len(owners) <= 1              # one server per template
+    # no prefix axis -> falls back to round-robin
+    plain = RequestTrace(arrival_s=tr.arrival_s, prompt_len=tr.prompt_len,
+                         output_len=tr.output_len)
+    rr = route_requests(plain, [tab, tab, tab],
+                        FleetSimConfig(routing="round_robin"))
+    fb = route_requests(plain, [tab, tab, tab],
+                        FleetSimConfig(routing="prefix_affinity"))
+    assert all(np.array_equal(a, b) for a, b in zip(rr, fb))
+
+
+def test_prefix_affinity_beats_round_robin_on_hits():
+    tab = _table()
+    tr = _prefix_trace(600)
+    block_mib = KV.prefix_len * tab.kv_bits_per_token / 8 / 2**20
+    mk = lambda routing: simulate_fleet(
+        FleetTables(mixed=[tab, tab, tab]), tr,
+        FleetSimConfig(routing=routing,
+                       server=SimConfig(slots=16,
+                                        prefix_cache_mib=1.5 * block_mib)))
+    aff, rr = mk("prefix_affinity"), mk("round_robin")
+    assert aff.cache_hits > rr.cache_hits
+    assert aff.cache_evictions < rr.cache_evictions
+
+
+def test_disagg_ship_reuse_dedups_link_traffic():
+    tab = _table()
+    tr = _prefix_trace(400)
+    fleet = FleetTables(prefill=[tab], decode=[tab, tab])
+    on = simulate_fleet(fleet, tr, FleetSimConfig(
+        server=SimConfig(slots=16, prefix_cache_mib=KV.cache_mib)))
+    off = simulate_fleet(fleet, tr, FleetSimConfig(server=SimConfig(slots=16)))
+    shared = tr.prefix_id >= 0
+    distinct = len(set(tr.prefix_id[shared].tolist()))
+    assert on.kv_ship_reuse_hits == int(shared.sum()) - distinct
+    assert on.link_seconds < off.link_seconds
+    assert off.kv_ship_reuse_hits == 0
+
+
+def test_batched_search_falls_back_to_scalar():
+    tab = _table()
+    assert _ServerBatch([tab], SimConfig(prefix_cache_mib=64.0),
+                        100, "auto").backend == "scalar"
+    spec_tab = _table(ARCH, 128, 128, SPEC)
+    assert _ServerBatch([spec_tab], SimConfig(spec=SPEC),
+                        100, "auto").backend == "scalar"
+
+
+# ----------------------------------------------------------- sweep knobs ----
+
+def test_slo_sweep_kv_knobs_smoke():
+    from repro.core.dse import slo_capacity_sweep
+    tm = TrafficModel(rate_qps=4.0, prompt_median=128, output_median=32,
+                      prompt_range=(16, 512), output_range=(1, 128))
+    slo = SLO(ttft_s=0.2, tpot_s=0.02)
+    kw = dict(n_requests=40, seed=0, backend="numpy", search="sequential")
+    base = slo_capacity_sweep(tm, slo, [DRAFT], [(64, 64)], **kw)
+    cache = slo_capacity_sweep(tm, slo, [DRAFT], [(64, 64)],
+                               cache_hit=0.5, **kw)
+    spec = slo_capacity_sweep(tm, slo, [DRAFT], [(64, 64)],
+                              spec_decode=SpecDecodeConfig(DRAFT, k=3), **kw)
+    assert base.max_qps.shape == cache.max_qps.shape == spec.max_qps.shape
+    assert (base.max_qps > 0).all()
+    assert cache.max_qps[0, 0] != base.max_qps[0, 0]    # knob changes work
+
+
+def test_scenario_sweep_kv_knobs():
+    from repro.core.dse import scenario_sweep
+    from repro.scenarios.matrix import (Scenario, kv_named_workloads,
+                                        named_workloads, serving_matrix)
+    cells = serving_matrix([DRAFT], batches=(4,), seq_lens=(512,))
+    plain = scenario_sweep(cells, hs=[64], ws=[64], backend="numpy")
+    hit = scenario_sweep(cells, hs=[64], ws=[64], backend="numpy",
+                         cache_hit=0.5)
+    assert plain.names == hit.names          # keys survive for weights
+    pre = cells[0].name                      # prefill cell
+    i = plain.names.index(pre)
+    assert hit.cycles[i].sum() < plain.cycles[i].sum()
+    with pytest.raises(ValueError, match="Scenario list"):
+        scenario_sweep(named_workloads(cells), cache_hit=0.5,
+                       backend="numpy")
+    nw = kv_named_workloads(cells, spec=SpecDecodeConfig(ARCH, k=2))
+    dec = [sc for sc in cells if sc.phase == "decode"][0]
+    assert len(nw[dec.name]) > len(dec.workloads())   # draft+verify rounds
+
+
+# ------------------------------------------------------------------ golden --
+
+N_GOLDEN = 1200
+SEED_GOLDEN = 1234
+PINNED = ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
+          "tokens_per_sec", "energy_per_token", "sim_seconds",
+          "completed", "tokens_out")
+COUNTERS = ("cache_hits", "cache_evictions", "draft_steps",
+            "accepted_tokens", "decode_steps")
+
+
+def golden_records():
+    slo = SLO(ttft_s=5.0, tpot_s=0.2)
+    tab = _table()
+    spec_tab = _table(ARCH, 128, 128, SPEC)
+    tr = KV.apply(TRAFFIC).sample(N_GOLDEN, SEED_GOLDEN)
+    block_mib = KV.prefix_len * tab.kv_bits_per_token / 8 / 2**20
+    cases = {
+        "prefix_cache": (tab, SimConfig(slots=16,
+                                        prefix_cache_mib=KV.cache_mib)),
+        "prefix_cache_churn": (tab, SimConfig(
+            slots=16, prefix_cache_mib=1.5 * block_mib)),
+        "spec_decode": (spec_tab, SimConfig(slots=16, spec=SPEC)),
+        "combined": (spec_tab, SimConfig(slots=16, spec=SPEC,
+                                         prefix_cache_mib=KV.cache_mib)),
+    }
+    out = {}
+    for name, (t, cfg) in cases.items():
+        res = simulate(t, tr, cfg)
+        rec = {k: summarize(res, slo)[k] for k in PINNED}
+        rec.update({k: getattr(res, k) for k in COUNTERS})
+        out[name] = rec
+    return out
+
+
+with open(FIXTURE) as f:
+    GOLDEN = json.load(f)
+
+
+@pytest.mark.parametrize("case", sorted(GOLDEN))
+def test_kv_replay_matches_golden(case):
+    got = golden_records()[case]
+    want = GOLDEN[case]
+    assert set(got) == set(want)
+    for k in want:
+        assert got[k] == pytest.approx(want[k], rel=1e-9, abs=1e-12), (
+            f"{case}/{k}: KV-serving replay drifted vs the pinned fixture "
+            "(if intentional, regenerate tests/fixtures/kv_sim_golden.json "
+            "— see module docstring)")
