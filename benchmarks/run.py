@@ -67,6 +67,29 @@ def _save(name, obj):
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
         json.dump(obj, f, indent=1, default=lambda o: np.asarray(o).tolist())
+    if name.startswith("BENCH_"):
+        _append_history(name, obj)
+
+
+def _append_history(name, obj):
+    """Append the stage's headline scalars to BENCH_history.jsonl — the
+    accumulating perf-trajectory log (one JSON line per BENCH_* stage per
+    run; nested tables stay in the per-stage BENCH_*.json snapshots)."""
+    scalars = {k: v for k, v in obj.items()
+               if isinstance(v, (bool, int, float))}
+    rec = {"bench": name, "unix_time": round(time.time(), 3),
+           "scalars": {k: scalars[k] for k in sorted(scalars)}}
+    with open(os.path.join(RESULTS, "BENCH_history.jsonl"), "a") as f:
+        f.write(json.dumps(rec, sort_keys=True) + "\n")
+
+
+def _stage(fn, *args, **kw):
+    """Run one benchmark stage on a CLEAN process-wide metrics registry so
+    per-stage counter reports never leak across stages (the obs stage
+    asserts this purity on entry)."""
+    from repro.obs import reset_metrics
+    reset_metrics()
+    return fn(*args, **kw)
 
 
 def fig2_resnet_heatmap():
@@ -830,6 +853,11 @@ def obs_bench(quick: bool = False):
         must validate (monotone per-track timestamps, balanced spans,
         one track per server/pool) and be byte-identical across runs
         (the sample trace is the CI artifact);
+      * conservation-gated cost attribution: the seeded single-server
+        and disaggregated-fleet replays re-run with `breakdown=True`;
+        every CostBreakdown must pass `check_conservation()` (components
+        sum to the default path's totals at 1e-9) and the deterministic
+        attribution report is written next to the trace artifact;
       * the counter totals this stage accumulated (the registry report).
     """
     from repro import obs
@@ -838,6 +866,11 @@ def obs_bench(quick: bool = False):
     from repro.traffic.slo import SLO, summarize
 
     before = obs.metrics().snapshot()
+    # stage purity: main() resets the registry at every stage boundary,
+    # so the counter report below is THIS stage's accounting alone
+    assert not before, (
+        "obs stage expects a clean metrics registry (stage purity); "
+        f"leaked counters: {sorted(before)[:5]}")
 
     # 1. tracing-disabled overhead on the 1M-request replay
     from repro.traffic import simulate
@@ -893,7 +926,36 @@ def obs_bench(quick: bool = False):
           f"events={len(tracers[0])};tracks={len(tracks)}"
           f";valid={not problems};deterministic={deterministic}")
 
-    # 3. counter totals accumulated by this stage
+    # 3. conservation-gated cost attribution on the seeded replays:
+    # the same single-server table and disagg fleet, breakdown=True —
+    # components must sum back to the untouched totals at 1e-9
+    from repro.obs.attribution import ConservationError
+    from repro.obs.report import (attribution_report, report_json,
+                                  write_report)
+    r_bd = simulate(tab, tm.sample(2000, seed=7),
+                    SimConfig(slots=64, breakdown=True))
+    f_bd = simulate_fleet(
+        fleet, trace2,
+        FleetSimConfig(server=SimConfig(slots=16, ub_kib=4096.0,
+                                        breakdown=True)))
+    bds = {"single_server_replay": r_bd.breakdown,
+           "disagg_fleet_replay": f_bd.breakdown}
+    try:
+        for b in bds.values():
+            b.check_conservation()
+        conservation_ok = True
+    except ConservationError:
+        conservation_ok = False
+    worst_rel = max(b.max_rel_err() for b in bds.values())
+    report_path = os.path.join(RESULTS, "attribution_report.md")
+    write_report(report_path, attribution_report(bds))
+    write_report(os.path.join(RESULTS, "attribution_report.json"),
+                 report_json({k: b.to_dict() for k, b in bds.items()}))
+    _emit("obs_attribution_conservation", 0.0,
+          f"ok={conservation_ok};max_rel_err={worst_rel:.2e}"
+          f";link_ship_J={f_bd.breakdown.component('energy', 'link_ship'):.3e}")
+
+    # 4. counter totals accumulated by this stage
     delta = obs.metrics().delta(before)
     _emit("obs_counters", 0.0,
           f"sim.events={delta.get('sim.events', 0):.0f}"
@@ -913,6 +975,10 @@ def obs_bench(quick: bool = False):
         "trace_deterministic": deterministic,
         "trace_path": os.path.relpath(trace_path,
                                       os.path.join(RESULTS, "..", "..")),
+        "conservation_ok": conservation_ok,
+        "conservation_max_rel_err": worst_rel,
+        "attribution_report": os.path.relpath(
+            report_path, os.path.join(RESULTS, "..", "..")),
         "counters": {k: delta[k] for k in sorted(delta)},
         "registry": obs.metrics().summarize(),
     })
@@ -929,33 +995,33 @@ def main() -> None:
     args = parser.parse_args()
     print("name,us_per_call,derived")
     if args.quick:
-        graph_quick()
-        scenarios_bench(quick=True)
-        traffic_bench(quick=True)
-        kv_bench(quick=True)
-        fleet_bench(quick=True)
-        search_bench(quick=True)
-        obs_bench(quick=True)
+        _stage(graph_quick)
+        _stage(scenarios_bench, quick=True)
+        _stage(traffic_bench, quick=True)
+        _stage(kv_bench, quick=True)
+        _stage(fleet_bench, quick=True)
+        _stage(search_bench, quick=True)
+        _stage(obs_bench, quick=True)
         return
-    fig2_resnet_heatmap()
-    fig3_pareto()
-    fig4_model_heatmaps()
-    fig5_robust()
-    fig6_equal_pe()
-    lm_architectures()
-    scenarios_bench()
-    traffic_bench()
-    kv_bench()
-    fleet_bench()
-    search_bench()
-    obs_bench()
-    connectivity()
-    ablations()
-    future_work()
-    backends()
-    precision()
-    kernels()
-    graph_quick()
+    _stage(fig2_resnet_heatmap)
+    _stage(fig3_pareto)
+    _stage(fig4_model_heatmaps)
+    _stage(fig5_robust)
+    _stage(fig6_equal_pe)
+    _stage(lm_architectures)
+    _stage(scenarios_bench)
+    _stage(traffic_bench)
+    _stage(kv_bench)
+    _stage(fleet_bench)
+    _stage(search_bench)
+    _stage(obs_bench)
+    _stage(connectivity)
+    _stage(ablations)
+    _stage(future_work)
+    _stage(backends)
+    _stage(precision)
+    _stage(kernels)
+    _stage(graph_quick)
 
 
 if __name__ == "__main__":

@@ -509,6 +509,9 @@ class CapacitySweepResult:
     spill_bits: np.ndarray         # (U,) DRAM round-trip traffic
     spill_energy: np.ndarray       # (U,) Eq. 1-relative
     energy_total: np.ndarray       # (U, G, G)
+    # capacity_sweep(breakdown=True): one grid-shaped CostBreakdown per
+    # capacity point, conserving against `energy_total[u]` elementwise.
+    breakdowns: Optional[List] = None
 
     def best(self, u: int):
         """(h, w, energy_total) of the best design point at capacity u."""
@@ -520,6 +523,7 @@ class CapacitySweepResult:
 
 def capacity_sweep(graph, ub_kibs: Sequence[float] = UB_KIBS, hs=None,
                    ws=None, order: str = "dfs", backend: str = "numpy",
+                   breakdown: bool = False,
                    **model_kw) -> CapacitySweepResult:
     """Sweep the (h, w, ub_kib) design space for a network graph.
 
@@ -527,7 +531,14 @@ def capacity_sweep(graph, ub_kibs: Sequence[float] = UB_KIBS, hs=None,
     fused Pallas kernel) over `graph.flatten()` — bit-identical to the flat
     workload list — while the graph's liveness profile under the chosen
     schedule `order` ("dfs" | "bfs") converts each finite capacity into
-    spill/refetch energy (see repro.graph.occupancy)."""
+    spill/refetch energy (see repro.graph.occupancy).
+
+    `breakdown=True` additionally attaches one grid-shaped
+    `obs.attribution.CostBreakdown` per capacity point (compute /
+    ub_stream / fill_drain from the closed forms, dram_spill from the
+    liveness profile), each conserving against `energy_total[u]`. The
+    component grids come from the exact numpy closed forms, so
+    conservation at 1e-9 is guaranteed for `backend="numpy"`."""
     from repro.core.model_core import dram_spill_energy
     from repro.graph.occupancy import spill_bits
     from repro.graph.schedule import occupancy_profile
@@ -538,10 +549,30 @@ def capacity_sweep(graph, ub_kibs: Sequence[float] = UB_KIBS, hs=None,
     ubs = np.asarray(list(ub_kibs), np.float64)
     sp = np.asarray([spill_bits(prof, u * 1024.0 * 8.0) for u in ubs])
     se = np.asarray([dram_spill_energy(s) for s in sp])
+    energy_total = base.energy[None, :, :] + se[:, None, None]
+    bds = None
+    if breakdown:
+        from repro.obs.attribution import CostBreakdown, network_breakdown
+        H, W = np.meshgrid(base.hs.astype(np.float64),
+                           base.ws.astype(np.float64), indexing="ij")
+        net = network_breakdown(graph.flatten(), H, W, **model_kw)
+        bds = []
+        for u in range(len(ubs)):
+            bds.append(CostBreakdown(
+                total_cycles=net.total_cycles,
+                total_energy=energy_total[u],
+                cycles=dict(net.cycles),
+                energy={**net.energy,
+                        "dram_spill": se[u] + net.total_energy * 0.0},
+                macs=dict(net.macs),
+                words={**net.words, "dram_spill": sp[u] / 8.0},
+                label=f"capacity:{order}:ub{int(ubs[u])}KiB",
+                meta={"time_unit": "cycles", "ub_kib": float(ubs[u]),
+                      "order": order}))
     return CapacitySweepResult(
         base=base, order=order, peak_bits=prof.peak_bits, ub_kibs=ubs,
         spill_bits=sp, spill_energy=se,
-        energy_total=base.energy[None, :, :] + se[:, None, None])
+        energy_total=energy_total, breakdowns=bds)
 
 
 # ------------------------------------------------------ SLO-aware traffic DSE --
@@ -734,6 +765,108 @@ def robust_traffic_config(sweep: SLOSweepResult,
         sweep.archs, sweep.max_qps, sweep.energy_per_token, weights,
         "robust_traffic_config")
     return sweep.hw, F, mask, winner
+
+
+# ------------------------------------------------- winner explanation (obs) --
+
+@dataclasses.dataclass
+class WinnerExplanation:
+    """WHY the robust-traffic winner wins: per-candidate cost attribution
+    at a common operating point, plus winner-vs-rival delta tables.
+
+    `breakdowns[0]` is the winner, then one entry per rival, each a
+    traffic-mix-weighted PER-TOKEN `obs.attribution.CostBreakdown`
+    (every entry conserves — components sum to totals at 1e-9).
+    `deltas[j]` is ``winner.delta(rivals[j])`` (negative = the winner is
+    cheaper on that component) and `dominant[j]` names the component
+    with the largest absolute delta per kind — the axis that actually
+    pays for the flip."""
+    hw: np.ndarray                  # (C, 2) candidate configs
+    winner: int                     # index into hw
+    rivals: List[int]               # indices into hw
+    breakdowns: List[object]        # [winner, *rivals] CostBreakdowns
+    deltas: List[Dict]              # winner.delta(rival) per rival
+    dominant: List[Dict[str, str]]  # per rival: kind -> component name
+    rates_qps: Dict[str, float]     # per-arch replay probe rate
+
+    def to_dict(self) -> Dict:
+        """Deterministic JSON-ready form (sorted keys downstream)."""
+        return {
+            "winner": {"h": int(self.hw[self.winner, 0]),
+                       "w": int(self.hw[self.winner, 1])},
+            "rivals": [{"h": int(self.hw[r, 0]), "w": int(self.hw[r, 1])}
+                       for r in self.rivals],
+            "breakdowns": [b.to_dict() for b in self.breakdowns],
+            "deltas": self.deltas,
+            "dominant": self.dominant,
+            "rates_qps": {a: float(q)
+                          for a, q in sorted(self.rates_qps.items())},
+        }
+
+
+def explain_winner(sweep: SLOSweepResult, traffic, tables,
+                   weights: Optional[Dict[str, float]] = None,
+                   rivals: Optional[Sequence[int]] = None, sim=None,
+                   n_requests: int = 600, seed: int = 0,
+                   cache_hit=None, spec_decode=None) -> WinnerExplanation:
+    """Explain the `robust_traffic_config` winner with cost attribution.
+
+    Re-runs the winner and its frontier rivals (or an explicit `rivals`
+    index list) through the serving simulator with `breakdown=True` at a
+    COMMON per-arch probe rate — the largest rate every swept config
+    sustains (min over positive `max_qps`, falling back to 1 QPS), so the
+    replays see identical arrivals and the component deltas isolate the
+    hardware, not the load. Per-arch breakdowns are scaled to
+    energy/cycles PER TOKEN and averaged with the traffic-mix weights
+    (same convention as the Fig. 5 normalization), then differenced:
+    which of compute / queueing / dram_spill / kv_refetch /
+    draft_overhead pays for the win.
+
+    `traffic` / `tables` / `cache_hit` / `spec_decode` must match the
+    `slo_capacity_sweep` call that produced `sweep` — the explanation
+    replays the same scenario, just instrumented."""
+    from repro.traffic.sim import SimConfig, simulate
+
+    hw, F, mask, winner = robust_traffic_config(sweep, weights)
+    if rivals is None:
+        rivals = [int(i) for i in np.flatnonzero(mask) if int(i) != winner]
+    rivals = [int(r) for r in rivals]
+    archs = sweep.archs
+    sim = SimConfig() if sim is None else sim
+    per_arch = traffic if isinstance(traffic, dict) else \
+        {a: traffic for a in archs}
+    per_arch, sim, _ = _kv_scenario(per_arch, sim, cache_hit, spec_decode)
+    sim = dataclasses.replace(sim, breakdown=True)
+
+    rates: Dict[str, float] = {}
+    for a, arch in enumerate(archs):
+        pos = sweep.max_qps[a][sweep.max_qps[a] > 0.0]
+        rates[arch] = float(pos.min()) if pos.size else 1.0
+
+    breakdowns = []
+    for c in [winner] + rivals:
+        h, w = int(hw[c, 0]), int(hw[c, 1])
+        acc = None
+        for arch in archs:
+            wt = 1.0 if weights is None else float(weights[arch])
+            if wt == 0.0:
+                continue
+            trace = per_arch[arch].with_rate(rates[arch]) \
+                .sample(n_requests, seed=seed)
+            r = simulate(tables.table(arch, h, w), trace, sim)
+            b = r.breakdown.scaled(wt / max(r.tokens_out, 1))
+            acc = b if acc is None else acc.add(b)
+        if acc is None:
+            raise ValueError("explain_winner: all mix weights zero")
+        acc.label = f"{h}x{w}"
+        breakdowns.append(acc.check_conservation())
+    deltas = [breakdowns[0].delta(b) for b in breakdowns[1:]]
+    dominant = [{kind: (max(d[kind], key=lambda k: abs(d[kind][k]))
+                        if d[kind] else "")
+                 for kind in ("cycles", "energy")} for d in deltas]
+    return WinnerExplanation(hw=hw, winner=winner, rivals=rivals,
+                             breakdowns=breakdowns, deltas=deltas,
+                             dominant=dominant, rates_qps=rates)
 
 
 # ---------------------------------------------------- fleet-composition DSE --

@@ -191,6 +191,10 @@ def ws_components(xp, M, K, N, h, w, opt: ModelOptions):
     zero = pass_cycles * 0.0
     comp = {
         "cycles": pass_cycles + first_load,
+        # pure streaming cycles (one M-row per cycle per tile); the rest of
+        # `cycles` is skew fill/drain + the exposed first weight load —
+        # split out for the attribution layer (obs/attribution.py)
+        "stream_cycles": Tk * Tn * M,
         "weight_load_cycles": first_load,
         "macs": M * K * N,
         # act fetched once by the Systolic Data Setup Unit (paper-faithful);
@@ -236,6 +240,7 @@ def os_components(xp, M, K, N, h, w, opt: ModelOptions):
     zero = pass_cycles * 0.0
     comp = {
         "cycles": pass_cycles,
+        "stream_cycles": Tm * Tn * K,
         "weight_load_cycles": zero,
         "macs": M * K * N,
         "ub_act": Tn * M * K,
@@ -283,12 +288,20 @@ def multi_array_components(xp, M, K, N, h, w, opt: ModelOptions):
 # --------------------------------------------------------------------------
 
 def finalize(xp, comp, h, w, groups, precision: Precision,
-             opt: ModelOptions, pe_mult: float = 1.0):
+             opt: ModelOptions, pe_mult: float = 1.0,
+             breakdown: bool = False):
     """Turn per-group component counts into the full metrics dict.
 
     Eq. 1 (paper): E = 6*M_UB + 2*(M_INTER_PE + M_AA) + M_INTRA_PE, with
     every term scaled by its operand's bits/REF_BITS — at the default 8/8/8
     precision this is exactly the paper's word-count accounting.
+
+    With ``breakdown=True`` the dict additionally carries the attribution
+    split (`cycles_compute`/`cycles_fill_drain`,
+    `energy_compute`/`energy_ub_stream`/`energy_fill_drain`) consumed by
+    obs/attribution.py. The split terms are computed as fresh expressions —
+    never by subtracting from the totals — so the 1e-9 conservation gate
+    genuinely re-checks the Eq. 1 algebra. The default path is untouched.
     """
     sa, sw, so = precision.scales()
     g = groups
@@ -326,7 +339,7 @@ def finalize(xp, comp, h, w, groups, precision: Precision,
                          + precision.weight_bits * comp["bw_weight"]
                          + precision.out_bits * comp["bw_out"])
 
-    return {
+    out = {
         "cycles": cycles,
         "utilization": utilization,
         "macs": macs,
@@ -343,6 +356,25 @@ def finalize(xp, comp, h, w, groups, precision: Precision,
         "ub_bandwidth": ub_bandwidth,
         "ub_bandwidth_bits": ub_bandwidth_bits,
     }
+    if breakdown:
+        # cycles: pure streaming vs skew fill/drain + exposed weight load
+        out["cycles_compute"] = g * comp["stream_cycles"]
+        out["cycles_fill_drain"] = g * (comp["cycles"]
+                                        - comp["stream_cycles"])
+        # energy: the three Eq. 1 cost tiers — UB streaming (6*M_UB), the
+        # in-array compute movement (inter-PE + AA + intra-PE), and the
+        # idle-PE leakage (only priced when opt.idle_pe_energy is set; it
+        # is exactly the fill/drain + raggedness bubble)
+        out["energy_ub_stream"] = 6.0 * (sa * m_ub_act + sw * m_ub_weight
+                                         + so * m_ub_out)
+        out["energy_compute"] = (
+            2.0 * (sa * inter_act + so * inter_psum + sw * inter_wload
+                   + so * m_aa)
+            + (sa * intra_act + sw * intra_weight + so * intra_out))
+        out["energy_fill_drain"] = (
+            opt.idle_pe_energy * (cycles * pe - macs)
+            if opt.idle_pe_energy else cycles * 0.0)
+    return out
 
 
 def analyze_gemm_core(xp, M, K, N, h, w, *, dataflow: str = "ws",
@@ -350,7 +382,8 @@ def analyze_gemm_core(xp, M, K, N, h, w, *, dataflow: str = "ws",
                       act_reread: bool = False,
                       count_weight_load_hops: bool = False,
                       idle_pe_energy: float = 0.0,
-                      n_arrays: int = 1, relaxed: bool = False):
+                      n_arrays: int = 1, relaxed: bool = False,
+                      breakdown: bool = False):
     """Backend-agnostic analytical metrics for a (grouped) GEMM.
 
     All of M, K, N, h, w, groups may be broadcastable arrays of whatever
@@ -366,7 +399,7 @@ def analyze_gemm_core(xp, M, K, N, h, w, *, dataflow: str = "ws",
     fn = get_dataflow(dataflow)
     comp = fn(xp, M, K, N, h, w, opt)
     return finalize(xp, comp, h, w, groups, precision, opt,
-                    pe_mult=fn.pe_mult(opt))
+                    pe_mult=fn.pe_mult(opt), breakdown=breakdown)
 
 METRIC_FIELDS = (
     "cycles", "utilization", "macs", "m_ub", "m_ub_act", "m_ub_weight",

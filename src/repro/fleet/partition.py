@@ -680,5 +680,6 @@ def partition_server_table(st: StageTables, n_stages: int = 1,
         # the binding Unified Buffer is the most KV-loaded stage's, and
         # head-parallel ranks split their stage's cache tp ways
         kv_bits_per_token=float(stage_kv.max()) / st.tp,
-        pe=float(st.h * st.w * S * st.tp))
+        pe=float(st.h * st.w * S * st.tp),
+        pipeline_bubble=plan.bubble)
     return PartitionedServer(table=table, plan=plan)

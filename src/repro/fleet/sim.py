@@ -131,6 +131,33 @@ class FleetResult:
     accepted_tokens: int = 0
     kv_ship_reuse_hits: int = 0
     per_server: List[SimResult] = dataclasses.field(default_factory=list)
+    # cost attribution (FleetSimConfig.server.breakdown=True): fleet-wide
+    # CostBreakdown — per-server sim breakdowns with each server's compute
+    # time split by its table's pipeline-bubble fraction, plus (disagg)
+    # phase-1 prefill compute and link_ship components. Time axis covers
+    # busy + queue + link seconds; energy conserves against `energy_eq1`.
+    breakdown: Optional[object] = None
+
+    def latency_histograms(self, lo: float = 1e-3, hi: float = 1e3,
+                           buckets_per_decade: int = 4
+                           ) -> Dict[str, "object"]:
+        """Fleet-wide TTFT/TPOT distributions, built by observing each
+        server's per-request samples into its OWN histogram and merging
+        bucket-wise (`obs.metrics.Histogram.merge`) — the aggregation
+        path a real fleet would use, where raw samples never leave the
+        server."""
+        from repro.obs.metrics import Histogram
+        out = {}
+        for kind in ("ttft_s", "tpot_s"):
+            merged = Histogram(lo=lo, hi=hi,
+                               buckets_per_decade=buckets_per_decade)
+            for r in self.per_server:
+                h = Histogram(lo=lo, hi=hi,
+                              buckets_per_decade=buckets_per_decade)
+                h.observe_many(getattr(r, kind))
+                merged.merge(h)
+            out[kind] = merged
+        return out
 
     @property
     def server_timelines(self) -> List[np.ndarray]:
@@ -292,6 +319,61 @@ def simulate_fleet(fleet: FleetTables, trace: RequestTrace,
     return _assemble_mixed(fleet, trace, cfg, parts, results, t_wall)
 
 
+def _fleet_breakdown(tables: Sequence, results: List[Optional[SimResult]],
+                     prep: Optional[Dict] = None,
+                     prefill_tables: Optional[Sequence] = None):
+    """Fleet-level CostBreakdown from per-server sim breakdowns.
+
+    Each server's compute TIME is split by its table's `pipeline_bubble`
+    fraction (fill/drain share of every pipelined pass) — exactly
+    `frac * compute` moves to the `pipeline_bubble` component, so the sum
+    is unchanged and conservation holds. Energy is not split: bubbles are
+    idle time, and Eq. 1 charges data movement, which bubbles don't add.
+    For disaggregated fleets `prep` contributes phase-1 prefill compute
+    (per prefill server, bubble-split the same way) and the KV-shipping
+    `link_ship` component in both time and energy."""
+    from repro.obs.attribution import CostBreakdown
+    agg = None
+    for table, r in zip(tables, results):
+        if r is None or r.breakdown is None:
+            continue
+        b = r.breakdown
+        cy = dict(b.cycles)
+        frac = float(getattr(table, "pipeline_bubble", 0.0) or 0.0)
+        if frac:
+            comp = cy.get("compute", 0.0)
+            cy["compute"] = comp * (1.0 - frac)
+            cy["pipeline_bubble"] = (cy.get("pipeline_bubble", 0.0)
+                                     + comp * frac)
+        piece = CostBreakdown(
+            total_cycles=b.total_cycles, total_energy=b.total_energy,
+            cycles=cy, energy=dict(b.energy), meta={"time_unit": "s"})
+        agg = piece if agg is None else agg.add(piece)
+    if agg is None:
+        agg = CostBreakdown(total_cycles=0.0, total_energy=0.0,
+                            meta={"time_unit": "s"})
+    if prep is not None:
+        cy = {"link_ship": prep["link_secs"]}
+        en = {"link_ship": prep["link_energy"], "compute": 0.0}
+        pre_t = 0.0
+        for table, secs, pen in zip(prefill_tables,
+                                    prep["prefill_by_server_secs"],
+                                    prep["prefill_by_server_energy"]):
+            frac = float(getattr(table, "pipeline_bubble", 0.0) or 0.0)
+            cy["compute"] = cy.get("compute", 0.0) + secs * (1.0 - frac)
+            if frac:
+                cy["pipeline_bubble"] = (cy.get("pipeline_bubble", 0.0)
+                                         + secs * frac)
+            en["compute"] += pen
+            pre_t += secs
+        agg = agg.add(CostBreakdown(
+            total_cycles=pre_t + prep["link_secs"],
+            total_energy=prep["energy"],
+            cycles=cy, energy=en, meta={"time_unit": "s"}))
+    agg.label = "fleet"
+    return agg
+
+
 def _assemble_mixed(fleet: FleetTables, trace: RequestTrace,
                     cfg: FleetSimConfig, parts: List[np.ndarray],
                     results: List[Optional[SimResult]],
@@ -328,6 +410,8 @@ def _assemble_mixed(fleet: FleetTables, trace: RequestTrace,
         cache_evictions=sum(r.cache_evictions for r in res),
         draft_steps=sum(r.draft_steps for r in res),
         accepted_tokens=sum(r.accepted_tokens for r in res),
+        breakdown=(_fleet_breakdown(fleet.mixed, results)
+                   if cfg.server.breakdown else None),
         per_server=res)
 
 
@@ -350,8 +434,11 @@ def _disagg_prepare(fleet: FleetTables, trace: RequestTrace,
     done = np.empty(n)
     prefill_secs = 0.0
     energy = 0.0
+    by_secs: List[float] = []        # per-prefill-server accounts for the
+    by_energy: List[float] = []      # fleet attribution (bubble split)
     for si, (table, idx) in enumerate(zip(fleet.prefill, parts)):
         free = 0.0
+        s_secs = s_en = 0.0
         for i in idx:
             pc, pen = table.prefill(int(trace.prompt_len[i]))
             start = max(free, float(trace.arrival_s[i]))
@@ -359,9 +446,13 @@ def _disagg_prepare(fleet: FleetTables, trace: RequestTrace,
             done[i] = free
             prefill_secs += pc / clock
             energy += pen
+            s_secs += pc / clock
+            s_en += pen
             if emit:
                 tr.complete("prefill", f"prefill{si}", start, free - start,
                             rid=int(i), tokens=int(trace.prompt_len[i]))
+        by_secs.append(s_secs)
+        by_energy.append(s_en)
     # --- KV shipping over the fleet link ----------------------------------
     kvb = fleet.decode[0].kv_bits_per_token
     bits = trace.prompt_len.astype(np.float64) * kvb
@@ -413,7 +504,9 @@ def _disagg_prepare(fleet: FleetTables, trace: RequestTrace,
             "dparts": dparts, "order": order, "ready": ready,
             "prefill_secs": prefill_secs, "energy": energy,
             "link_secs": link_secs, "link_energy": link_energy,
-            "reuse_hits": reuse_hits}
+            "reuse_hits": reuse_hits,
+            "prefill_by_server_secs": by_secs,
+            "prefill_by_server_energy": by_energy}
 
 
 def _assemble_disagg(fleet: FleetTables, trace: RequestTrace,
@@ -458,6 +551,9 @@ def _assemble_disagg(fleet: FleetTables, trace: RequestTrace,
         draft_steps=sum(r.draft_steps for r in res),
         accepted_tokens=sum(r.accepted_tokens for r in res),
         kv_ship_reuse_hits=prep.get("reuse_hits", 0),
+        breakdown=(_fleet_breakdown(prep["dec_tables"], results, prep=prep,
+                                    prefill_tables=fleet.prefill)
+                   if cfg.server.breakdown else None),
         per_server=res)
 
 

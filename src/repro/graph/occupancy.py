@@ -88,6 +88,7 @@ class GraphMetrics:
     spill_bits: float
     spill_energy: float                 # Eq. 1-relative units
     energy_total: np.ndarray            # metrics.energy + spill_energy
+    breakdown: Optional[object] = None  # CostBreakdown when requested
 
     @property
     def peak_bits(self) -> float:
@@ -95,18 +96,31 @@ class GraphMetrics:
 
 
 def analyze_graph(g: Graph, h, w, *, ub_kib: Optional[float] = None,
-                  order: str = "dfs", **model_kw) -> GraphMetrics:
+                  order: str = "dfs", breakdown: bool = False,
+                  **model_kw) -> GraphMetrics:
     """Analyze a network graph on an h x w array with a finite UB.
 
     `model_kw` passes through to `analyze_network` (dataflow, precision,
     accounting options); `h`/`w` may be arrays (the spill term is a scalar
     added uniformly — occupancy depends on the schedule and tensor sizes,
-    not on the array shape)."""
+    not on the array shape). With `breakdown=True` the result carries a
+    `CostBreakdown` whose energy components (compute / ub_stream /
+    fill_drain / dram_spill) conserve against `energy_total` at 1e-9."""
     m = systolic.analyze_network(g.flatten(), h, w, **model_kw)
     prof = occupancy_profile(g, order=order)
     ub_bits = None if ub_kib is None else float(ub_kib) * 1024.0 * 8.0
     sp = spill_bits(prof, ub_bits)
     se = dram_spill_energy(sp)
+    bd = None
+    if breakdown:
+        from repro.obs.attribution import network_breakdown
+        bd = network_breakdown(g.flatten(), h, w, label=f"graph:{g.name}"
+                               if getattr(g, "name", None) else "graph",
+                               **model_kw)
+        bd.energy["dram_spill"] = se + bd.total_energy * 0.0
+        bd.total_energy = np.asarray(m.energy) + se
+        bd.words["dram_spill"] = sp / 8.0   # REF_BITS words moved
+        bd.meta["ub_kib"] = ub_kib
     return GraphMetrics(metrics=m, profile=prof, ub_bits=ub_bits,
                         spill_bits=sp, spill_energy=se,
-                        energy_total=np.asarray(m.energy) + se)
+                        energy_total=np.asarray(m.energy) + se, breakdown=bd)

@@ -10,6 +10,12 @@ Three pieces, one import surface:
     into numbers tests assert on.
   * `obs.export`             — Chrome/Perfetto trace-event JSON writer +
     structural validator; seeded sim-clock traces export byte-identically.
+  * `CostBreakdown` (`obs.attribution`) — conservation-gated cost
+    attribution: named cycle/energy components that MUST sum back to the
+    default path's totals at 1e-9 (`check_conservation`), threaded
+    through the closed forms, graph capacity, traffic and fleet sims.
+  * `obs.report`             — deterministic markdown/JSON rendering of
+    attributions and DSE winner explanations.
 
 Typical use::
 
@@ -20,27 +26,40 @@ Typical use::
     obs.write_trace(tr, "results/replay.perfetto.json")
     print(obs.metrics().to_json())
 """
+from repro.obs.attribution import (COMPONENTS, ConservationError,
+                                   CostBreakdown, gemm_breakdown,
+                                   network_breakdown)
 from repro.obs.export import (histogram_events, to_trace_events, trace_json,
                               validate_trace, write_trace)
 from repro.obs.metrics import (Histogram, MetricsRegistry, log_histogram,
                                metrics, reset_metrics)
+from repro.obs.report import (attribution_report, report_json, winner_report,
+                              write_report)
 from repro.obs.trace import (Tracer, disable_tracing, enable_tracing,
                              set_tracer, tracer)
 
 __all__ = [
+    "COMPONENTS",
+    "ConservationError",
+    "CostBreakdown",
     "Histogram",
     "MetricsRegistry",
     "Tracer",
+    "attribution_report",
     "disable_tracing",
     "enable_tracing",
+    "gemm_breakdown",
     "histogram_events",
     "log_histogram",
     "metrics",
+    "network_breakdown",
+    "report_json",
     "reset_metrics",
     "set_tracer",
     "to_trace_events",
     "trace_json",
     "tracer",
     "validate_trace",
-    "write_trace",
+    "winner_report",
+    "write_report",
 ]

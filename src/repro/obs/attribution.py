@@ -1,0 +1,270 @@
+"""Conservation-gated cost attribution: every cycle and joule, explained.
+
+The analytical stack emits *totals* — `analyze_gemm_core` one cycles/energy
+number, the traffic sim one TTFT, the fleet sim one goodput. This module is
+the shared vocabulary for decomposing those totals into named components
+(SCALE-Sim-style), with **exact conservation as the contract**: the
+components of a :class:`CostBreakdown` must sum back to the totals the
+default (non-attributed) path reports, within ``rel = 1e-9``. That contract
+is enforced by :meth:`CostBreakdown.check_conservation`, which tests and CI
+call on every attributed path — a breakdown that does not conserve is a bug
+in the attribution, never a rounding to shrug off.
+
+Component vocabulary (a breakdown uses the subset that applies to its layer):
+
+======================  ====================================================
+``compute``             streaming MACs / prefill+decode busy time
+``fill_drain``          array skew fill+drain cycles, first weight load,
+                        idle-PE leakage energy (when priced)
+``ub_stream``           Unified-Buffer access energy (the 6*M_UB Eq.1 term)
+``dram_spill``          finite-UB / KV spill round-trips to DRAM
+``kv_refetch``          shared-prefix KV refetch from the cache tier
+``link_ship``           interconnect shipping (disagg prefill->decode KV)
+``pipeline_bubble``     pipeline-parallel bubble share of busy time
+``queueing``            admission wait (no slot free)
+``draft_overhead``      speculative-decoding draft passes
+======================  ====================================================
+
+Units are layer-appropriate: cycles for closed forms, seconds for the
+simulators (``meta["time_unit"]`` records which); energy is Eq. 1-relative
+everywhere, so components compose across layers by :meth:`CostBreakdown.add`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+#: Canonical component names, in fixed report order.
+COMPONENTS = (
+    "compute",
+    "fill_drain",
+    "ub_stream",
+    "dram_spill",
+    "kv_refetch",
+    "link_ship",
+    "pipeline_bubble",
+    "queueing",
+    "draft_overhead",
+)
+
+
+class ConservationError(ValueError):
+    """Components do not sum to the totals within tolerance."""
+
+
+def _max_rel_err(total, parts_sum) -> float:
+    """max |sum(parts) - total| / max(|total|, 1) over all elements."""
+    t = np.asarray(total, np.float64)
+    s = np.asarray(parts_sum, np.float64)
+    if t.size == 0:
+        return 0.0
+    scale = np.maximum(np.abs(t), 1.0)
+    return float(np.max(np.abs(s - t) / scale))
+
+
+def _sum_parts(parts: Dict[str, object]):
+    """Left-fold sum of component values (floats or broadcastable arrays)."""
+    tot = 0.0
+    for name in COMPONENTS:
+        if name in parts:
+            tot = tot + parts[name]
+    return tot
+
+
+def _scalarize(v):
+    a = np.asarray(v, np.float64)
+    return float(a) if a.ndim == 0 else a.tolist()
+
+
+@dataclasses.dataclass
+class CostBreakdown:
+    """Named decomposition of a cycles total and an energy total.
+
+    ``cycles`` / ``energy`` map component names (subset of
+    :data:`COMPONENTS`) to floats or numpy arrays broadcastable against the
+    totals; ``macs`` / ``words`` optionally attribute MAC and word-movement
+    counts to the same components. ``meta`` carries unit info (e.g.
+    ``time_unit: "s"`` when the "cycles" axis is wall-clock seconds from a
+    simulator) and provenance.
+    """
+    total_cycles: object
+    total_energy: object
+    cycles: Dict[str, object] = dataclasses.field(default_factory=dict)
+    energy: Dict[str, object] = dataclasses.field(default_factory=dict)
+    macs: Dict[str, object] = dataclasses.field(default_factory=dict)
+    words: Dict[str, object] = dataclasses.field(default_factory=dict)
+    label: str = ""
+    meta: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        for kind in ("cycles", "energy", "macs", "words"):
+            bad = set(getattr(self, kind)) - set(COMPONENTS)
+            if bad:
+                raise ValueError(
+                    f"unknown {kind} component(s) {sorted(bad)}; "
+                    f"allowed: {list(COMPONENTS)}")
+
+    # -- conservation ------------------------------------------------------
+    def conservation_errors(self, rel: float = 1e-9):
+        """List of human-readable conservation violations (empty == ok)."""
+        problems = []
+        for kind, total in (("cycles", self.total_cycles),
+                            ("energy", self.total_energy)):
+            parts = getattr(self, kind)
+            if not parts:
+                continue
+            err = _max_rel_err(total, _sum_parts(parts))
+            if not err <= rel:    # catches NaN too
+                problems.append(
+                    f"{self.label or 'breakdown'}: {kind} components sum "
+                    f"off by rel {err:.3e} (> {rel:.1e})")
+        return problems
+
+    def check_conservation(self, rel: float = 1e-9) -> "CostBreakdown":
+        """Raise :class:`ConservationError` unless components sum to the
+        totals within ``rel``; returns self for chaining."""
+        problems = self.conservation_errors(rel)
+        if problems:
+            raise ConservationError("; ".join(problems))
+        return self
+
+    def max_rel_err(self) -> float:
+        """Worst conservation error across both axes (for reporting)."""
+        errs = [0.0]
+        for kind, total in (("cycles", self.total_cycles),
+                            ("energy", self.total_energy)):
+            parts = getattr(self, kind)
+            if parts:
+                errs.append(_max_rel_err(total, _sum_parts(parts)))
+        return max(errs)
+
+    # -- algebra -----------------------------------------------------------
+    def add(self, other: "CostBreakdown") -> "CostBreakdown":
+        """Componentwise sum (totals add; conservation is preserved)."""
+        def merge(a, b):
+            out = dict(a)
+            for k, v in b.items():
+                out[k] = (out[k] + v) if k in out else v
+            return out
+        return CostBreakdown(
+            total_cycles=self.total_cycles + other.total_cycles,
+            total_energy=self.total_energy + other.total_energy,
+            cycles=merge(self.cycles, other.cycles),
+            energy=merge(self.energy, other.energy),
+            macs=merge(self.macs, other.macs),
+            words=merge(self.words, other.words),
+            label=self.label or other.label,
+            meta={**other.meta, **self.meta})
+
+    __add__ = add
+
+    def scaled(self, factor: float) -> "CostBreakdown":
+        """Multiply totals and every component by ``factor`` (e.g. 1/tokens
+        for per-token normalization); conservation is preserved."""
+        sc = lambda d: {k: v * factor for k, v in d.items()}
+        return CostBreakdown(
+            total_cycles=self.total_cycles * factor,
+            total_energy=self.total_energy * factor,
+            cycles=sc(self.cycles), energy=sc(self.energy),
+            macs=sc(self.macs), words=sc(self.words),
+            label=self.label, meta=dict(self.meta))
+
+    def component(self, kind: str, name: str) -> float:
+        """Scalar value of one component (0.0 when absent; arrays sum)."""
+        v = getattr(self, kind).get(name, 0.0)
+        return float(np.sum(np.asarray(v, np.float64)))
+
+    def delta(self, other: "CostBreakdown") -> Dict[str, Dict[str, float]]:
+        """Per-component ``self - other`` (scalarized), both axes."""
+        out = {}
+        for kind in ("cycles", "energy"):
+            names = [n for n in COMPONENTS
+                     if n in getattr(self, kind) or n in getattr(other, kind)]
+            out[kind] = {n: self.component(kind, n) - other.component(kind, n)
+                         for n in names}
+        return out
+
+    def dominant(self, kind: str = "energy") -> str:
+        """Component with the largest absolute share on the given axis."""
+        parts = getattr(self, kind)
+        if not parts:
+            raise ValueError(f"no {kind} components")
+        return max((n for n in COMPONENTS if n in parts),
+                   key=lambda n: abs(self.component(kind, n)))
+
+    def to_dict(self) -> Dict[str, object]:
+        """Deterministic JSON-able form (components in COMPONENTS order)."""
+        def ser(d):
+            return {n: _scalarize(d[n]) for n in COMPONENTS if n in d}
+        return {
+            "label": self.label,
+            "total_cycles": _scalarize(self.total_cycles),
+            "total_energy": _scalarize(self.total_energy),
+            "cycles": ser(self.cycles),
+            "energy": ser(self.energy),
+            "macs": ser(self.macs),
+            "words": ser(self.words),
+            "meta": dict(self.meta),
+            "max_rel_err": self.max_rel_err(),
+        }
+
+
+# --------------------------------------------------------------------------
+# Closed-form builders (numpy float64 path; totals match core/systolic.py
+# bitwise because they evaluate the identical expressions in the same order).
+# --------------------------------------------------------------------------
+
+def _from_metric_dict(d: Dict[str, object], label: str = "") -> CostBreakdown:
+    """Assemble a CostBreakdown from an `analyze_gemm_core(breakdown=True)`
+    metrics dict (or a componentwise sum of such dicts)."""
+    return CostBreakdown(
+        total_cycles=d["cycles"],
+        total_energy=d["energy"],
+        cycles={"compute": d["cycles_compute"],
+                "fill_drain": d["cycles_fill_drain"]},
+        energy={"compute": d["energy_compute"],
+                "ub_stream": d["energy_ub_stream"],
+                "fill_drain": d["energy_fill_drain"]},
+        macs={"compute": d["macs"]},
+        words={"ub_stream": d["m_ub"],
+               "compute": d["m_inter_pe"] + d["m_intra_pe"] + d["m_aa"]},
+        label=label, meta={"time_unit": "cycles"})
+
+
+def gemm_breakdown(M, K, N, h, w, *, label: str = "", **model_kw
+                   ) -> CostBreakdown:
+    """Attributed closed-form metrics for one (grouped) GEMM.
+
+    Accepts the same keywords as `systolic.analyze_gemm` (dataflow, groups,
+    precision, act_reread, ...); h/w may be grids — components broadcast.
+    """
+    from repro.core.model_core import analyze_gemm_core
+    f = lambda x: np.asarray(x, np.float64)
+    d = analyze_gemm_core(np, f(M), f(K), f(N), f(h), f(w),
+                          breakdown=True, **model_kw)
+    return _from_metric_dict(d, label=label or "gemm")
+
+
+def network_breakdown(workloads, h, w, *, label: str = "", **model_kw
+                      ) -> CostBreakdown:
+    """Attributed metrics summed over a network's layer workloads.
+
+    Mirrors `systolic.analyze_network` exactly — same per-layer calls in the
+    same order, same left-fold summation — so `total_cycles`/`total_energy`
+    are bitwise identical to the unattributed numpy path.
+    """
+    from repro.core.model_core import analyze_gemm_core
+    f = lambda x: np.asarray(x, np.float64)
+    H, W = f(h), f(w)
+    ds = []
+    for wl in workloads:
+        M, K, N, g, rep = wl
+        ds.append(analyze_gemm_core(np, f(M), f(K), f(N), H, W,
+                                    groups=f(g * rep), breakdown=True,
+                                    **model_kw))
+    if not ds:
+        raise ValueError("empty workload list")
+    summed = {k: sum(d[k] for d in ds) for k in ds[0]}
+    return _from_metric_dict(summed, label=label or "network")

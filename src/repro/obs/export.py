@@ -123,7 +123,7 @@ def validate_trace(obj: Union[Dict, Sequence[Dict]]) -> List[str]:
       * B/E spans balance per track (LIFO, matching names);
       * async b/e lifelines pair up per (cat, id, name);
       * X events carry a non-negative ``dur``;
-      * C events carry only numeric series values.
+      * C events carry only numeric, FINITE series values.
     """
     events = obj.get("traceEvents", []) if isinstance(obj, dict) else obj
     problems: List[str] = []
@@ -173,6 +173,15 @@ def validate_trace(obj: Union[Dict, Sequence[Dict]]) -> List[str]:
             if not isinstance(args, dict) or not args or any(
                     not isinstance(v, (int, float)) for v in args.values()):
                 problems.append(f"event {i}: C without numeric series")
+            else:
+                # numeric is not enough: NaN/inf pass the isinstance check
+                # but break counter-track rendering — reject per series
+                # (NaN compares False on both sides, so it lands here too)
+                for k, v in args.items():
+                    if not float("-inf") < float(v) < float("inf"):
+                        problems.append(
+                            f"event {i}: C series {k!r} non-finite "
+                            f"value {v!r}")
     for key, stack in stacks.items():
         if stack:
             problems.append(f"unbalanced spans on track {key}: {stack}")

@@ -99,6 +99,29 @@ class Histogram:
         self.vmin = min(self.vmin, float(x.min()))
         self.vmax = max(self.vmax, float(x.max()))
 
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Bucket-wise sum of another histogram into this one (in place).
+
+        Requires an identical bucket configuration — merging differently
+        shaped histograms would silently mis-bin, so it raises instead.
+        This is how `fleet/sim.py` aggregates per-server TTFT/TPOT
+        distributions fleet-wide without re-observing raw samples."""
+        if (self.lo, self.hi, self.buckets_per_decade) != (
+                other.lo, other.hi, other.buckets_per_decade):
+            raise ValueError(
+                "bucket config mismatch: "
+                f"(lo={self.lo}, hi={self.hi}, "
+                f"bpd={self.buckets_per_decade}) vs "
+                f"(lo={other.lo}, hi={other.hi}, "
+                f"bpd={other.buckets_per_decade})")
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.n += other.n
+        self.total += other.total
+        self.vmin = min(self.vmin, other.vmin)
+        self.vmax = max(self.vmax, other.vmax)
+        return self
+
     def quantile(self, q: float) -> float:
         """Approximate quantile from the bucket CDF (bucket upper edge)."""
         if self.n == 0:
@@ -167,6 +190,16 @@ class MetricsRegistry:
             h = self.histograms[name] = Histogram(
                 lo=lo, hi=hi, buckets_per_decade=buckets_per_decade)
         h.observe(value)
+
+    def hist(self, name: str, lo: float = 1e-3, hi: float = 1e3,
+             buckets_per_decade: int = 4) -> Histogram:
+        """Get-or-create the named histogram (for bulk `observe_many` —
+        the attribution paths observe whole per-request columns at once)."""
+        h = self.histograms.get(name)
+        if h is None:
+            h = self.histograms[name] = Histogram(
+                lo=lo, hi=hi, buckets_per_decade=buckets_per_decade)
+        return h
 
     # ---------------------------------------------------- snapshot / delta --
     def snapshot(self) -> Dict[str, float]:

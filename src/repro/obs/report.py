@@ -1,0 +1,116 @@
+"""Deterministic markdown / JSON rendering of cost attributions.
+
+Turns `obs.attribution.CostBreakdown`s and `core.dse.WinnerExplanation`s
+into the human-facing artifacts the benchmarks and CI upload: a
+per-component table per breakdown (components in the canonical
+:data:`~repro.obs.attribution.COMPONENTS` order, fixed ``%.6e``
+formatting) and a winner-vs-rival delta report naming the component that
+pays for the win. Rendering is DETERMINISTIC — same inputs produce
+byte-identical text/JSON (sorted keys, fixed separators, no timestamps)
+— so reports diff cleanly across commits and CI can assert on bytes.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Sequence, Union
+
+from repro.obs.attribution import COMPONENTS, CostBreakdown
+
+_FMT = "%.6e"
+
+
+def _num(v: float) -> str:
+    return _FMT % float(v)
+
+
+def _breakdown_table(b: CostBreakdown) -> List[str]:
+    """One markdown table: component rows x (cycles, energy, macs, words)."""
+    import numpy as np
+    time_unit = str(b.meta.get("time_unit", "cycles"))
+    lines = [
+        f"| component | {time_unit} | energy | macs | words |",
+        "|---|---|---|---|---|",
+    ]
+    for name in COMPONENTS:
+        if not any(name in getattr(b, kind)
+                   for kind in ("cycles", "energy", "macs", "words")):
+            continue
+        cells = [_num(b.component(kind, name))
+                 for kind in ("cycles", "energy", "macs", "words")]
+        lines.append(f"| {name} | " + " | ".join(cells) + " |")
+    tot_c = float(np.sum(np.asarray(b.total_cycles, np.float64)))
+    tot_e = float(np.sum(np.asarray(b.total_energy, np.float64)))
+    lines.append(f"| **total** | {_num(tot_c)} | {_num(tot_e)} |  |  |")
+    return lines
+
+
+def attribution_report(breakdowns: Union[Dict[str, CostBreakdown],
+                                         Sequence[CostBreakdown]],
+                       title: str = "Cost attribution") -> str:
+    """Markdown report: one conservation-stamped table per breakdown.
+
+    `breakdowns` is a name->CostBreakdown dict (rendered in insertion
+    order) or a sequence (labels become the section names)."""
+    items = list(breakdowns.items()) if isinstance(breakdowns, dict) else \
+        [(b.label or f"breakdown[{i}]", b)
+         for i, b in enumerate(breakdowns)]
+    out = [f"# {title}", ""]
+    for name, b in items:
+        out.append(f"## {name}")
+        out.append("")
+        out.extend(_breakdown_table(b))
+        out.append("")
+        out.append(f"conservation max rel err: {_num(b.max_rel_err())}")
+        out.append("")
+    return "\n".join(out)
+
+
+def winner_report(explanation) -> str:
+    """Markdown delta report for a `core.dse.WinnerExplanation`.
+
+    Per rival: a winner-minus-rival table over both axes (negative =
+    the winner is cheaper) plus the dominant component per axis."""
+    ex = explanation
+    wh, ww = int(ex.hw[ex.winner, 0]), int(ex.hw[ex.winner, 1])
+    out = [f"# Winner explanation: {wh}x{ww}", ""]
+    out.append("Per-token, traffic-mix-weighted cost attribution "
+               "(winner first):")
+    out.append("")
+    out.extend(attribution_report(
+        {b.label: b for b in ex.breakdowns},
+        title="Candidate attributions").splitlines()[2:])
+    for j, r in enumerate(ex.rivals):
+        rh, rw = int(ex.hw[r, 0]), int(ex.hw[r, 1])
+        d = ex.deltas[j]
+        out.append(f"## Delta vs {rh}x{rw} (winner - rival)")
+        out.append("")
+        out.append("| component | cycles | energy |")
+        out.append("|---|---|---|")
+        names = [n for n in COMPONENTS
+                 if n in d.get("cycles", {}) or n in d.get("energy", {})]
+        for n in names:
+            out.append(f"| {n} | {_num(d['cycles'].get(n, 0.0))} | "
+                       f"{_num(d['energy'].get(n, 0.0))} |")
+        out.append("")
+        dom = ex.dominant[j]
+        out.append(f"dominant: cycles={dom.get('cycles', '')!s} "
+                   f"energy={dom.get('energy', '')!s}")
+        out.append("")
+    return "\n".join(out)
+
+
+def report_json(obj) -> str:
+    """Canonical JSON bytes for a breakdown / explanation / plain dict
+    (sorted keys, fixed separators — byte-stable across runs)."""
+    if hasattr(obj, "to_dict"):
+        obj = obj.to_dict()
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def write_report(path: str, text: str) -> str:
+    """Write report text (or JSON) to `path`; returns the path."""
+    with open(path, "w") as f:
+        f.write(text)
+        if not text.endswith("\n"):
+            f.write("\n")
+    return path

@@ -155,6 +155,11 @@ class CostTable:
     verify_energy: List[List[float]] = dataclasses.field(
         default_factory=list)
     verify_macs: List[List[float]] = dataclasses.field(default_factory=list)
+    # pipeline-parallel bubble fraction of the stage schedule this table
+    # was synthesized from (fleet/partition.partition_server_table); 0 for
+    # unpartitioned tables. The fleet attribution splits each server's
+    # compute time by it — the charged totals never read it.
+    pipeline_bubble: float = 0.0
 
     # ------------------------------------------------------------- lookups --
     def _bilerp(self, grid: List[List[float]], active: float,

@@ -48,6 +48,13 @@ from repro.traffic.workload import RequestTrace
 
 POLICIES = ("prefill_first", "chunked")
 
+# Column names of SimResult.ttft_parts / .tpot_parts (attribution axes of
+# each request's latency; see SimConfig.breakdown).
+TTFT_PARTS = ("queueing", "prefill", "decode", "draft_overhead",
+              "dram_spill", "kv_refetch")
+TPOT_PARTS = ("prefill", "decode", "draft_overhead", "dram_spill",
+              "kv_refetch")
+
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
@@ -78,6 +85,14 @@ class SimConfig:
     # sub-lanes). None (the default) costs one hoisted bool per replay.
     tracer: Optional[object] = None
     track: str = "server"
+    # cost attribution (obs/attribution.py): when True the replay keeps
+    # cumulative per-component busy-second and energy accounts plus
+    # per-request TTFT/TPOT decompositions, returned as
+    # `SimResult.breakdown` / `.ttft_parts` / `.tpot_parts`, published as
+    # registry histograms, and (with a tracer) emitted as Perfetto counter
+    # tracks. The default False path is byte-identical to the
+    # unattributed engine (golden-gated).
+    breakdown: bool = False
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -127,6 +142,15 @@ class SimResult:
     cache_evictions: int = 0
     draft_steps: int = 0
     accepted_tokens: int = 0
+    # cost attribution (SimConfig.breakdown=True; None otherwise):
+    # `breakdown` is an obs.attribution.CostBreakdown over the whole
+    # replay (time axis in seconds: busy + queue); `ttft_parts` is (n, 6)
+    # seconds per TTFT_PARTS column, rows summing to ttft_s; `tpot_parts`
+    # is (n, 5) WINDOW seconds per TPOT_PARTS column, rows summing to
+    # tpot_s * output_len.
+    breakdown: Optional[object] = None
+    ttft_parts: Optional[np.ndarray] = None
+    tpot_parts: Optional[np.ndarray] = None
 
     @property
     def energy_per_token(self) -> float:
@@ -224,13 +248,30 @@ def simulate(table: CostTable, trace: RequestTrace,
     n_spill = 0                 # steps that paid a DRAM-spill stall
     spill_cyc = 0.0             # total stall cycles charged
 
+    # cost attribution (SimConfig.breakdown): cumulative per-component
+    # busy-second and energy accounts, plus per-request snapshots of the
+    # cumulative vector at window boundaries (admission / first token) so
+    # each TTFT/TPOT decomposes as a cumulative difference. Every charge
+    # below mirrors a default-path `energy +=` / `*_secs +=` statement
+    # exactly, so the components conserve against the totals at 1e-9.
+    bd = cfg.breakdown
+    if bd:
+        c_pre = c_dec = c_draft = c_spill = c_ref = 0.0
+        e_pre = e_dec = e_draft = e_spill = e_ref = 0.0
+        q_secs = 0.0
+        ttft_parts = np.zeros((n, 6))
+        tpot_parts = np.zeros((n, 5))
+        dec_mark = np.zeros((n, 5))       # cums at decode-window start
+        adm_mark = np.zeros((n, 5))       # cums at chunked admission
+
     t = 0.0
     nstep = 0                   # decode-step counter
     active = 0                  # decode-active slots
     kv_tok = 0.0                # resident tokens across occupied slots
     nxt = 0                     # next arrival index (FIFO admission order)
     heap: List = []             # (finish_step, rid)
-    # chunked: [rid, chunks_left, c_cyc, c_en, c_kv, kv_added_so_far]
+    # chunked: [rid, chunks_left, c_cyc, c_en, c_kv, kv_added_so_far,
+    #           refetch_cyc_share]
     backlog = deque()
     kv_pre = 0.0                # kv_tok share from in-progress prefills
     decode_secs = prefill_secs = spill_secs = energy = 0.0
@@ -255,6 +296,12 @@ def simulate(table: CostTable, trace: RequestTrace,
         if emit:
             tr.counter("slots", track, ts=t_now, active=act,
                        utilization=util)
+            if bd:
+                # cumulative component seconds as a Perfetto counter track
+                tr.counter("attribution", track + ".attr", ts=t_now,
+                           prefill_s=c_pre, decode_s=c_dec,
+                           draft_s=c_draft, spill_s=c_spill,
+                           refetch_s=c_ref)
         tl_count += 1
         if tl_count % tl_stride:
             return
@@ -308,6 +355,8 @@ def simulate(table: CostTable, trace: RequestTrace,
                             # in energy (no stall — write-backs drain
                             # off the critical path)
                             energy += ob * spill_e_per_bit
+                            if bd:
+                                e_spill += ob * spill_e_per_bit
                         xfer = bits_p / dram_bpc
             pc, pen = prefill(plen[rid] - pfx_skip)
             n_lookups += 1
@@ -320,8 +369,17 @@ def simulate(table: CostTable, trace: RequestTrace,
                 # chunk the UNCACHED portion; the prefix fetch rides the
                 # chunk schedule (spread pro rata like the compute)
                 k_ch = -(-(plen[rid] - pfx_skip) // chunk)     # ceil
+                # trailing element: the prefix-refetch share of each
+                # chunk's cycles (attribution only — entry[2] already
+                # includes it, so the charged numbers are unchanged)
                 backlog.append([rid, k_ch, (pc + xfer) / k_ch, pen / k_ch,
-                                plen[rid] / k_ch, 0.0])
+                                plen[rid] / k_ch, 0.0, xfer / k_ch])
+                if bd:
+                    q = t - arr[rid]
+                    q_secs += q
+                    ttft_parts[rid, 0] = q
+                    adm_mark[rid] = (c_pre, c_dec, c_draft, c_spill,
+                                     c_ref)
             else:
                 # exclusive prefill: decode stalls for its whole duration
                 sp = spill_cycles(kv_tok + plen[rid])
@@ -337,6 +395,19 @@ def simulate(table: CostTable, trace: RequestTrace,
                     max_step = dt
                 energy += pen + (sp + xfer) * dram_bpc * spill_e_per_bit
                 ttft[rid] = t - arr[rid]
+                if bd:
+                    q = t0 - arr[rid]
+                    q_secs += q
+                    c_pre += pc / clock
+                    c_spill += sp / clock
+                    c_ref += xfer / clock
+                    e_pre += pen
+                    e_spill += sp * dram_bpc * spill_e_per_bit
+                    e_ref += xfer * dram_bpc * spill_e_per_bit
+                    ttft_parts[rid] = (q, pc / clock, 0.0, 0.0,
+                                       sp / clock, xfer / clock)
+                    dec_mark[rid] = (c_pre, c_dec, c_draft, c_spill,
+                                     c_ref)
                 kv_tok += plen[rid]
                 active += 1
                 if spec_on:
@@ -367,6 +438,7 @@ def simulate(table: CostTable, trace: RequestTrace,
             pre_cyc = entry[2]
             dec_cyc = 0.0
             en = entry[3]
+            den_val = 0.0
             util_macs = 0.0
             if active:
                 # decode lattice lookup sees only the DECODING slots' KV
@@ -374,7 +446,8 @@ def simulate(table: CostTable, trace: RequestTrace,
                 # occupies the buffer but no running slot attends it)
                 kv_dec = (kv_tok - kv_pre) / active
                 dec_cyc = dstep(active, kv_dec)
-                en += denergy(active, kv_dec)
+                den_val = denergy(active, kv_dec)
+                en += den_val
                 util_macs = dmacs(active, kv_dec)
                 n_lookups += 3
             sp = spill_cycles(kv_tok + entry[4])
@@ -397,6 +470,15 @@ def simulate(table: CostTable, trace: RequestTrace,
             else:
                 prefill_secs += sp / clock
             energy += en + sp * dram_bpc * spill_e_per_bit
+            if bd:
+                xf = entry[6]
+                c_pre += (pre_cyc - xf) / clock
+                c_ref += xf / clock
+                c_dec += dec_cyc / clock
+                c_spill += sp / clock
+                e_pre += entry[3]
+                e_dec += den_val
+                e_spill += sp * dram_bpc * spill_e_per_bit
             kv_tok += entry[4]
             kv_pre += entry[4]
             entry[5] += entry[4]
@@ -413,6 +495,10 @@ def simulate(table: CostTable, trace: RequestTrace,
                     kv_tok -= plen[rid] + olen[rid]
                     tokens_out += olen[rid]
                     tpot[rid] = (t - arr[rid] - ttft[rid]) / olen[rid]
+                    if bd:
+                        tpot_parts[rid] = (c_pre, c_dec, c_draft,
+                                           c_spill, c_ref)
+                        tpot_parts[rid] -= dec_mark[rid]
                     if emit:
                         tr.async_end("request", rtrack, rid, t,
                                      tokens=olen[rid])
@@ -421,6 +507,11 @@ def simulate(table: CostTable, trace: RequestTrace,
                 backlog.popleft()
                 rid = entry[0]
                 ttft[rid] = t - arr[rid]
+                if bd:
+                    cums = (c_pre, c_dec, c_draft, c_spill, c_ref)
+                    ttft_parts[rid, 1:] = cums
+                    ttft_parts[rid, 1:] -= adm_mark[rid]
+                    dec_mark[rid] = cums
                 if emit:
                     tr.async_instant("first_token", rtrack, rid, t)
                 # pro-rata chunking can leave float residue on kv_tok;
@@ -458,10 +549,12 @@ def simulate(table: CostTable, trace: RequestTrace,
             if spec_on:
                 kv_mid = (kv_tok / active
                           + (k - 1) * 0.5 * (rate_sum / active))
-                cyc = (spec_k * draft(active, kv_mid)
-                       + verify(active, kv_mid))
-                en_step = (spec_k * draft_e(active, kv_mid)
-                           + verify_e(active, kv_mid))
+                dcyc = draft(active, kv_mid)
+                vcyc = verify(active, kv_mid)
+                cyc = spec_k * dcyc + vcyc
+                de_val = draft_e(active, kv_mid)
+                ve_val = verify_e(active, kv_mid)
+                en_step = spec_k * de_val + ve_val
                 macs_step = (spec_k * draft_m(active, kv_mid)
                              + verify_m(active, kv_mid))
                 sp = spill_cycles(kv_tok + k * rate_sum * 0.5)
@@ -485,6 +578,17 @@ def simulate(table: CostTable, trace: RequestTrace,
                 n_spill += k
                 spill_cyc += k * sp
             energy += k * (en_step + sp * dram_bpc * spill_e_per_bit)
+            if bd:
+                if spec_on:
+                    c_draft += k * spec_k * dcyc / clock
+                    c_dec += k * vcyc / clock
+                    e_draft += k * spec_k * de_val
+                    e_dec += k * ve_val
+                else:
+                    c_dec += k * cyc / clock
+                    e_dec += k * en_step
+                c_spill += k * sp / clock
+                e_spill += k * sp * dram_bpc * spill_e_per_bit
             nstep += k
             kv_tok += kv_add
             if dt / k > max_step:
@@ -505,6 +609,10 @@ def simulate(table: CostTable, trace: RequestTrace,
                     accepted_tokens += olen[rid] - rounds[rid]
                 tokens_out += olen[rid]
                 tpot[rid] = (t - arr[rid] - ttft[rid]) / olen[rid]
+                if bd:
+                    tpot_parts[rid] = (c_pre, c_dec, c_draft, c_spill,
+                                       c_ref)
+                    tpot_parts[rid] -= dec_mark[rid]
                 if emit:
                     tr.async_end("request", rtrack, rid, t,
                                  tokens=olen[rid])
@@ -524,6 +632,35 @@ def simulate(table: CostTable, trace: RequestTrace,
         counters["sim.draft_steps"] = draft_steps
         counters["sim.accepted_tokens"] = accepted_tokens
     _obs_metrics().add_many(counters)
+    breakdown = None
+    if bd:
+        from repro.obs.attribution import CostBreakdown
+        # time axis: total busy seconds (prefill + decode, spill/refetch
+        # stalls included — exactly the default accounting) plus the
+        # admission-queue seconds, so "where did the time go" covers the
+        # full request experience, not only the engine-busy share.
+        breakdown = CostBreakdown(
+            total_cycles=prefill_secs + decode_secs + q_secs,
+            total_energy=energy,
+            cycles={"compute": c_pre + c_dec, "queueing": q_secs,
+                    "dram_spill": c_spill, "kv_refetch": c_ref,
+                    "draft_overhead": c_draft},
+            energy={"compute": e_pre + e_dec, "dram_spill": e_spill,
+                    "kv_refetch": e_ref, "draft_overhead": e_draft},
+            label=f"{table.arch}:{table.h}x{table.w}",
+            meta={"time_unit": "s", "policy": cfg.policy,
+                  "prefill_s": c_pre, "decode_s": c_dec})
+        # per-request decompositions -> registry histograms (TPOT parts
+        # normalized per output token, matching tpot_s semantics)
+        reg = _obs_metrics()
+        done = ~np.isnan(ttft)
+        for j, pname in enumerate(TTFT_PARTS):
+            reg.hist(f"sim.ttft.{pname}_s").observe_many(
+                ttft_parts[done, j])
+        ol = np.maximum(np.asarray(olen, np.float64), 1.0)[done]
+        for j, pname in enumerate(TPOT_PARTS):
+            reg.hist(f"sim.tpot.{pname}_s").observe_many(
+                tpot_parts[done, j] / ol)
     return SimResult(
         n=n, arch=table.arch, h=table.h, w=table.w, policy=cfg.policy,
         slots=slots, ttft_s=ttft, tpot_s=tpot, sim_seconds=t,
@@ -534,4 +671,7 @@ def simulate(table: CostTable, trace: RequestTrace,
         max_step_seconds=max_step, energy_eq1=energy,
         cache_hits=cache_hits, cache_evictions=cache_evictions,
         draft_steps=draft_steps, accepted_tokens=accepted_tokens,
+        breakdown=breakdown,
+        ttft_parts=ttft_parts if bd else None,
+        tpot_parts=tpot_parts if bd else None,
         timeline=np.asarray(timeline, np.float64).reshape(-1, 3))
