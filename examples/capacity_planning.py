@@ -14,12 +14,18 @@ continuous batching — and an SLO. This walkthrough:
      arrival mix (Fig. 5's normalization, traffic-weighted).
 
     PYTHONPATH=src python examples/capacity_planning.py
+
+REPRO_SMOKE=1 shrinks the replay/probe sizes for the CI smoke job.
 """
+import os
+
 import numpy as np
 
 from repro.core.dse import robust_traffic_config, slo_capacity_sweep
 from repro.traffic import (SLO, SimConfig, TrafficModel, build_cost_tables,
                            simulate, summarize)
+
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
 
 ARCHS = ("h2o-danube-3-4b", "yi-9b", "xlstm-125m")
 HW = ((64, 64), (128, 128), (256, 256), (64, 256), (256, 64))
@@ -37,7 +43,7 @@ def main():
                            output_median=64)
     sim = SimConfig(slots=16)
     res = simulate(tables.table("h2o-danube-3-4b", 128, 128),
-                   traffic.sample(20_000, seed=0), sim)
+                   traffic.sample(2_000 if SMOKE else 20_000, seed=0), sim)
     slo = SLO(ttft_s=2.0, tpot_s=0.15)
     s = summarize(res, slo)
     print(f"\nh2o-danube @128x128, 1 req/s Poisson, 20k requests "
@@ -58,7 +64,8 @@ def main():
                               output_median=128, arrival="mmpp"),
     }
     sweep = slo_capacity_sweep(mix, slo, archs=ARCHS, hw=HW, sim=sim,
-                               n_requests=800, tables=tables)
+                               n_requests=200 if SMOKE else 800,
+                               tables=tables)
     print(f"\nmax sustainable QPS under p99 TTFT<={slo.ttft_s}s / "
           f"TPOT<={slo.tpot_s}s:")
     hdr = " ".join(f"{h}x{w}".rjust(9) for h, w in HW)

@@ -10,7 +10,10 @@
    decide.
 
     PYTHONPATH=src python examples/device_search.py
+
+REPRO_SMOKE=1 shrinks population/generations/probe sizes for CI.
 """
+import os
 import time
 
 import numpy as np
@@ -21,6 +24,9 @@ from repro.core.search import nsga2_device, refine_design_point
 from repro.core.systolic import analyze_network
 from repro.traffic import SLO, TrafficModel, build_cost_tables
 
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+POP, GENS = (16, 6) if SMOKE else (48, 25)
+
 
 def batched_capacity_sweep():
     print("=== 1. lockstep batched capacity bisection ===")
@@ -29,7 +35,8 @@ def batched_capacity_sweep():
     tables = build_cost_tables(archs=archs, hw=hw, backend="numpy")
     tm = TrafficModel()
     slo = SLO(ttft_s=2.0, tpot_s=0.1)
-    kw = dict(archs=archs, hw=hw, n_requests=600, seed=0, tables=tables)
+    kw = dict(archs=archs, hw=hw, n_requests=200 if SMOKE else 600,
+              seed=0, tables=tables)
     t0 = time.perf_counter()
     bat = slo_capacity_sweep(tm, slo, search="batched", **kw)
     t_b = time.perf_counter() - t0
@@ -47,8 +54,9 @@ def batched_capacity_sweep():
 def warm_started_nsga2():
     print("\n=== 2. warm-started NSGA-2 (jnp device == numpy oracle) ===")
     wls = get_workloads("alexnet")
-    P0, F0 = pareto_nsga2(wls, pop=48, gens=25, seed=0)
-    Pw, Fw = pareto_nsga2(wls, pop=48, gens=25, seed=0, warm_start="grid")
+    P0, F0 = pareto_nsga2(wls, pop=POP, gens=GENS, seed=0)
+    Pw, Fw = pareto_nsga2(wls, pop=POP, gens=GENS, seed=0,
+                          warm_start="grid")
     dominated = all(((Fw <= f).all(1)).any() for f in F0)
     print(f"  cold frontier {len(P0)} pts; warm (grid-seeded) {len(Pw)} pts"
           f"; warm dominates-or-matches cold: {dominated}")
@@ -62,8 +70,8 @@ def warm_started_nsga2():
         return np.stack([np.asarray(m.energy), np.asarray(m.cycles)], 1)
 
     bounds = ((16, 256), (16, 256))
-    Pj, Fj = nsga2_device(eval_fn, bounds, pop=48, gens=25, seed=0)
-    Pn, Fn = nsga2_device(eval_fn, bounds, pop=48, gens=25, seed=0,
+    Pj, Fj = nsga2_device(eval_fn, bounds, pop=POP, gens=GENS, seed=0)
+    Pn, Fn = nsga2_device(eval_fn, bounds, pop=POP, gens=GENS, seed=0,
                           backend="numpy")
     print(f"  device engine frontier ({len(Pj)} pts) matches its numpy "
           f"oracle bitwise: "
@@ -80,7 +88,7 @@ def refine_fig5_winner():
 
     # 3a. the winner is a genuine optimum: the refiner confirms it
     r = refine_design_point(models, winner, objectives=("energy",),
-                            steps=48)
+                            steps=12 if SMOKE else 48)
     tag = "improved" if r["improved"] else "confirmed (already optimal)"
     print(f"  refine winner  : ({r['seed'][0]},{r['seed'][1]}) -> "
           f"({r['h']},{r['w']}) — {tag}")
@@ -88,7 +96,8 @@ def refine_fig5_winner():
     # 3b. perturb it off-grid-optimum: the gradient pulls it back toward
     # the paper's tall-narrow energy regime
     bad = (winner[0] - 16, winner[1] + 8)
-    r = refine_design_point(models, bad, objectives=("energy",), steps=48)
+    r = refine_design_point(models, bad, objectives=("energy",),
+                            steps=12 if SMOKE else 48)
     tag = "improved" if r["improved"] else "confirmed"
     print(f"  refine perturbed: ({r['seed'][0]},{r['seed'][1]}) -> "
           f"({r['h']},{r['w']}) — {tag}")

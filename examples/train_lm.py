@@ -3,11 +3,17 @@ the synthetic structured corpus, with checkpoint/restart and straggler
 monitoring — the full production loop at laptop scale.
 
     PYTHONPATH=src python examples/train_lm.py [--steps 150]
+
+REPRO_SMOKE=1 shrinks the model and step count to a seconds-long CI
+smoke run (same code path, same loop, tiny shapes).
 """
 import argparse
 import dataclasses
+import os
 
 import jax
+
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
 
 from repro.configs.base import ShapeConfig, get_config, reduced
 from repro.data.pipeline import DataConfig, TokenPipeline
@@ -19,23 +25,33 @@ from repro.training.train_loop import LoopConfig, run
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--steps", type=int, default=8 if SMOKE else 150)
     ap.add_argument("--arch", default="yi-9b")
     ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
     args = ap.parse_args()
 
-    # ~100M-param same-family config (yi/llama-style)
-    cfg = reduced(get_config(args.arch),
-                  num_layers=8, d_model=512, num_heads=8, num_kv_heads=4,
-                  d_ff=1536, vocab_size=32000, head_dim=64, attn_chunk=128)
+    # ~100M-param same-family config (yi/llama-style); a few-M-param toy
+    # with the same topology under REPRO_SMOKE
+    if SMOKE:
+        cfg = reduced(get_config(args.arch),
+                      num_layers=2, d_model=256, num_heads=4,
+                      num_kv_heads=2, d_ff=512, vocab_size=8000,
+                      head_dim=64, attn_chunk=64)
+    else:
+        cfg = reduced(get_config(args.arch),
+                      num_layers=8, d_model=512, num_heads=8,
+                      num_kv_heads=4, d_ff=1536, vocab_size=32000,
+                      head_dim=64, attn_chunk=128)
     bundle = build_model(cfg)
     print(f"arch={cfg.name}  params={bundle.param_count()/1e6:.1f}M")
 
-    ocfg = OPT.OptConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    ocfg = OPT.OptConfig(lr=1e-3, warmup_steps=4 if SMOKE else 20,
+                         total_steps=args.steps)
     state = init_train_state(bundle, ocfg, jax.random.key(0))
     step = jax.jit(make_train_step(bundle, ocfg, None), donate_argnums=(0,))
 
-    shape = ShapeConfig("train", seq_len=256, global_batch=4, kind="train")
+    shape = ShapeConfig("train", seq_len=128 if SMOKE else 256,
+                        global_batch=2 if SMOKE else 4, kind="train")
     data = TokenPipeline(DataConfig(seed=0), cfg, shape)
     lcfg = LoopConfig(total_steps=args.steps, ckpt_every=50,
                       ckpt_dir=args.ckpt)

@@ -626,11 +626,60 @@ def _kv_scenario(per_arch: Dict, sim, cache_hit, spec_decode):
     return per_arch, sim, kv
 
 
+def _windowed_slo_cfg(windows, slo):
+    """Fill a WindowConfig's SLO targets from the sweep's SLO when the
+    caller left them unset (the common case: one source of truth)."""
+    if windows.slo_ttft_s is None:
+        return dataclasses.replace(windows, slo_ttft_s=slo.ttft_s,
+                                   slo_tpot_s=slo.tpot_s)
+    return windows
+
+
+def _annotate_windowed(qps, summaries, wcfg, monitor, replay):
+    """Burn-rate-aware capacity annotation: ONE windowed replay at each
+    point's bisected capacity (`replay(a, c, qps, wcfg)` returns a result
+    carrying `.windowed`), scored by `worst_window_goodput` and an
+    `SLOMonitor`. The flag this exists for is `peak_burn_flagged`: the
+    replay meets the day-average SLO objective (whole-run bad fraction
+    within the monitor's budget) yet FIRES a burn-rate alert — a
+    composition that looks fine on the mean and falls over at peak.
+    Points bisected to zero get `"windowed": None`."""
+    from repro.obs.windowed import SLOMonitor, worst_window_goodput
+    mon = SLOMonitor() if monitor is None else monitor
+    A, C = qps.shape
+    for a in range(A):
+        for c in range(C):
+            q = float(qps[a, c])
+            if q <= 0.0:
+                summaries[a][c]["windowed"] = None
+                continue
+            s = replay(a, c, q, wcfg).windowed
+            m = mon.evaluate(s)
+            done = float(s.completions.sum())
+            day_bad = (float(s.completions.sum() - s.good.sum()) / done
+                       if done > 0 else 0.0)
+            day_ok = day_bad <= mon.budget
+            ww = worst_window_goodput(s)
+            summaries[a][c]["windowed"] = {
+                "window_s": s.cfg.window_s,
+                "worst_window_goodput_qps": ww["goodput_qps"],
+                "worst_window_good_frac": ww["good_frac"],
+                "worst_window_t0_s": ww["t0_s"],
+                "burn_alerts_fired": m.fired,
+                "n_alerts": len(m.alerts),
+                "budget_consumed": m.final_budget_consumed,
+                "day_bad_frac": day_bad,
+                "day_average_ok": day_ok,
+                "peak_burn_flagged": day_ok and m.fired,
+            }
+
+
 def slo_capacity_sweep(traffic, slo, archs: Optional[Sequence[str]] = None,
                        hw=None, sim=None, n_requests: int = 1200,
                        seed: int = 0, backend: str = "pallas",
                        tables=None, search: str = "auto",
                        cache_hit=None, spec_decode=None,
+                       windows=None, monitor=None,
                        **model_kw) -> SLOSweepResult:
     """The SLO-aware capacity design space: which (h, w) sustains how much
     traffic for each architecture.
@@ -653,6 +702,14 @@ def slo_capacity_sweep(traffic, slo, archs: Optional[Sequence[str]] = None,
     draft/verify speculative decoding (when set, the cost tables are
     built with the extra draft/verify lattices — prebuilt `tables` must
     already carry them).
+
+    `windows` (an `obs.windowed.WindowConfig`; SLO targets default to
+    `slo`'s) adds burn-rate-aware scoring: after the bisection, each
+    point is replayed ONCE at its capacity with windowed telemetry on and
+    its summary gains a `"windowed"` dict — worst-window goodput plus the
+    `SLOMonitor` verdict (`monitor` overrides the default rules/budget),
+    flagging points that pass the day-average SLO but burn budget at
+    peak (`peak_burn_flagged`). The bisection itself is untouched.
     """
     from repro.configs.base import list_archs
     from repro.core.search import batched_max_sustainable_qps
@@ -708,6 +765,19 @@ def slo_capacity_sweep(traffic, slo, archs: Optional[Sequence[str]] = None,
             good[a, c] = summ.get("goodput_qps", 0.0)
             row.append(summ)
         summaries.append(row)
+    if windows is not None:
+        from repro.traffic.sim import simulate
+        wcfg = _windowed_slo_cfg(windows, slo)
+
+        def replay(a, c, q, wc):
+            h, w_ = hw[c]
+            return simulate(
+                tables.table(archs[a], h, w_),
+                per_arch[archs[a]].with_rate(q).sample(n_requests, seed),
+                dataclasses.replace(sim, windows=wc))
+
+        with _tr.span("windowed_score", "dse", lanes=A * C):
+            _annotate_windowed(qps, summaries, wcfg, monitor, replay)
     return SLOSweepResult(archs=archs, hw=np.asarray(hw, np.int64),
                           slo=slo, max_qps=qps, energy_per_token=ept,
                           goodput_qps=good, summaries=summaries)
@@ -1017,6 +1087,7 @@ def fleet_capacity_sweep(traffic, slo, fleets: Sequence[FleetSpec],
                          pe_budget: Optional[int] = None,
                          search: str = "auto",
                          cache_hit=None, spec_decode=None,
+                         windows=None, monitor=None,
                          **model_kw) -> FleetSweepResult:
     """The fleet-composition design space, end to end: every fleet's
     servers are partitioned (DP pipeline splits + tensor splits) over
@@ -1034,7 +1105,10 @@ def fleet_capacity_sweep(traffic, slo, fleets: Sequence[FleetSpec],
     engine exactly as in `slo_capacity_sweep` ("auto"/"batched": one
     lockstep bisection over every (arch, fleet) lane with the per-server
     replays packed into one multi-lane engine; bit-identical to
-    "sequential")."""
+    "sequential"). `windows` / `monitor` add the same burn-rate-aware
+    post-bisection scoring as `slo_capacity_sweep` — one windowed fleet
+    replay per point at its capacity, summaries annotated with
+    worst-window goodput and the `peak_burn_flagged` verdict."""
     from repro.configs.base import list_archs
     from repro.core.search import batched_fleet_max_sustainable_qps
     from repro.fleet.interconnect import DEFAULT_LINK
@@ -1137,6 +1211,22 @@ def fleet_capacity_sweep(traffic, slo, fleets: Sequence[FleetSpec],
             prow.append(resolved[a][f][1])
         summaries.append(row)
         plans.append(prow)
+    if windows is not None:
+        from repro.fleet.sim import simulate_fleet
+        wcfg = _windowed_slo_cfg(windows, slo)
+
+        def replay(a, f, q, wc):
+            lane = lane_cfgs[f]
+            lane = dataclasses.replace(
+                lane, server=dataclasses.replace(lane.server, windows=wc))
+            return simulate_fleet(
+                resolved[a][f][0],
+                per_arch[archs[a]].with_rate(q).sample(n_requests, seed,
+                                                       paired=True),
+                lane)
+
+        with _tr.span("windowed_score", "dse", lanes=A * F):
+            _annotate_windowed(qps, summaries, wcfg, monitor, replay)
     return FleetSweepResult(archs=archs, fleets=fleets, slo=slo,
                             max_qps=qps, energy_per_token=ept,
                             goodput_qps=good, summaries=summaries,

@@ -195,9 +195,12 @@ class _TraceFactory:
 
     def trace(self, tm: TrafficModel, qps: float, n: int, seed: int,
               paired: bool) -> RequestTrace:
-        if tm.arrival != "poisson" or tm.prefix_lens is not None:
-            # prefix-bearing models take the full sampler so the cached
-            # fast path never silently drops the shared-prefix axis
+        if (tm.arrival != "poisson" or tm.prefix_lens is not None
+                or tm.tenant_probs is not None):
+            # prefix-bearing and tenant-bearing models take the full
+            # sampler so the cached fast path never silently drops the
+            # shared-prefix or tenant axis (scheduled arrivals land here
+            # too via the arrival check)
             return tm.with_rate(qps).sample(n, seed, paired=paired)
         key = (dataclasses.replace(tm, rate_qps=1.0), n, seed, paired)
         ent = self._cache.get(key)
@@ -273,6 +276,9 @@ class _ServerBatch:
         if self.cfg.prefix_cache_mib is not None or self.cfg.spec is not None:
             return "scalar"                # KV-reuse / speculative replays
                                            # run the scalar event loop
+        if self.cfg.windows is not None:
+            return "scalar"                # packed engines keep no
+                                           # windowed telemetry
         shapes = {(len(t.slot_lattice), len(t.kv_lattice),
                    len(t.prompt_lattice)) for t in self.tables}
         if len(shapes) != 1:

@@ -137,6 +137,23 @@ class FleetResult:
     # phase-1 prefill compute and link_ship components. Time axis covers
     # busy + queue + link seconds; energy conserves against `energy_eq1`.
     breakdown: Optional[object] = None
+    # windowed telemetry (FleetSimConfig.server.windows; None otherwise):
+    # a fleet-aggregate obs.windowed.WindowedSeries — request accounting
+    # over END-TO-END fleet latencies (disagg: prefill + ship + decode),
+    # engine time-series summed bucket-wise across servers. Per-server
+    # series stay on `per_server[i].windowed` (see `server_windowed`) for
+    # breach localization.
+    windowed: Optional[object] = None
+
+    @property
+    def server_windowed(self) -> Dict[str, object]:
+        """Per-server windowed series keyed by trace-lane name
+        (`server0`/`decode0`...), the input `obs.windowed.localize_breach`
+        expects; empty when windowing is off."""
+        role = "decode" if self.disaggregated else "server"
+        return {f"{role}{i}": r.windowed
+                for i, r in enumerate(self.per_server)
+                if r.windowed is not None}
 
     def latency_histograms(self, lo: float = 1e-3, hi: float = 1e3,
                            buckets_per_decade: int = 4
@@ -273,10 +290,11 @@ def route_requests(trace: RequestTrace, tables: Sequence,
 def _sub_trace(trace: RequestTrace, idx: np.ndarray) -> RequestTrace:
     pid = None if trace.prefix_id is None else trace.prefix_id[idx]
     pfx = None if trace.prefix_len is None else trace.prefix_len[idx]
+    ten = None if trace.tenant_id is None else trace.tenant_id[idx]
     return RequestTrace(arrival_s=trace.arrival_s[idx],
                         prompt_len=trace.prompt_len[idx],
                         output_len=trace.output_len[idx],
-                        prefix_id=pid, prefix_len=pfx)
+                        prefix_id=pid, prefix_len=pfx, tenant_id=ten)
 
 
 def _server_cfg(cfg: FleetSimConfig, role: str, i: int) -> SimConfig:
@@ -374,6 +392,27 @@ def _fleet_breakdown(tables: Sequence, results: List[Optional[SimResult]],
     return agg
 
 
+def _fleet_windowed(cfg: FleetSimConfig, trace: RequestTrace,
+                    ttft: np.ndarray, tpot: np.ndarray,
+                    res: List[SimResult], t_end: float):
+    """Fleet-aggregate windowed series (None when windowing is off):
+    request accounting re-binned from the FLEET-level latency arrays (so
+    disagg TTFTs include prefill + shipping), engine time-series absorbed
+    bucket-wise from the per-server series. Disagg note: phase 1 runs on
+    the host, so the absorbed busy/energy series cover the decode pool;
+    whole-run prefill/link accounting stays on the FleetResult scalars."""
+    wcfg = cfg.server.windows
+    if wcfg is None:
+        return None
+    from repro.obs.windowed import WindowedAggregator
+    agg = WindowedAggregator(wcfg)
+    agg.ingest_requests(trace.arrival_s, ttft, tpot, trace.output_len,
+                        tenant_id=trace.tenant_id)
+    out = agg.finalize(t_end=t_end)
+    out.absorb_timeseries([r.windowed for r in res])
+    return out
+
+
 def _assemble_mixed(fleet: FleetTables, trace: RequestTrace,
                     cfg: FleetSimConfig, parts: List[np.ndarray],
                     results: List[Optional[SimResult]],
@@ -412,6 +451,9 @@ def _assemble_mixed(fleet: FleetTables, trace: RequestTrace,
         accepted_tokens=sum(r.accepted_tokens for r in res),
         breakdown=(_fleet_breakdown(fleet.mixed, results)
                    if cfg.server.breakdown else None),
+        windowed=_fleet_windowed(
+            cfg, trace, ttft, tpot, res,
+            max((r.sim_seconds for r in res), default=0.0)),
         per_server=res)
 
 
@@ -496,7 +538,9 @@ def _disagg_prepare(fleet: FleetTables, trace: RequestTrace,
     order = np.argsort(ready, kind="stable")
     dec_trace = RequestTrace(arrival_s=ready[order],
                              prompt_len=trace.prompt_len[order],
-                             output_len=trace.output_len[order])
+                             output_len=trace.output_len[order],
+                             tenant_id=(None if trace.tenant_id is None
+                                        else trace.tenant_id[order]))
     if dec_tables is None:
         dec_tables = [_DecodeOnlyTable(t) for t in fleet.decode]
     dparts = route_requests(dec_trace, dec_tables, cfg)
@@ -554,6 +598,9 @@ def _assemble_disagg(fleet: FleetTables, trace: RequestTrace,
         breakdown=(_fleet_breakdown(prep["dec_tables"], results, prep=prep,
                                     prefill_tables=fleet.prefill)
                    if cfg.server.breakdown else None),
+        windowed=_fleet_windowed(
+            cfg, trace, ttft, tpot, res,
+            max((r.sim_seconds for r in res), default=0.0)),
         per_server=res)
 
 

@@ -15,7 +15,12 @@ Three pieces, one import surface:
     default path's totals at 1e-9 (`check_conservation`), threaded
     through the closed forms, graph capacity, traffic and fleet sims.
   * `obs.report`             — deterministic markdown/JSON rendering of
-    attributions and DSE winner explanations.
+    attributions, DSE winner explanations, and windowed time slices.
+  * `obs.windowed`           — tumbling/sliding windowed telemetry over a
+    replay (per-window QPS, mergeable latency histograms, utilization,
+    energy/token) plus the SRE-style SLO burn-rate monitor
+    (`SLOMonitor`, multi-window `BurnRateRule`s, pending -> firing ->
+    resolved alerts that land in the Perfetto export).
 
 Typical use::
 
@@ -34,18 +39,33 @@ from repro.obs.export import (histogram_events, to_trace_events, trace_json,
 from repro.obs.metrics import (Histogram, MetricsRegistry, log_histogram,
                                metrics, reset_metrics)
 from repro.obs.report import (attribution_report, report_json, winner_report,
-                              write_report)
+                              windowed_report, write_report)
 from repro.obs.trace import (Tracer, disable_tracing, enable_tracing,
                              set_tracer, tracer)
+from repro.obs.windowed import (AlertEvent, BurnRateRule, MonitorResult,
+                                SLOMonitor, WindowConfig,
+                                WindowedAggregator, WindowedSeries,
+                                default_burn_rules, localize_breach,
+                                worst_window_goodput)
 
 __all__ = [
+    "AlertEvent",
+    "BurnRateRule",
     "COMPONENTS",
     "ConservationError",
     "CostBreakdown",
     "Histogram",
     "MetricsRegistry",
+    "MonitorResult",
+    "SLOMonitor",
     "Tracer",
+    "WindowConfig",
+    "WindowedAggregator",
+    "WindowedSeries",
     "attribution_report",
+    "default_burn_rules",
+    "localize_breach",
+    "worst_window_goodput",
     "disable_tracing",
     "enable_tracing",
     "gemm_breakdown",
@@ -60,6 +80,7 @@ __all__ = [
     "trace_json",
     "tracer",
     "validate_trace",
+    "windowed_report",
     "winner_report",
     "write_report",
 ]

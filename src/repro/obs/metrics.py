@@ -122,8 +122,17 @@ class Histogram:
         self.vmax = max(self.vmax, other.vmax)
         return self
 
-    def quantile(self, q: float) -> float:
-        """Approximate quantile from the bucket CDF (bucket upper edge)."""
+    def quantile(self, q: float, interp: bool = False) -> float:
+        """Approximate quantile from the bucket CDF.
+
+        The default (`interp=False`, unchanged behavior) returns the upper
+        edge of the bucket holding the q-th sample — a conservative bound
+        whose error is the full bucket width. `interp=True` places the
+        quantile linearly WITHIN that bucket by its share of the bucket's
+        mass, shrinking the error well below the bucket ratio on smooth
+        distributions (property-tested against `numpy.percentile`). The
+        open-ended underflow/overflow buckets interpolate between the
+        observed extreme (`vmin`/`vmax`) and the nearest finite edge."""
         if self.n == 0:
             return math.nan
         target = q * self.n
@@ -131,11 +140,23 @@ class Histogram:
         for i, c in enumerate(self.counts):
             acc += c
             if acc >= target and c:
+                if not interp:
+                    if i == 0:
+                        return self.edges[0]
+                    if i >= len(self.edges):
+                        return self.vmax
+                    return self.edges[i]
                 if i == 0:
-                    return self.edges[0]
-                if i >= len(self.edges):
-                    return self.vmax
-                return self.edges[i]
+                    lo_e = min(self.vmin, self.edges[0])
+                    hi_e = self.edges[0]
+                elif i >= len(self.edges):
+                    lo_e = self.edges[-1]
+                    hi_e = max(self.vmax, self.edges[-1])
+                else:
+                    lo_e = self.edges[i - 1]
+                    hi_e = self.edges[i]
+                frac = (target - (acc - c)) / c
+                return lo_e + (hi_e - lo_e) * min(max(frac, 0.0), 1.0)
         return self.vmax
 
     def to_dict(self) -> Dict:
@@ -183,23 +204,43 @@ class MetricsRegistry:
         return self.counters.get(name, default)
 
     # --------------------------------------------------------- histograms --
-    def observe(self, name: str, value: float, lo: float = 1e-3,
-                hi: float = 1e3, buckets_per_decade: int = 4) -> None:
+    def _get_or_create(self, name: str, lo, hi, buckets_per_decade
+                       ) -> Histogram:
+        """Shared observe/hist resolution. Bound arguments left at their
+        `None` defaults mean "whatever the histogram already uses" (or the
+        standard 1e-3..1e3 x 4 when creating); EXPLICIT bounds that
+        conflict with an existing histogram's config raise instead of
+        being silently ignored — a windowed percentile landing in a
+        mis-bucketed histogram would merge garbage."""
         h = self.histograms.get(name)
         if h is None:
             h = self.histograms[name] = Histogram(
-                lo=lo, hi=hi, buckets_per_decade=buckets_per_decade)
-        h.observe(value)
+                lo=1e-3 if lo is None else lo,
+                hi=1e3 if hi is None else hi,
+                buckets_per_decade=(4 if buckets_per_decade is None
+                                    else buckets_per_decade))
+            return h
+        for label, want, have in (("lo", lo, h.lo), ("hi", hi, h.hi),
+                                  ("buckets_per_decade", buckets_per_decade,
+                                   h.buckets_per_decade)):
+            if want is not None and want != have:
+                raise ValueError(
+                    f"histogram {name!r} already exists with "
+                    f"{label}={have}, conflicting with requested "
+                    f"{label}={want}")
+        return h
 
-    def hist(self, name: str, lo: float = 1e-3, hi: float = 1e3,
-             buckets_per_decade: int = 4) -> Histogram:
+    def observe(self, name: str, value: float, lo: Optional[float] = None,
+                hi: Optional[float] = None,
+                buckets_per_decade: Optional[int] = None) -> None:
+        self._get_or_create(name, lo, hi, buckets_per_decade).observe(value)
+
+    def hist(self, name: str, lo: Optional[float] = None,
+             hi: Optional[float] = None,
+             buckets_per_decade: Optional[int] = None) -> Histogram:
         """Get-or-create the named histogram (for bulk `observe_many` —
         the attribution paths observe whole per-request columns at once)."""
-        h = self.histograms.get(name)
-        if h is None:
-            h = self.histograms[name] = Histogram(
-                lo=lo, hi=hi, buckets_per_decade=buckets_per_decade)
-        return h
+        return self._get_or_create(name, lo, hi, buckets_per_decade)
 
     # ---------------------------------------------------- snapshot / delta --
     def snapshot(self) -> Dict[str, float]:

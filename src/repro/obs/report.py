@@ -99,6 +99,53 @@ def winner_report(explanation) -> str:
     return "\n".join(out)
 
 
+def windowed_report(series, monitor=None,
+                    title: str = "Windowed telemetry") -> str:
+    """Time-sliced markdown for an `obs.windowed.WindowedSeries`: one row
+    per window (start time, QPS/goodput, good fraction, p99 latencies,
+    utilization, energy/token, queue depth) plus — when a
+    `MonitorResult` is given — the alert sequence and final error-budget
+    account. Deterministic like every report here: fixed formatting, no
+    timestamps, byte-stable across runs."""
+    out = [f"# {title}", ""]
+    out.append(f"window {series.cfg.window_s:g}s"
+               + (f" sliding {series.cfg.slide_s:g}s"
+                  if series.cfg.slide_s is not None else " tumbling")
+               + f" · {series.n_windows} windows over "
+               f"{series.t_end:.3f}s")
+    out.append("")
+    out.append("| t0_s | qps | goodput | good_frac | ttft_p99_s | "
+               "tpot_p99_s | util | energy/tok | queue |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for row in series.records():
+        out.append(
+            f"| {row['t0_s']:.3f} | {row['qps']:.3f} | "
+            f"{row['goodput_qps']:.3f} | {row['good_frac']:.4f} | "
+            f"{_num(row['ttft_p99_s'])} | {_num(row['tpot_p99_s'])} | "
+            f"{row['utilization']:.4f} | {_num(row['energy_per_token'])} "
+            f"| {row['queue_depth']:.2f} |")
+    out.append("")
+    if monitor is not None:
+        out.append("## SLO burn")
+        out.append("")
+        out.append(f"budget (bad-request fraction): {monitor.budget:g} · "
+                   f"consumed: {monitor.final_budget_consumed:.4f} · "
+                   f"fired: {monitor.fired}")
+        out.append("")
+        if monitor.alerts:
+            out.append("| t_s | rule | state | severity | burn_long | "
+                       "burn_short |")
+            out.append("|---|---|---|---|---|---|")
+            for a in monitor.alerts:
+                out.append(f"| {a.t:.3f} | {a.rule} | {a.state} | "
+                           f"{a.severity} | {a.burn_long:.3f} | "
+                           f"{a.burn_short:.3f} |")
+        else:
+            out.append("no alerts")
+        out.append("")
+    return "\n".join(out)
+
+
 def report_json(obj) -> str:
     """Canonical JSON bytes for a breakdown / explanation / plain dict
     (sorted keys, fixed separators — byte-stable across runs)."""

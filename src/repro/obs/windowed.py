@@ -1,0 +1,771 @@
+"""Windowed streaming telemetry + SRE-style SLO burn-rate monitoring.
+
+Every metric the stack emitted before this module is a whole-replay
+aggregate — exactly the wrong granularity for non-stationary traffic,
+where the question is *when* utilization collapses and *which window*
+burns the SLO budget, not the day-long mean. This module adds the
+time-resolved layer:
+
+  * `WindowConfig` / `WindowedAggregator` — O(events) tumbling/sliding
+    aggregation of a replay into per-window QPS, TTFT/TPOT percentiles
+    (mergeable `Histogram`s whose bucket-wise merge reproduces the
+    whole-run histogram EXACTLY — integer counts, no re-binning), queue
+    depth, slot utilization, energy/token, and the PR 9 attribution
+    component shares;
+  * `SLOMonitor` — multi-window burn-rate rules (`BurnRateRule`, the
+    Google-SRE fast/slow-window pattern), error-budget accounting, and a
+    pending -> firing -> resolved alert state machine whose transitions
+    land in the Perfetto export as instant events next to burn-rate and
+    error-budget counter tracks (`MonitorResult.emit`);
+  * `worst_window_goodput` / `localize_breach` — the DSE-facing scoring
+    hooks: a composition that passes the day-average SLO but burns its
+    budget at peak gets flagged, and a fleet breach gets localized to
+    the server whose windows went bad.
+
+The split of work is deliberate: inside the simulator's hot loop only
+O(1)-per-event boundary *snapshots* of already-maintained cumulative
+counters are taken (`WindowedAggregator.ingest_snapshots`), and all
+per-request binning is vectorized post-hoc from the replay's output
+arrays (`ingest_requests`) — windowing a million-request replay costs a
+few percent, CI-gated. Sliding windows are built from tumbling BUCKETS
+at the slide granularity (`window_s` must be an integer multiple of
+`slide_s`); a tumbling window is the `slide_s is None` special case.
+
+Everything here is deterministic: a seeded replay produces a byte-stable
+window table, alert sequence, and Perfetto export — the golden-fixture
+contract the CI windowed gate pins.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.obs.metrics import Histogram
+
+__all__ = [
+    "AlertEvent", "BurnRateRule", "MonitorResult", "SLOMonitor",
+    "WindowConfig", "WindowedAggregator", "WindowedSeries",
+    "default_burn_rules", "localize_breach", "worst_window_goodput",
+]
+
+# Backstop against accidental million-bucket series (a 1-ms window on an
+# hour-long replay): the aggregator is O(buckets) in memory and in the
+# per-bucket histogram pass, so a runaway bucket count is a config bug.
+MAX_BUCKETS = 200_000
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowConfig:
+    """Windowing parameters of one replay.
+
+    `window_s` is the reporting window; `slide_s` (None => tumbling)
+    slides the window at a finer stride and must divide `window_s`
+    evenly — internally everything is accumulated in tumbling buckets of
+    `bucket_s = slide_s or window_s` and a sliding window is the rolling
+    sum of `buckets_per_window` consecutive buckets, which keeps the
+    aggregation O(events) and the histogram merge exact. `slo_ttft_s` /
+    `slo_tpot_s` (both-or-neither) classify each completed request as
+    good/bad per window — the error-budget currency `SLOMonitor` burns.
+    Histogram bounds default to the exact config `traffic.slo.summarize`
+    uses for its whole-run latency histograms, so the merged-window ==
+    whole-run identity holds against those goldens."""
+    window_s: float = 60.0
+    slide_s: Optional[float] = None
+    hist_lo: float = 1e-3
+    hist_hi: float = 1e3
+    buckets_per_decade: int = 4
+    slo_ttft_s: Optional[float] = None
+    slo_tpot_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.window_s <= 0.0:
+            raise ValueError(f"window_s must be positive, got "
+                             f"{self.window_s}")
+        if self.slide_s is not None:
+            if not 0.0 < self.slide_s <= self.window_s:
+                raise ValueError("slide_s must be in (0, window_s]")
+            m = self.window_s / self.slide_s
+            if abs(m - round(m)) > 1e-9:
+                raise ValueError(
+                    f"window_s={self.window_s} must be an integer "
+                    f"multiple of slide_s={self.slide_s}")
+        if (self.slo_ttft_s is None) != (self.slo_tpot_s is None):
+            raise ValueError("slo_ttft_s and slo_tpot_s come together")
+
+    @property
+    def bucket_s(self) -> float:
+        """Tumbling accumulation granularity (== window_s when not
+        sliding)."""
+        return self.window_s if self.slide_s is None else self.slide_s
+
+    @property
+    def buckets_per_window(self) -> int:
+        return (1 if self.slide_s is None
+                else int(round(self.window_s / self.slide_s)))
+
+
+@dataclasses.dataclass
+class WindowedSeries:
+    """The finalized per-bucket series of one replay (or one fleet).
+
+    All `(B,)` arrays are per tumbling BUCKET (`cfg.bucket_s`); the
+    per-WINDOW views (`records`, `qps`, `quantile`, ...) roll
+    `cfg.buckets_per_window` consecutive buckets. Counter-like arrays
+    (arrivals ... parts) are deltas within the bucket; `*_gauge` arrays
+    are instantaneous values at the bucket's END edge."""
+    cfg: WindowConfig
+    t_end: float
+    edges: np.ndarray               # (B+1,) bucket edges, edges[0] == 0
+    # per-bucket request accounting (requests bin by COMPLETION time;
+    # arrivals by arrival time — each exactly once, which is what makes
+    # the histogram merge reproduce the whole-run histogram exactly)
+    arrivals: np.ndarray            # (B,) int64
+    completions: np.ndarray         # (B,) int64
+    good: np.ndarray                # (B,) int64 (== completions, no SLO)
+    ttft_hists: List[Histogram]
+    tpot_hists: List[Histogram]
+    # per-bucket engine time-series (deltas of cumulative snapshots,
+    # piecewise-linear interpolated onto the exact bucket edges — the
+    # deltas telescope, so their sum equals the whole-run total exactly)
+    busy_s: np.ndarray              # engine-busy seconds (prefill+decode)
+    spill_s: np.ndarray             # DRAM-stall seconds
+    energy: np.ndarray              # Eq. 1-relative energy
+    decode_steps: np.ndarray
+    tokens: np.ndarray              # tokens of requests COMPLETED in bucket
+    util_s: np.ndarray              # MACs-utilization-weighted busy seconds
+    active_slot_s: np.ndarray       # exact decode-slot-seconds integral
+    queue_gauge: np.ndarray         # admission-queue depth at bucket end
+    active_gauge: np.ndarray        # decode-active slots at bucket end
+    kv_gauge: np.ndarray            # resident KV tokens at bucket end
+    # PR 9 attribution component shares (empty without breakdown=True):
+    # component -> (B,) seconds of requests completed in the bucket
+    parts: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    # per-tenant class accounting (empty without the tenant axis):
+    # name -> {"arrivals"|"completions"|"good": (B,) int64}
+    tenants: Dict[str, Dict[str, np.ndarray]] = dataclasses.field(
+        default_factory=dict)
+    slots: int = 0                  # engine slots (fleet: summed)
+
+    # ------------------------------------------------------------ shapes --
+    @property
+    def n_buckets(self) -> int:
+        return len(self.edges) - 1
+
+    @property
+    def n_windows(self) -> int:
+        return max(self.n_buckets - self.cfg.buckets_per_window + 1, 1)
+
+    @property
+    def has_slo(self) -> bool:
+        return self.cfg.slo_ttft_s is not None
+
+    def _roll(self, x: np.ndarray) -> np.ndarray:
+        """(W,) rolling sum of `cfg.buckets_per_window` buckets."""
+        m = min(self.cfg.buckets_per_window, self.n_buckets)
+        c = np.concatenate([[0], np.cumsum(np.asarray(x, np.float64))])
+        return c[m:] - c[:-m]
+
+    @property
+    def window_starts(self) -> np.ndarray:
+        return self.edges[:self.n_windows]
+
+    @property
+    def window_ends(self) -> np.ndarray:
+        m = min(self.cfg.buckets_per_window, self.n_buckets)
+        return self.edges[m:]
+
+    # ---------------------------------------------------- per-window views --
+    def qps(self) -> np.ndarray:
+        return self._roll(self.arrivals) / self.cfg.window_s
+
+    def completed_qps(self) -> np.ndarray:
+        return self._roll(self.completions) / self.cfg.window_s
+
+    def goodput_qps(self) -> np.ndarray:
+        return self._roll(self.good) / self.cfg.window_s
+
+    def good_frac(self) -> np.ndarray:
+        done = self._roll(self.completions)
+        return np.where(done > 0, self._roll(self.good)
+                        / np.maximum(done, 1), 1.0)
+
+    def bad_frac(self) -> np.ndarray:
+        return 1.0 - self.good_frac()
+
+    def energy_per_token(self) -> np.ndarray:
+        return (self._roll(self.energy)
+                / np.maximum(self._roll(self.tokens), 1.0))
+
+    def utilization(self) -> np.ndarray:
+        """Mean MACs utilization over each window (idle time counts as
+        zero — this is the power-gating-relevant duty-cycled number)."""
+        return self._roll(self.util_s) / self.cfg.window_s
+
+    def busy_frac(self) -> np.ndarray:
+        return self._roll(self.busy_s) / self.cfg.window_s
+
+    def slot_utilization(self) -> np.ndarray:
+        """Mean occupied-decode-slot fraction per window (0 when the
+        series carries no slot count)."""
+        if self.slots <= 0:
+            return np.zeros(self.n_windows)
+        return (self._roll(self.active_slot_s)
+                / (self.slots * self.cfg.window_s))
+
+    def mean_queue_depth(self) -> np.ndarray:
+        """Mean of the bucket-end queue gauges inside each window."""
+        m = min(self.cfg.buckets_per_window, self.n_buckets)
+        return self._roll(self.queue_gauge) / m
+
+    def window_hist(self, kind: str, w: int) -> Histogram:
+        """Merged latency histogram of window `w` (`kind` in
+        ttft|tpot)."""
+        hists = {"ttft": self.ttft_hists, "tpot": self.tpot_hists}[kind]
+        m = min(self.cfg.buckets_per_window, self.n_buckets)
+        out = Histogram(lo=self.cfg.hist_lo, hi=self.cfg.hist_hi,
+                        buckets_per_decade=self.cfg.buckets_per_decade)
+        for h in hists[w:w + m]:
+            out.merge(h)
+        return out
+
+    def quantile(self, kind: str, q: float,
+                 interp: bool = True) -> np.ndarray:
+        """(W,) per-window latency quantile (NaN for empty windows)."""
+        return np.asarray([self.window_hist(kind, w).quantile(q,
+                                                              interp=interp)
+                           for w in range(self.n_windows)])
+
+    def merged_histogram(self, kind: str) -> Histogram:
+        """Bucket-wise merge of EVERY bucket's histogram — reproduces the
+        whole-run histogram exactly (each completion lands in exactly one
+        tumbling bucket; merging adds integer counts, no re-binning)."""
+        hists = {"ttft": self.ttft_hists, "tpot": self.tpot_hists}[kind]
+        out = Histogram(lo=self.cfg.hist_lo, hi=self.cfg.hist_hi,
+                        buckets_per_decade=self.cfg.buckets_per_decade)
+        for h in hists:
+            out.merge(h)
+        return out
+
+    # ------------------------------------------------------------- fleet --
+    def absorb_timeseries(self, others: Sequence["WindowedSeries"]) -> None:
+        """Sum other series' engine time-series (busy/spill/energy/steps/
+        tokens/util/active-slot integrals, gauges, attribution parts) into
+        this one bucket-wise — the fleet rollup: request-level accounting
+        stays THIS series' (end-to-end fleet latencies), while the
+        engine-side series aggregate across servers. Requires matching
+        `bucket_s`; shorter series are zero-padded (a drained server
+        simply contributes nothing to later buckets)."""
+        for o in others:
+            if o is None:
+                continue
+            if abs(o.cfg.bucket_s - self.cfg.bucket_s) > 1e-12:
+                raise ValueError(
+                    f"bucket_s mismatch: {o.cfg.bucket_s} vs "
+                    f"{self.cfg.bucket_s}")
+            k = min(o.n_buckets, self.n_buckets)
+            for name in ("busy_s", "spill_s", "energy", "decode_steps",
+                         "tokens", "util_s", "active_slot_s",
+                         "queue_gauge", "active_gauge", "kv_gauge"):
+                getattr(self, name)[:k] += getattr(o, name)[:k]
+            for comp, col in o.parts.items():
+                dst = self.parts.setdefault(
+                    comp, np.zeros(self.n_buckets))
+                dst[:k] += col[:k]
+            self.slots += o.slots
+
+    # ---------------------------------------------------------- reporting --
+    def records(self) -> List[Dict]:
+        """JSON-ready per-window rows (deterministic key order comes from
+        construction order; serialize with sort_keys for byte-stability)."""
+        qps = self.qps()
+        cqps = self.completed_qps()
+        gqps = self.goodput_qps()
+        gfrac = self.good_frac()
+        ept = self.energy_per_token()
+        util = self.utilization()
+        slot_u = self.slot_utilization()
+        busy = self.busy_frac()
+        queue = self.mean_queue_depth()
+        t0 = self.window_starts
+        t1 = self.window_ends
+        arr = self._roll(self.arrivals)
+        done = self._roll(self.completions)
+        good = self._roll(self.good)
+        p_ttft50 = self.quantile("ttft", 0.50)
+        p_ttft99 = self.quantile("ttft", 0.99)
+        p_tpot50 = self.quantile("tpot", 0.50)
+        p_tpot99 = self.quantile("tpot", 0.99)
+        part_rolls = {k: self._roll(v) for k, v in
+                      sorted(self.parts.items())}
+        out = []
+        for w in range(self.n_windows):
+            row = {
+                "t0_s": float(t0[w]), "t1_s": float(t1[w]),
+                "arrivals": int(arr[w]), "completions": int(done[w]),
+                "good": int(good[w]),
+                "qps": float(qps[w]),
+                "completed_qps": float(cqps[w]),
+                "goodput_qps": float(gqps[w]),
+                "good_frac": float(gfrac[w]),
+                "ttft_p50_s": float(p_ttft50[w]),
+                "ttft_p99_s": float(p_ttft99[w]),
+                "tpot_p50_s": float(p_tpot50[w]),
+                "tpot_p99_s": float(p_tpot99[w]),
+                "energy_per_token": float(ept[w]),
+                "utilization": float(util[w]),
+                "slot_utilization": float(slot_u[w]),
+                "busy_frac": float(busy[w]),
+                "queue_depth": float(queue[w]),
+            }
+            if part_rolls:
+                tot = sum(v[w] for v in part_rolls.values())
+                row["parts_share"] = {
+                    k: float(v[w] / tot) if tot > 0 else 0.0
+                    for k, v in part_rolls.items()}
+            out.append(row)
+        return out
+
+    def to_dict(self) -> Dict:
+        """Whole-series JSON-ready dump (bucket arrays + window rows)."""
+        return {
+            "window_s": self.cfg.window_s,
+            "slide_s": self.cfg.slide_s,
+            "bucket_s": self.cfg.bucket_s,
+            "t_end": float(self.t_end),
+            "n_buckets": self.n_buckets,
+            "n_windows": self.n_windows,
+            "slots": int(self.slots),
+            "arrivals": [int(x) for x in self.arrivals],
+            "completions": [int(x) for x in self.completions],
+            "good": [int(x) for x in self.good],
+            "tenants": {name: {k: [int(x) for x in v]
+                               for k, v in sorted(cols.items())}
+                        for name, cols in sorted(self.tenants.items())},
+            "windows": self.records(),
+        }
+
+
+class WindowedAggregator:
+    """Builds a `WindowedSeries` from the two halves of a replay's
+    telemetry: in-loop cumulative snapshots (`ingest_snapshots`, O(1) per
+    bucket crossing inside the simulator) and post-hoc per-request arrays
+    (`ingest_requests`, vectorized). `finalize` bins everything."""
+
+    # column order of the snapshot rows the simulator appends
+    SNAPSHOT_COLS = ("t", "busy_s", "spill_s", "energy", "decode_steps",
+                     "tokens_out", "util_s", "active", "kv_tok", "queue")
+
+    def __init__(self, cfg: WindowConfig):
+        self.cfg = cfg
+        self._snap: Optional[np.ndarray] = None
+        self._t_end = 0.0
+        self._req: Optional[Dict] = None
+        self._slots = 0
+
+    def ingest_snapshots(self, rows: Sequence[Tuple], t_end: float,
+                         slots: int = 0) -> None:
+        """Cumulative-counter snapshots taken at bucket-boundary
+        crossings, one row per crossing in `SNAPSHOT_COLS` order. `t_end`
+        is the replay horizon (the final row's time)."""
+        self._snap = (np.asarray(rows, np.float64).reshape(
+            -1, len(self.SNAPSHOT_COLS)) if rows else
+            np.zeros((0, len(self.SNAPSHOT_COLS))))
+        self._t_end = max(self._t_end, float(t_end))
+        self._slots = int(slots)
+
+    def ingest_requests(self, arrival_s, ttft_s, tpot_s, output_len,
+                        tenant_id=None,
+                        tenant_names: Optional[Sequence[str]] = None,
+                        parts: Optional[Dict[str, np.ndarray]] = None
+                        ) -> None:
+        """Per-request replay outputs: completions bin by completion time
+        (arrival + ttft + tpot * output_len — the simulator's exact
+        accounting identity), arrivals by arrival time. `parts` maps
+        attribution component -> (n,) per-request seconds (TTFT + TPOT
+        decompositions summed); `tenant_id` splits the counts by class."""
+        self._req = {
+            "arrival": np.asarray(arrival_s, np.float64),
+            "ttft": np.asarray(ttft_s, np.float64),
+            "tpot": np.asarray(tpot_s, np.float64),
+            "olen": np.asarray(output_len, np.float64),
+            "tenant": (None if tenant_id is None
+                       else np.asarray(tenant_id, np.int64)),
+            "tenant_names": tenant_names,
+            "parts": parts or {},
+        }
+        self._t_end = max(self._t_end, float(self._req["arrival"][-1])
+                          if len(self._req["arrival"]) else 0.0)
+
+    # ------------------------------------------------------------ binning --
+    def finalize(self, t_end: Optional[float] = None) -> WindowedSeries:
+        cfg = self.cfg
+        b = cfg.bucket_s
+        horizon = float(t_end) if t_end is not None else self._t_end
+        if self._req is not None and len(self._req["arrival"]):
+            r = self._req
+            done = np.isfinite(r["tpot"])
+            t_done = r["arrival"] + r["ttft"] + r["tpot"] * r["olen"]
+            if done.any():
+                horizon = max(horizon, float(np.max(t_done[done])))
+        B = max(int(np.ceil(horizon / b - 1e-9)), 1)
+        if B > MAX_BUCKETS:
+            raise ValueError(
+                f"window config implies {B} buckets over a {horizon:.3g}s "
+                f"replay (> {MAX_BUCKETS}); widen window_s/slide_s")
+        edges = np.arange(B + 1, dtype=np.float64) * b
+        mk_h = lambda: Histogram(lo=cfg.hist_lo, hi=cfg.hist_hi,  # noqa: E731
+                                 buckets_per_decade=cfg.buckets_per_decade)
+        series = WindowedSeries(
+            cfg=cfg, t_end=horizon, edges=edges,
+            arrivals=np.zeros(B, np.int64),
+            completions=np.zeros(B, np.int64),
+            good=np.zeros(B, np.int64),
+            ttft_hists=[mk_h() for _ in range(B)],
+            tpot_hists=[mk_h() for _ in range(B)],
+            busy_s=np.zeros(B), spill_s=np.zeros(B), energy=np.zeros(B),
+            decode_steps=np.zeros(B), tokens=np.zeros(B),
+            util_s=np.zeros(B), active_slot_s=np.zeros(B),
+            queue_gauge=np.zeros(B), active_gauge=np.zeros(B),
+            kv_gauge=np.zeros(B), slots=self._slots)
+        self._bin_requests(series)
+        self._bin_snapshots(series)
+        return series
+
+    def _bin_requests(self, s: WindowedSeries) -> None:
+        if self._req is None or not len(self._req["arrival"]):
+            return
+        r = self._req
+        B = s.n_buckets
+        b = s.cfg.bucket_s
+        bidx_arr = np.clip((r["arrival"] // b).astype(np.int64), 0, B - 1)
+        s.arrivals += np.bincount(bidx_arr, minlength=B)
+        done = np.isfinite(r["tpot"]) & np.isfinite(r["ttft"])
+        if not done.any():
+            return
+        t_done = (r["arrival"] + r["ttft"] + r["tpot"] * r["olen"])[done]
+        bidx = np.clip((t_done // b).astype(np.int64), 0, B - 1)
+        s.completions += np.bincount(bidx, minlength=B)
+        ttft_d = r["ttft"][done]
+        tpot_d = r["tpot"][done]
+        if s.has_slo:
+            ok = ((ttft_d <= s.cfg.slo_ttft_s)
+                  & (tpot_d <= s.cfg.slo_tpot_s))
+            s.good += np.bincount(bidx[ok], minlength=B)
+        else:
+            s.good += np.bincount(bidx, minlength=B)
+        # per-bucket latency histograms: stable-sort by bucket, then one
+        # bulk observe_many per non-empty bucket — O(n log n), and the
+        # per-bucket counts merge back to the whole-run histogram exactly
+        order = np.argsort(bidx, kind="stable")
+        bounds = np.searchsorted(bidx[order], np.arange(B + 1))
+        for k in range(B):
+            lo, hi = bounds[k], bounds[k + 1]
+            if hi > lo:
+                s.ttft_hists[k].observe_many(ttft_d[order[lo:hi]])
+                s.tpot_hists[k].observe_many(tpot_d[order[lo:hi]])
+        s.tokens += np.bincount(bidx, weights=r["olen"][done], minlength=B)
+        for comp, col in sorted(r["parts"].items()):
+            s.parts[comp] = (s.parts.get(comp, np.zeros(B))
+                             + np.bincount(bidx,
+                                           weights=np.asarray(
+                                               col, np.float64)[done],
+                                           minlength=B))
+        # exact decode-slot-seconds: each completed request occupies a
+        # decode slot over [arrival + ttft, t_done); the integral of the
+        # interval-count over [0, x] is sum(min(end, x) - min(start, x)),
+        # evaluated at every bucket edge and differenced
+        starts = np.sort(r["arrival"][done] + ttft_d)
+        ends = np.sort(t_done)
+        cum_s = np.concatenate([[0.0], np.cumsum(starts)])
+        cum_e = np.concatenate([[0.0], np.cumsum(ends)])
+
+        def int_at(x):
+            i = np.searchsorted(ends, x)
+            j = np.searchsorted(starts, x)
+            return ((cum_e[i] + (len(ends) - i) * x)
+                    - (cum_s[j] + (len(starts) - j) * x))
+
+        s.active_slot_s += np.diff(int_at(s.edges))
+        # per-tenant class splits
+        if r["tenant"] is not None:
+            tid = r["tenant"]
+            names = r["tenant_names"]
+            for k in range(int(tid.max()) + 1 if len(tid) else 0):
+                name = (names[k] if names is not None and k < len(names)
+                        else f"t{k}")
+                mk = tid == k
+                cols = {
+                    "arrivals": np.bincount(bidx_arr[mk], minlength=B),
+                    "completions": np.bincount(bidx[tid[done] == k],
+                                               minlength=B),
+                }
+                if s.has_slo:
+                    sel = (tid[done] == k)
+                    okk = sel & ((ttft_d <= s.cfg.slo_ttft_s)
+                                 & (tpot_d <= s.cfg.slo_tpot_s))
+                    cols["good"] = np.bincount(bidx[okk], minlength=B)
+                else:
+                    cols["good"] = cols["completions"].copy()
+                s.tenants[name] = cols
+
+    def _bin_snapshots(self, s: WindowedSeries) -> None:
+        snap = self._snap
+        if snap is None or not len(snap):
+            return
+        # piecewise-linear interpolation of each cumulative column onto
+        # the exact bucket edges; deltas telescope, so per-bucket sums
+        # reproduce the whole-run totals exactly (np.interp clamps past
+        # the last snapshot, charging nothing to trailing empty buckets)
+        t = snap[:, 0]
+        t_full = np.concatenate([[0.0], t])
+        for col, name in ((1, "busy_s"), (2, "spill_s"), (3, "energy"),
+                          (4, "decode_steps"), (6, "util_s")):
+            cum = np.concatenate([[0.0], snap[:, col]])
+            getattr(s, name)[:] += np.diff(np.interp(s.edges, t_full, cum))
+        # gauges: value at each bucket's END edge (step-held between
+        # snapshots — sample-and-hold, like any monitoring scrape)
+        idx = np.clip(np.searchsorted(t, s.edges[1:], side="left"),
+                      0, len(t) - 1)
+        for col, name in ((7, "active_gauge"), (8, "kv_gauge"),
+                          (9, "queue_gauge")):
+            getattr(s, name)[:] += snap[idx, col]
+
+
+# --------------------------------------------------------- SLO monitoring --
+
+@dataclasses.dataclass(frozen=True)
+class BurnRateRule:
+    """One multi-window burn-rate alerting rule (the Google-SRE pattern):
+    fire when the error-budget burn rate exceeds `max_burn_rate` over
+    BOTH the long window (smoothing: a blip cannot page) and the short
+    window (reset: the alert clears promptly once the burn stops).
+    `for_s` holds the rule in `pending` until the condition has been
+    continuously true that long."""
+    name: str
+    long_s: float
+    short_s: float
+    max_burn_rate: float
+    for_s: float = 0.0
+    severity: str = "page"
+
+    def __post_init__(self):
+        if not 0.0 < self.short_s <= self.long_s:
+            raise ValueError("need 0 < short_s <= long_s")
+        if self.max_burn_rate <= 0.0:
+            raise ValueError("max_burn_rate must be positive")
+        if self.for_s < 0.0:
+            raise ValueError("for_s must be >= 0")
+
+
+def default_burn_rules(window_s: float) -> Tuple[BurnRateRule, ...]:
+    """Two-rule fast/slow default scaled to the reporting window (sim
+    horizons are minutes, not the 30-day SRE period): a fast page on
+    burning the budget 8x too fast, a slow ticket at 2x."""
+    return (
+        BurnRateRule("fast_burn", long_s=4.0 * window_s,
+                     short_s=window_s, max_burn_rate=8.0,
+                     severity="page"),
+        BurnRateRule("slow_burn", long_s=12.0 * window_s,
+                     short_s=3.0 * window_s, max_burn_rate=2.0,
+                     severity="ticket"),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class AlertEvent:
+    """One alert-state transition (sim-clock timestamped)."""
+    t: float
+    rule: str
+    state: str                  # pending | firing | resolved
+    burn_long: float
+    burn_short: float
+    severity: str
+
+    def to_dict(self) -> Dict:
+        return {"t": self.t, "rule": self.rule, "state": self.state,
+                "burn_long": self.burn_long,
+                "burn_short": self.burn_short,
+                "severity": self.severity}
+
+
+@dataclasses.dataclass
+class MonitorResult:
+    """Burn-rate series + alert transitions of one monitored series."""
+    rules: Tuple[BurnRateRule, ...]
+    budget: float                       # allowed bad-request fraction
+    t: np.ndarray                       # (B,) bucket END times
+    burn_long: Dict[str, np.ndarray]    # rule name -> (B,)
+    burn_short: Dict[str, np.ndarray]
+    budget_consumed: np.ndarray         # (B,) cumulative budget fraction
+    alerts: Tuple[AlertEvent, ...]
+
+    @property
+    def fired(self) -> bool:
+        return any(a.state == "firing" for a in self.alerts)
+
+    @property
+    def final_budget_consumed(self) -> float:
+        return float(self.budget_consumed[-1]) if len(
+            self.budget_consumed) else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "budget_bad_frac": self.budget,
+            "rules": [dataclasses.asdict(r) for r in self.rules],
+            "fired": self.fired,
+            "final_budget_consumed": self.final_budget_consumed,
+            "alerts": [a.to_dict() for a in self.alerts],
+        }
+
+    def emit(self, tracer, track: str = "slo") -> None:
+        """Write the monitor's story into a Perfetto trace: burn-rate and
+        error-budget counter tracks (one sample per bucket edge) plus one
+        instant event per alert transition — all sim-clock timestamped
+        and `validate_trace`-clean (finite counters, monotone ts)."""
+        if tracer is None or not tracer.enabled:
+            return
+        names = [r.name for r in self.rules]
+        for i, ts in enumerate(self.t):
+            args = {}
+            for nm in names:
+                args[f"{nm}_long"] = float(self.burn_long[nm][i])
+                args[f"{nm}_short"] = float(self.burn_short[nm][i])
+            tracer.counter("burn_rate", track + ".burn", ts=float(ts),
+                           **args)
+            c = float(self.budget_consumed[i])
+            tracer.counter("error_budget", track + ".budget",
+                           ts=float(ts), consumed=c,
+                           remaining=max(1.0 - c, 0.0))
+        for a in self.alerts:
+            tracer.instant(f"slo_alert_{a.state}", track, ts=float(a.t),
+                           rule=a.rule, severity=a.severity,
+                           burn_long=float(a.burn_long),
+                           burn_short=float(a.burn_short))
+
+
+class SLOMonitor:
+    """Error-budget accounting + the alert state machine over a
+    `WindowedSeries` whose config carries SLO targets.
+
+    `budget` is the allowed bad-request fraction (0.01 == a 99% goodput
+    objective); the burn rate over a trailing span is (bad fraction in
+    span) / budget — burn 1.0 spends the budget exactly at the allowed
+    pace, burn 10 exhausts a day's budget in 2.4 hours. Budget
+    consumption is accounted against the replay's total completed
+    requests (the sim-horizon stand-in for the SRE compliance period).
+    Only COMPLETED requests enter the accounting — a request still in
+    flight at the horizon is neither good nor bad yet."""
+
+    def __init__(self, budget: float = 0.01,
+                 rules: Optional[Sequence[BurnRateRule]] = None):
+        if not 0.0 < budget < 1.0:
+            raise ValueError(f"budget must be in (0, 1), got {budget}")
+        self.budget = float(budget)
+        self.rules = None if rules is None else tuple(rules)
+
+    def evaluate(self, series: WindowedSeries) -> MonitorResult:
+        if not series.has_slo:
+            raise ValueError("series was aggregated without SLO targets "
+                             "(WindowConfig.slo_ttft_s/slo_tpot_s): there "
+                             "is no good/bad split to burn a budget on")
+        rules = (self.rules if self.rules is not None
+                 else default_burn_rules(series.cfg.window_s))
+        b = series.cfg.bucket_s
+        tot = series.completions.astype(np.float64)
+        bad = tot - series.good.astype(np.float64)
+        cum_t = np.concatenate([[0.0], np.cumsum(tot)])
+        cum_b = np.concatenate([[0.0], np.cumsum(bad)])
+        B = series.n_buckets
+        t_ends = series.edges[1:]
+
+        def trailing_burn(span_s):
+            k = max(int(round(span_s / b)), 1)
+            i = np.arange(1, B + 1)
+            j = np.maximum(i - k, 0)
+            tw = cum_t[i] - cum_t[j]
+            bw = cum_b[i] - cum_b[j]
+            return np.where(tw > 0, (bw / np.maximum(tw, 1.0))
+                            / self.budget, 0.0)
+
+        burn_long = {r.name: trailing_burn(r.long_s) for r in rules}
+        burn_short = {r.name: trailing_burn(r.short_s) for r in rules}
+        denom = self.budget * float(tot.sum())
+        consumed = (np.cumsum(bad) / denom if denom > 0
+                    else np.zeros(B))
+        alerts: List[AlertEvent] = []
+        for r in rules:
+            bl, bs = burn_long[r.name], burn_short[r.name]
+            state = "inactive"
+            since = 0.0
+            for i in range(B):
+                cond = (bl[i] >= r.max_burn_rate
+                        and bs[i] >= r.max_burn_rate)
+                t_now = float(t_ends[i])
+                if cond and state == "inactive":
+                    state, since = "pending", t_now
+                    alerts.append(AlertEvent(t_now, r.name, "pending",
+                                             float(bl[i]), float(bs[i]),
+                                             r.severity))
+                if cond and state == "pending" \
+                        and t_now - since >= r.for_s:
+                    state = "firing"
+                    alerts.append(AlertEvent(t_now, r.name, "firing",
+                                             float(bl[i]), float(bs[i]),
+                                             r.severity))
+                elif not cond and state == "pending":
+                    state = "inactive"     # never fired: clears silently
+                elif not cond and state == "firing":
+                    state = "inactive"
+                    alerts.append(AlertEvent(t_now, r.name, "resolved",
+                                             float(bl[i]), float(bs[i]),
+                                             r.severity))
+        alerts.sort(key=lambda a: a.t)     # stable: same-t keeps rule order
+        return MonitorResult(rules=rules, budget=self.budget,
+                             t=np.asarray(t_ends, np.float64),
+                             burn_long=burn_long, burn_short=burn_short,
+                             budget_consumed=consumed,
+                             alerts=tuple(alerts))
+
+
+# ------------------------------------------------------- DSE scoring hooks --
+
+def worst_window_goodput(series: WindowedSeries) -> Dict:
+    """The window the capacity answer should be judged by: among windows
+    that saw any arrivals, the one with the LOWEST goodput — a design
+    that passes the day-average SLO but collapses at peak shows up here,
+    not in the whole-run mean. Returns {goodput_qps, good_frac, t0_s}
+    of that window (zeros/NaN when nothing arrived at all)."""
+    arr = series._roll(series.arrivals)
+    live = arr > 0
+    if not live.any():
+        return {"goodput_qps": 0.0, "good_frac": float("nan"),
+                "t0_s": 0.0}
+    g = series.goodput_qps()
+    gf = series.good_frac()
+    t0 = series.window_starts
+    masked = np.where(live, g, np.inf)
+    w = int(np.argmin(masked))
+    return {"goodput_qps": float(g[w]), "good_frac": float(gf[w]),
+            "t0_s": float(t0[w])}
+
+
+def localize_breach(per_series: Dict[str, WindowedSeries], t: float,
+                    span_s: float) -> List[Tuple[str, float]]:
+    """Rank servers/pools by their bad-request fraction over the trailing
+    `span_s` ending at time `t` — breach localization: given a
+    fleet-level alert, name the member whose windows went bad. Returns
+    [(name, bad_frac), ...] sorted worst-first (ties by name)."""
+    out = []
+    for name, s in sorted(per_series.items()):
+        if s is None:
+            continue
+        b = s.cfg.bucket_s
+        i = min(int(np.ceil(t / b - 1e-9)), s.n_buckets)
+        j = max(i - max(int(round(span_s / b)), 1), 0)
+        tot = float(s.completions[j:i].sum())
+        bad = tot - float(s.good[j:i].sum())
+        out.append((name, bad / tot if tot > 0 else 0.0))
+    out.sort(key=lambda kv: (-kv[1], kv[0]))
+    return out

@@ -1,7 +1,9 @@
 """Traffic-driven serving simulation: the time dimension of the DSE.
 
-    workload    arrival processes (Poisson / MMPP bursty / trace replay)
-                + prompt/output length mixes -> seeded RequestTraces
+    workload    arrival processes (Poisson / MMPP bursty / trace replay /
+                scheduled non-stationary RateSchedule curves) + prompt/
+                output length mixes and tenant classes -> seeded
+                RequestTraces
     cost_table  per-step (active-slots x KV-span) decode and prompt-length
                 prefill cost lattices for an arch x (h, w) grid, built in
                 ONE fused dse_eval_batched Pallas dispatch
@@ -23,7 +25,7 @@ from repro.traffic.cost_table import (CostTable, CostTableSet,  # noqa
 from repro.traffic.sim import SimConfig, SimResult, simulate  # noqa
 from repro.traffic.slo import (SLO, max_sustainable_qps, meets_slo,  # noqa
                                saturation_qps, summarize)
-from repro.traffic.workload import (KVReuseConfig, RequestTrace,  # noqa
-                                    TrafficModel, bucket_lengths,
-                                    lognormal_lengths, mmpp_arrivals,
-                                    poisson_arrivals)
+from repro.traffic.workload import (KVReuseConfig, RateSchedule,  # noqa
+                                    RequestTrace, TrafficModel,
+                                    bucket_lengths, lognormal_lengths,
+                                    mmpp_arrivals, poisson_arrivals)

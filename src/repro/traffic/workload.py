@@ -26,8 +26,145 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-ARRIVALS = ("poisson", "mmpp", "trace")
+ARRIVALS = ("poisson", "mmpp", "trace", "scheduled")
 LENGTHS = ("lognormal", "buckets", "const")
+
+
+# ------------------------------------------------- non-stationary schedules --
+
+@dataclasses.dataclass(frozen=True)
+class RateSchedule:
+    """A deterministic time-varying arrival-rate profile λ(t) for
+    ``arrival="scheduled"`` traffic — the non-stationary load the windowed
+    telemetry layer (obs/windowed.py) exists to observe.
+
+    The profile is a PRODUCT of multiplicative shapes on a base rate::
+
+        λ(t) = base_qps · seg(t) · (1 + A·sin(2π(t − φ)/P)) · burst(t)
+
+      * ``segments``  — piecewise multipliers ``(start_s, mult)``: each
+        applies from its start until the next segment's start (1.0 before
+        the first) — staged ramps / step changes;
+      * the sinusoid  — the diurnal curve: amplitude ``A ∈ [0, 1)``
+        around the base (never touching zero, so the profile stays
+        invertible), period ``P`` and phase ``φ`` in seconds;
+      * ``bursts``    — overlays ``(start_s, duration_s, mult)``: flash
+        crowds / incident retries multiplying the rate inside the window.
+
+    Because every shape is multiplicative, ``scaled(f)`` — multiply
+    ``base_qps`` by ``f`` — rescales the WHOLE profile while preserving
+    its shape exactly, which is what `TrafficModel.with_rate` needs for
+    the SLO capacity bisection to probe scheduled traffic honestly
+    (mirroring the recorded-trace time-dilation fix).
+
+    Sampling is by inversion of the integrated rate Λ(t): n unit-mean
+    exponential gaps accumulate to target masses, and a trapezoid
+    integral of λ on a uniform grid (resolution `_grid_dt`, a pure
+    function of the shapes) maps mass back to time — a seeded
+    (schedule, n, seed) triple is byte-stable, the golden-fixture
+    contract."""
+    base_qps: float = 1.0
+    diurnal_amplitude: float = 0.0
+    diurnal_period_s: float = 86400.0
+    diurnal_phase_s: float = 0.0
+    segments: Tuple[Tuple[float, float], ...] = ()
+    bursts: Tuple[Tuple[float, float, float], ...] = ()
+
+    def __post_init__(self):
+        if self.base_qps <= 0.0:
+            raise ValueError(f"base_qps must be positive, got "
+                             f"{self.base_qps}")
+        if not 0.0 <= self.diurnal_amplitude < 1.0:
+            raise ValueError("diurnal_amplitude must be in [0, 1): an "
+                             "amplitude of 1 zeroes the rate and the "
+                             "profile stops being invertible")
+        if self.diurnal_period_s <= 0.0:
+            raise ValueError("diurnal_period_s must be positive")
+        starts = [s for s, _ in self.segments]
+        if starts != sorted(starts):
+            raise ValueError("segments must be sorted by start_s")
+        if any(m <= 0.0 for _, m in self.segments):
+            raise ValueError("segment multipliers must be positive")
+        if any(d <= 0.0 or m <= 0.0 for _, d, m in self.bursts):
+            raise ValueError("burst durations and multipliers must be "
+                             "positive")
+
+    def rate(self, t) -> np.ndarray:
+        """Vectorized instantaneous rate λ(t) in requests/second."""
+        t = np.asarray(t, np.float64)
+        r = np.full(t.shape, self.base_qps)
+        if self.segments:
+            starts = np.asarray([s for s, _ in self.segments], np.float64)
+            mults = np.asarray([1.0] + [m for _, m in self.segments],
+                               np.float64)
+            r = r * mults[np.searchsorted(starts, t, side="right")]
+        if self.diurnal_amplitude:
+            r = r * (1.0 + self.diurnal_amplitude
+                     * np.sin(2.0 * np.pi * (t - self.diurnal_phase_s)
+                              / self.diurnal_period_s))
+        for start, dur, mult in self.bursts:
+            r = r * np.where((t >= start) & (t < start + dur), mult, 1.0)
+        return r
+
+    def scaled(self, factor: float) -> "RateSchedule":
+        """The whole profile multiplied by `factor` — shape-preserving
+        (diurnal curve, segments and bursts keep their relative heights
+        and their ABSOLUTE positions in time)."""
+        if factor <= 0.0:
+            raise ValueError(f"factor must be positive, got {factor}")
+        return dataclasses.replace(self, base_qps=self.base_qps * factor)
+
+    def mean_qps(self, horizon_s: float) -> float:
+        """Trapezoid mean of λ over [0, horizon_s]."""
+        if horizon_s <= 0.0:
+            raise ValueError("horizon_s must be positive")
+        dt = min(self._grid_dt(), horizon_s / 16.0)
+        grid = np.linspace(0.0, horizon_s,
+                           int(np.ceil(horizon_s / dt)) + 1)
+        r = self.rate(grid)
+        return float(np.sum(0.5 * (r[1:] + r[:-1])
+                            * np.diff(grid))) / horizon_s
+
+    def _grid_dt(self) -> float:
+        """Integration-grid resolution: fine enough to resolve the
+        sharpest shape present (a pure function of the schedule, so
+        sampling stays deterministic)."""
+        cand = [self.diurnal_period_s / 16.0]
+        if self.diurnal_amplitude:
+            cand.append(self.diurnal_period_s / 512.0)
+        if self.bursts:
+            cand.append(min(d for _, d, _ in self.bursts) / 16.0)
+        starts = [s for s, _ in self.segments if s > 0.0]
+        if starts:
+            gaps = np.diff([0.0] + starts)
+            pos = gaps[gaps > 0.0]
+            if pos.size:
+                cand.append(float(pos.min()) / 16.0)
+        return max(min(cand), 1e-6)
+
+    def arrivals(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        """(n,) sorted arrival times of a non-homogeneous Poisson process
+        with intensity λ(t), by inversion: unit-rate exponential gaps
+        accumulate to target masses E_k, and t_k = Λ⁻¹(E_k) via linear
+        interpolation of the trapezoid-integrated rate."""
+        if n < 1:
+            raise ValueError(f"n must be >= 1, got {n}")
+        targets = np.cumsum(rng.exponential(1.0, n))
+        dt = self._grid_dt()
+        # open the integration horizon until the integrated mass covers
+        # the last target (doubling; multipliers are positive, so Λ is
+        # strictly increasing and this terminates)
+        t_end = max(float(targets[-1]) / self.base_qps, dt)
+        while True:
+            grid = np.linspace(0.0, t_end,
+                               int(np.ceil(t_end / dt)) + 1)
+            r = self.rate(grid)
+            cum = np.concatenate(
+                [[0.0], np.cumsum(0.5 * (r[1:] + r[:-1]) * np.diff(grid))])
+            if cum[-1] >= targets[-1]:
+                break
+            t_end *= 2.0
+        return np.interp(targets, cum, grid)
 
 
 # ------------------------------------------------------- arrival processes --
@@ -114,16 +251,24 @@ class RequestTrace:
     `prefix_len[i]` counts its tokens, already INCLUDED in
     `prompt_len[i]`. `-1`/`0` mean an unshared prompt. The axis is pure
     annotation — a simulator that ignores it replays the exact same
-    work, which is what keeps the no-reuse goldens byte-identical."""
+    work, which is what keeps the no-reuse goldens byte-identical.
+
+    The optional tenant axis (`tenant_id[i] >= 0` names a priority
+    class) is annotation in the same sense: the engine replays identical
+    work, and the windowed telemetry layer (obs/windowed.py) splits
+    per-window QPS/goodput accounting by class."""
     arrival_s: np.ndarray       # (n,) float64, sorted
     prompt_len: np.ndarray      # (n,) int32, >= 1
     output_len: np.ndarray      # (n,) int32, >= 1 decode steps per request
     prefix_id: Optional[np.ndarray] = None    # (n,) int32, -1 = unshared
     prefix_len: Optional[np.ndarray] = None   # (n,) int32, part of prompt
+    tenant_id: Optional[np.ndarray] = None    # (n,) int32 priority class
 
     def __post_init__(self):
         n = len(self.arrival_s)
         if len(self.prompt_len) != n or len(self.output_len) != n:
+            raise ValueError("trace arrays must share one length")
+        if self.tenant_id is not None and len(self.tenant_id) != n:
             raise ValueError("trace arrays must share one length")
         if n and (np.diff(self.arrival_s) < 0).any():
             raise ValueError("arrival_s must be sorted")
@@ -191,6 +336,18 @@ class TrafficModel:
     # default) disables the axis and changes no draw.
     prefix_lens: Optional[Tuple[int, ...]] = None
     prefix_probs: Optional[Tuple[float, ...]] = None
+    # non-stationary scheduled arrivals (arrival="scheduled"): the
+    # RateSchedule IS the rate — `rate_qps` mirrors `schedule.base_qps`
+    # via with_rate and is otherwise ignored by sample(). None (the
+    # default) leaves every other arrival kind byte-identical.
+    schedule: Optional[RateSchedule] = None
+    # per-tenant priority classes: request i draws class k with
+    # probability tenant_probs[k] from its OWN child stream ([seed, 4] —
+    # disjoint from arrivals/lengths/prefixes, so enabling the axis
+    # changes no other draw). Pure annotation; the windowed telemetry
+    # layer splits accounting by class. Names default to "t0", "t1", ...
+    tenant_probs: Optional[Tuple[float, ...]] = None
+    tenant_names: Optional[Tuple[str, ...]] = None
 
     def with_rate(self, rate_qps: float) -> "TrafficModel":
         """Rescale the arrival process to `rate_qps`. For synthetic
@@ -198,10 +355,21 @@ class TrafficModel:
         traces rescale their timestamps by the rate ratio (time-dilating
         the recording, the standard trace-replay load knob) — leaving
         them untouched would make every rate probe of the SLO bisection
-        replay identical arrivals."""
+        replay identical arrivals. Scheduled traffic rescales its WHOLE
+        profile shape-preservingly (`RateSchedule.scaled`, anchored at
+        `schedule.base_qps`) for the same reason: a probe that changed
+        only `rate_qps` would replay the exact same diurnal arrivals and
+        the capacity bisection would never move."""
         rate_qps = float(rate_qps)
         if rate_qps <= 0.0:
             raise ValueError(f"rate_qps must be positive, got {rate_qps}")
+        if self.arrival == "scheduled" and self.schedule is not None:
+            if rate_qps == self.schedule.base_qps:
+                return dataclasses.replace(self, rate_qps=rate_qps)
+            return dataclasses.replace(
+                self, rate_qps=rate_qps,
+                schedule=self.schedule.scaled(
+                    rate_qps / self.schedule.base_qps))
         if self.arrival == "trace" and self.trace_arrival_s is not None \
                 and rate_qps != self.rate_qps:
             if self.rate_qps <= 0.0:
@@ -292,6 +460,10 @@ class TrafficModel:
             arr = np.asarray(self.trace_arrival_s, np.float64)[:n]
             if len(arr) < n:
                 raise ValueError(f"trace has {len(arr)} arrivals < n={n}")
+        elif self.arrival == "scheduled":
+            if self.schedule is None:
+                raise ValueError("arrival='scheduled' needs a RateSchedule")
+            arr = self.schedule.arrivals(n, rng)
         else:
             raise ValueError(
                 f"unknown arrival {self.arrival!r} (have {ARRIVALS})")
@@ -302,7 +474,8 @@ class TrafficModel:
         return RequestTrace(arrival_s=np.asarray(arr, np.float64),
                             prompt_len=plen,
                             output_len=self._lengths("output", n, rng_o),
-                            prefix_id=pfx_id, prefix_len=pfx_len)
+                            prefix_id=pfx_id, prefix_len=pfx_len,
+                            tenant_id=self._tenants(n, seed))
 
     def _prefixes(self, n: int, seed: int):
         """Seeded shared-prefix assignment, or (None, None) when the axis
@@ -331,6 +504,36 @@ class TrafficModel:
         pfx_len = np.where(shared, np.append(lens, 0)[idx], 0)
         pfx_id = np.where(shared, idx, -1)
         return pfx_id.astype(np.int32), pfx_len.astype(np.int32)
+
+    def _tenants(self, n: int, seed: int) -> Optional[np.ndarray]:
+        """Seeded per-tenant class assignment, or None when the axis is
+        off. Draws from its OWN child stream (`[seed, 4]`, disjoint from
+        every other draw), so attaching tenants changes neither the
+        arrival nor the length nor the prefix streams."""
+        if self.tenant_probs is None:
+            return None
+        probs = np.asarray(self.tenant_probs, np.float64)
+        if probs.ndim != 1 or len(probs) == 0:
+            raise ValueError("tenant_probs must be a non-empty 1-d tuple")
+        if (probs < 0).any() or probs.sum() <= 0:
+            raise ValueError("tenant_probs must be non-negative with "
+                             "positive sum")
+        if self.tenant_names is not None \
+                and len(self.tenant_names) != len(probs):
+            raise ValueError("tenant_names must match tenant_probs")
+        rng = np.random.default_rng([seed, 4])
+        return rng.choice(len(probs), size=n,
+                          p=probs / probs.sum()).astype(np.int32)
+
+    @property
+    def tenant_labels(self) -> Optional[Tuple[str, ...]]:
+        """Display names of the tenant classes ("t0", "t1", ... when
+        `tenant_names` is unset); None when the axis is off."""
+        if self.tenant_probs is None:
+            return None
+        if self.tenant_names is not None:
+            return tuple(self.tenant_names)
+        return tuple(f"t{k}" for k in range(len(self.tenant_probs)))
 
 
 @dataclasses.dataclass(frozen=True)
